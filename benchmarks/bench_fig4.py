@@ -1,0 +1,58 @@
+"""Fig. 4: impact of the Table VI configurations on latency/energy/accuracy.
+
+Reproduces the paper's observations:
+  * Config-2/3 cut latency vs Config-1; cloud's extra benefit is negligible;
+  * comm energy surges for B-AlexNet when exit-2/3 are enabled off-mobile;
+  * exit-1-only slashes both latency and energy (6.56 ms -> ~2 ms class).
+Reports both the expected (phi-weighted, objective 3a) and the worst-case
+(deepest-sample) energy — the paper's 39.4 mJ Config-1 figure is the latter.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import AppRequirements, Config, evaluate_config, paper_profile
+from repro.core.scenarios import TABLE_VI_CONFIGS, paper_scenario
+
+from .common import Row, kv, timed
+
+APPS = {"b-alexnet": "h2", "b-resnet": "h4"}
+
+
+def run() -> List[Row]:
+    nw = paper_scenario()
+    req = AppRequirements(alpha=0.0, delta=1.0)  # evaluation only
+    rows: List[Row] = []
+    for model, app in APPS.items():
+        prof = paper_profile(app)
+        for cname, placement in TABLE_VI_CONFIGS.items():
+            for k in range(prof.n_exits):
+                last = prof.exits[k].block
+                cfg = Config(placement=placement[: last + 1], final_exit=k)
+                ev, us = timed(evaluate_config, nw, prof, req, cfg)
+                # worst-case energy: a single deepest sample (no phi weighting)
+                wc = 0.0
+                for i in range(last + 1):
+                    n = cfg.placement[i]
+                    wc += (nw.power_active[n]
+                           * prof.block_ops_with_exit(i, k) / nw.compute[n])
+                    if i < last and cfg.placement[i + 1] != n:
+                        wc += ((nw.e_tx[n] + nw.e_rx[cfg.placement[i + 1]])
+                               * prof.cut_bits[i])
+                if cfg.placement[0] != nw.source_node:
+                    wc += (nw.e_tx[nw.source_node] + nw.e_rx[cfg.placement[0]]) \
+                        * prof.input_bits
+                rows.append(Row(
+                    f"fig4/{model}/{cname}/exit{k + 1}", us,
+                    kv(latency_ms=ev.latency * 1e3,
+                       energy_mJ=ev.energy * 1e3,
+                       energy_comm_mJ=ev.energy_comm * 1e3,
+                       energy_comp_mJ=ev.energy_comp * 1e3,
+                       worstcase_energy_mJ=wc * 1e3,
+                       accuracy=ev.accuracy)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

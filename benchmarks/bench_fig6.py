@@ -1,0 +1,50 @@
+"""Fig. 6: computation vs communication energy breakdown of MCP/FIN/Opt
+for B-AlexNet as the latency (a)(c) and accuracy (b)(d) constraints vary.
+
+Paper claims validated: FIN's computation energy stays near-optimal even at
+gamma=3; the communication term is the harder one to minimize.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import AppRequirements, paper_profile, solve_fin, solve_mcp, solve_opt
+from repro.core.scenarios import paper_scenario
+
+from .common import Row, kv, timed
+
+
+def run() -> List[Row]:
+    nw = paper_scenario()
+    prof = paper_profile("h2")
+    rows: List[Row] = []
+
+    sweeps = ([("lat", 0.80, d) for d in (2.0, 4.0, 6.0, 8.0, 12.0)]
+              + [("acc", a, 5.0) for a in (0.55, 0.70, 0.78, 0.80, 0.85)])
+    for kind, alpha, delta_ms in sweeps:
+        req = AppRequirements(alpha=alpha, delta=delta_ms * 1e-3)
+        sols = {}
+        us_all = 0.0
+        for name, solver, kwargs in (
+                ("opt", solve_opt, {}),
+                ("fin10", solve_fin, dict(gamma=10)),
+                ("fin3", solve_fin, dict(gamma=3)),
+                ("mcp", solve_mcp, {})):
+            sol, us = timed(solver, nw, prof, req, **kwargs)
+            sols[name] = sol
+            us_all += us
+        d = {}
+        for name, sol in sols.items():
+            if sol.feasible:
+                d[f"{name}_comp_mJ"] = sol.eval.energy_comp * 1e3
+                d[f"{name}_comm_mJ"] = sol.eval.energy_comm * 1e3
+            else:
+                d[f"{name}_comp_mJ"] = float("nan")
+                d[f"{name}_comm_mJ"] = float("nan")
+        rows.append(Row(f"fig6/{kind}/a{alpha}/d{delta_ms}ms", us_all, kv(**d)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -1,0 +1,78 @@
+"""Pallas kernel benches: interpret-mode correctness + timing vs jnp oracle.
+
+On this CPU container the numbers measure the *interpreted* kernel (Python
+loop over grid steps), so wall time is diagnostic only; the `rel_err` and
+tiling metadata are the deliverable.  On TPU, set interpret=False.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.decode_attn.ops import decode_attn
+from repro.kernels.decode_attn.ref import decode_attn_ref
+from repro.kernels.ee_gate.ops import ee_gate
+from repro.kernels.ee_gate.ref import ee_gate_ref
+from repro.kernels.minplus.ops import minplus_vecmat
+from repro.kernels.minplus.ref import minplus_ref
+
+from .common import Row, kv, timed
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    rng = np.random.default_rng(0)
+
+    # minplus: FIN relaxation at multi-app scale (S = N*gamma states)
+    for B, S in ((8, 512), (64, 1024)):
+        dist = jnp.asarray(rng.uniform(0, 10, (B, S)), jnp.float32)
+        W = rng.uniform(0, 5, (S, S)).astype(np.float32)
+        W[rng.uniform(size=W.shape) < 0.5] = np.inf
+        W = jnp.asarray(W)
+        got, us_k = timed(lambda: jax.block_until_ready(
+            minplus_vecmat(dist, W)), repeats=2)
+        want, us_r = timed(lambda: jax.block_until_ready(
+            minplus_ref(dist, W)), repeats=2)
+        m = np.isfinite(np.asarray(want))
+        err = float(np.abs(np.asarray(got)[m] - np.asarray(want)[m]).max())
+        rows.append(Row(f"kernels/minplus/B{B}xS{S}", us_k,
+                        kv(ref_us=us_r, max_abs_err=err,
+                           block="8x128x128")))
+
+    # ee_gate: decode-batch gating at large vocab
+    for B, V in ((64, 50304), (128, 151936)):
+        logits = jnp.asarray(rng.normal(0, 4, (B, V)), jnp.float32)
+        (conf, arg), us_k = timed(lambda: jax.block_until_ready(
+            ee_gate(logits)), repeats=2)
+        (cr, ar), us_r = timed(lambda: jax.block_until_ready(
+            ee_gate_ref(logits)), repeats=2)
+        err = float(np.abs(np.asarray(conf) - np.asarray(cr)).max())
+        agree = float((np.asarray(arg) == np.asarray(ar)).mean())
+        rows.append(Row(f"kernels/ee_gate/B{B}xV{V}", us_k,
+                        kv(ref_us=us_r, conf_err=err, argmax_agree=agree,
+                           block="8x2048")))
+
+    # decode_attn: flash-decode over a 32k cache (GQA 6:1)
+    for B, H, KVh, D, T in ((4, 32, 8, 128, 4096),):
+        q = jnp.asarray(rng.normal(size=(B, H, D)), jnp.bfloat16)
+        k = jnp.asarray(rng.normal(size=(B, T, KVh, D)), jnp.bfloat16)
+        v = jnp.asarray(rng.normal(size=(B, T, KVh, D)), jnp.bfloat16)
+        cpos = jnp.arange(T, dtype=jnp.int32)
+        pos = jnp.int32(T - 1)
+        got, us_k = timed(lambda: jax.block_until_ready(
+            decode_attn(q, k, v, cpos, pos)), repeats=2)
+        want, us_r = timed(lambda: jax.block_until_ready(
+            decode_attn_ref(q, k, v, cpos, pos)), repeats=2)
+        err = float(np.abs(np.asarray(got, np.float32)
+                           - np.asarray(want, np.float32)).max())
+        rows.append(Row(f"kernels/decode_attn/B{B}H{H}T{T}", us_k,
+                        kv(ref_us=us_r, max_abs_err=err, block_t=512)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -1,0 +1,43 @@
+"""Roofline table from the dry-run artifacts (experiments/dryrun/*.json).
+
+Emits one row per completed (arch x shape x mesh) cell with the three
+roofline terms, the bottleneck, the MODEL_FLOPS/analytic ratio and the
+per-chip memory.  Cells are produced by ``repro.launch.dryrun`` — this bench
+only reads; missing cells are reported as pending rather than failing.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import List
+
+from .common import Row, kv
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    if not DRYRUN_DIR.exists():
+        return [Row("roofline/pending", 0.0,
+                    kv(note="run repro.launch.dryrun first"))]
+    for path in sorted(DRYRUN_DIR.glob("*.json")):
+        d = json.loads(path.read_text())
+        name = f"roofline/{d['arch']}/{d['shape']}/{d['mesh']}"
+        if d.get("tag"):
+            name += f"/{d['tag']}"
+        rows.append(Row(
+            name, d.get("compile_s", 0.0) * 1e6,
+            kv(t_compute_s=d["t_compute"], t_memory_s=d["t_memory"],
+               t_collective_s=d["t_collective"], bottleneck=d["bottleneck"],
+               useful_flops_ratio=d["useful_flops_ratio"],
+               mem_gb=d["memory_per_chip_gb"],
+               wire_gb=d["wire_bytes_per_chip"] / 1e9)))
+    if not rows:
+        rows.append(Row("roofline/pending", 0.0, kv(note="no cells yet")))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -1,0 +1,73 @@
+"""Table VII: solver execution time for MCP and FIN (gamma=3, 10), per model.
+
+Paper reference values (ms, ThinkPad P1 i7): B-AlexNet 0.591/0.892/2.450,
+B-ResNet 0.545/0.657/1.158, B-LeNet 0.243/0.461/0.816 for MCP/FIN3/FIN10.
+Claims validated: FIN(3) < 2x MCP, FIN(10) < 5x MCP, FIN < 2.5 ms.
+
+Also exercises the large-instance scaling path (many nodes, large gamma)
+through the jnp (min,+) backend — the workload the Pallas ``minplus`` kernel
+targets on TPU.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import (AppRequirements, fin_all_exit_costs, make_network,
+                        paper_profile, solve_fin, solve_mcp, synthetic_profile)
+from repro.core.scenarios import paper_scenario
+
+from .common import Row, kv
+
+MODELS = {"b-alexnet": "h2", "b-resnet": "h4", "b-lenet": "h6"}
+
+
+def _avg_time(fn, repeats=20):
+    # warmup
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - t0) / repeats
+
+
+def run() -> List[Row]:
+    nw = paper_scenario()
+    rows: List[Row] = []
+    for model, app in MODELS.items():
+        prof = paper_profile(app)
+        alpha = min(e.accuracy for e in prof.exits)
+        req = AppRequirements(alpha=alpha, delta=8e-3)
+        t_mcp = _avg_time(lambda: solve_mcp(nw, prof, req))
+        t_fin3 = _avg_time(lambda: solve_fin(nw, prof, req, gamma=3))
+        t_fin10 = _avg_time(lambda: solve_fin(nw, prof, req, gamma=10))
+        rows.append(Row(
+            f"table7/{model}", t_fin10 * 1e6,
+            kv(mcp_ms=t_mcp * 1e3, fin3_ms=t_fin3 * 1e3,
+               fin10_ms=t_fin10 * 1e3,
+               fin10_over_mcp=t_fin10 / t_mcp)))
+
+    # scaling study: bigger networks / gamma, numpy DP vs jnp min-plus backend
+    for n_extra, gamma in ((13, 32), (29, 64)):
+        tiers = ("mobile",) + ("edge",) * n_extra + ("cloud",)
+        big = make_network(tiers, compute_frac=[1e-3] * (n_extra + 2))
+        prof = synthetic_profile(12, 4, seed=0, ops_scale=5e7)
+        req = AppRequirements(alpha=0.0, delta=20e-3)
+        t_np = _avg_time(
+            lambda: fin_all_exit_costs(big, prof, req, gamma=gamma,
+                                       backend="numpy"), repeats=3)
+        t_jnp = _avg_time(
+            lambda: fin_all_exit_costs(big, prof, req, gamma=gamma,
+                                       backend="jnp"), repeats=3)
+        states = big.n_nodes * (gamma + 1)
+        rows.append(Row(
+            f"table7-scale/N{big.n_nodes}/g{gamma}", t_np * 1e6,
+            kv(states=states, numpy_ms=t_np * 1e3, jnp_ms=t_jnp * 1e3)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -1,0 +1,65 @@
+"""End-to-end driver: train a ~100M-parameter early-exit LM for a few hundred
+steps on the synthetic k-gram stream, with checkpoint/restart.
+
+This is the qwen3 family at width 512 / 12 layers (~100M params with the
+8k-token vocab) and two early exits trained jointly (BranchyNet loss) — the
+paper's dynamic-DNN training substrate at LM scale.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import argparse
+import dataclasses
+import sys
+
+import numpy as np
+
+from repro.configs import get
+from repro.launch.flops import param_count
+from repro.runtime.train_loop import train
+
+
+def build_config():
+    base = get("qwen3-4b")
+    return dataclasses.replace(
+        base,
+        name="qwen3-100m",
+        n_layers=12,
+        d_model=512,
+        n_heads=8,
+        n_kv_heads=4,
+        head_dim=64,
+        d_ff=2048,
+        vocab_size=8192,
+        vocab_pad_multiple=256,
+        exit_layers=(4, 8),
+        dtype="float32",
+        remat="none",
+        attn_chunk=256,
+    )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = build_config()
+    print(f"config {cfg.name}: ~{param_count(cfg)/1e6:.1f}M params, "
+          f"exits at periods {cfg.exit_layer_list}")
+    res = train(cfg, n_steps=args.steps, global_batch=args.batch,
+                seq_len=args.seq, ckpt_dir=args.ckpt, ckpt_every=50,
+                log_every=20, seed=0)
+    first = float(np.mean(res.losses[:10]))
+    last = float(np.mean(res.losses[-10:]))
+    print(f"\nloss: {first:.4f} -> {last:.4f} over {res.steps} steps "
+          f"(resumed_from={res.resumed_from})")
+    assert last < first, "training failed to reduce the joint exit loss"
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,8 @@
+"""Architecture configs: assigned pool + paper branchy CNNs."""
+from .base import SHAPES, ArchConfig, LayerSpec, ShapeSpec
+from .registry import (ARCH_NAMES, all_cells, get, runnable_cells,
+                       skipped_cells, sub_quadratic)
+
+__all__ = ["SHAPES", "ArchConfig", "LayerSpec", "ShapeSpec", "ARCH_NAMES",
+           "all_cells", "get", "runnable_cells", "skipped_cells",
+           "sub_quadratic"]

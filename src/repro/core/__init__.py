@@ -1,0 +1,35 @@
+"""Core: the paper's contribution — FIN placement of early-exit DNNs.
+
+Public API:
+  system_model   — tiers / nodes / per-app slices (Plane 1)
+  dnn_profile    — block/exit profiles (Plane 2), paper Tables II-IV
+  extended_graph — single-plane extended graph with Eq. (1)-(2) weights
+  feasible_graph — gamma-replicated FIN feasibility graph (Eq. 4 + pruning)
+  fin / mcp / optimum — the three solvers compared in Sec. V
+  problem        — configuration evaluation against (3a)-(3e)
+  multiapp       — Sec. V multi-application orchestration
+"""
+from .system_model import (NodeSpec, Network, make_node, make_network,
+                           PAPER_TIERS, TPU_TIERS)
+from .dnn_profile import (DNNProfile, ExitSpec, paper_profile, all_paper_apps,
+                          synthetic_profile, BITS_PER_FEATURE)
+from .problem import (AppRequirements, Config, ConfigEval, Solution,
+                      evaluate_config)
+from .extended_graph import ExtendedGraph, build_extended_graph, to_networkx
+from .feasible_graph import FeasibleGraph, build_feasible_graph
+from .fin import solve_fin, fin_all_exit_costs
+from .mcp import solve_mcp
+from .optimum import solve_opt
+from .multiapp import (run_multiapp, MultiAppResult, AppStats,
+                       PAPER_MULTIAPP_REQS, default_solvers, user_network)
+
+__all__ = [
+    "NodeSpec", "Network", "make_node", "make_network", "PAPER_TIERS",
+    "TPU_TIERS", "DNNProfile", "ExitSpec", "paper_profile", "all_paper_apps",
+    "synthetic_profile", "BITS_PER_FEATURE", "AppRequirements", "Config",
+    "ConfigEval", "Solution", "evaluate_config", "ExtendedGraph",
+    "build_extended_graph", "to_networkx", "FeasibleGraph",
+    "build_feasible_graph", "solve_fin", "fin_all_exit_costs", "solve_mcp",
+    "solve_opt", "run_multiapp", "MultiAppResult", "AppStats",
+    "PAPER_MULTIAPP_REQS", "default_solvers", "user_network",
+]

@@ -1,0 +1,115 @@
+"""(min,+) relaxation primitives backing FIN's minimum-cost traversal.
+
+FIN's feasible graph is a layered DAG over states s = (node, depth); the
+minimum-cost traversal is a sequence of (min,+) ("tropical") matrix-vector
+products — exactly a Bellman-Ford relaxation restricted to the layer
+structure.  Three backends:
+
+  * numpy  — reference / small instances, with argmin backtracking;
+  * jnp    — jitted dense relaxation for large instances (scaling benches);
+  * pallas — the ``minplus`` TPU kernel (kernels/minplus), VMEM-tiled.
+
+The paper reports solver wall-time (Table VII), so this *is* a hot spot the
+paper measures; on TPU the relaxation maps naturally onto the VPU with
+(min,+) in place of (+,*) — see kernels/minplus/minplus.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# numpy reference
+# ---------------------------------------------------------------------------
+
+def minplus_vecmat_np(dist: np.ndarray, W: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """out[t] = min_s dist[s] + W[s, t]; returns (out, argmin_s)."""
+    cand = dist[:, None] + W                     # (S, T)
+    arg = np.argmin(cand, axis=0)
+    out = cand[arg, np.arange(W.shape[1])]
+    return out, arg
+
+
+def bellman_ford_np(W: np.ndarray, src: int, *, max_iters: Optional[int] = None
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Classic dense Bellman-Ford on an (S, S) weight matrix (inf = no edge).
+
+    Returns (dist, parent).  Used to cross-validate the layered DP and to
+    solve non-layered instances (e.g. MCP on general meshes).
+    """
+    S = W.shape[0]
+    dist = np.full(S, np.inf)
+    parent = np.full(S, -1, dtype=np.int64)
+    dist[src] = 0.0
+    iters = max_iters if max_iters is not None else S - 1
+    for _ in range(iters):
+        new, arg = minplus_vecmat_np(dist, W)
+        improved = new < dist - 1e-18
+        if not improved.any():
+            break
+        parent[improved] = arg[improved]
+        dist = np.where(improved, new, dist)
+    return dist, parent
+
+
+# ---------------------------------------------------------------------------
+# jnp (jit) backend
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def minplus_vecmat_jnp(dist: jnp.ndarray, W: jnp.ndarray) -> jnp.ndarray:
+    """out[t] = min_s dist[s] + W[s, t] (cost only, differentiable-free)."""
+    return jnp.min(dist[:, None] + W, axis=0)
+
+
+@jax.jit
+def minplus_matmat_jnp(A: jnp.ndarray, B: jnp.ndarray) -> jnp.ndarray:
+    """Tropical matmul: out[i, j] = min_k A[i, k] + B[k, j].
+
+    This is the batched form used when relaxing many sources at once
+    (multi-application orchestration relaxes one row per user).
+    """
+    return jnp.min(A[:, :, None] + B[None, :, :], axis=1)
+
+
+def layered_relax_jnp(init: jnp.ndarray, Ws: jnp.ndarray) -> jnp.ndarray:
+    """Relax through a stack of layer transition matrices via lax.scan.
+
+    init: (S,) initial distances; Ws: (L, S, S).  Returns (L+1, S) distances
+    after each layer.  jit-compiled once per (S, L) shape.
+    """
+    def step(dist, W):
+        new = minplus_vecmat_jnp(dist, W)
+        return new, new
+
+    _, hist = jax.lax.scan(step, init, Ws)
+    return jnp.concatenate([init[None], hist], axis=0)
+
+
+def layered_relax(init: np.ndarray, Ws: np.ndarray, backend: str = "numpy",
+                  ) -> np.ndarray:
+    """Dispatch layered relaxation to a backend. Returns (L+1, S) distances."""
+    if backend == "numpy":
+        out = [init]
+        d = init
+        for W in Ws:
+            d, _ = minplus_vecmat_np(d, W)
+            out.append(d)
+        return np.stack(out)
+    if backend == "jnp":
+        return np.asarray(layered_relax_jnp(jnp.asarray(init), jnp.asarray(Ws)))
+    if backend == "pallas":
+        from repro.kernels.minplus.ops import minplus_vecmat as mp_pallas
+        out = [init]
+        d = jnp.asarray(init, jnp.float32)
+        for W in Ws:
+            d = mp_pallas(d[None, :], jnp.asarray(W, jnp.float32))[0]
+            out.append(np.asarray(d))
+        return np.stack(out)
+    raise ValueError(f"unknown backend {backend!r}")

@@ -1,0 +1,160 @@
+"""Single-plane extended graph G (Sec. II-B), vectorized.
+
+The two-plane graph G~ (Plane 1: nodes, Plane 2: DNN blocks, inter-plane
+deployment edges) is collapsed into the extended graph G whose vertices are
+(node n, block l_i) pairs.  Because the DNNs are chains, G is a *layered DAG*:
+edges only connect layer i to layer i+1.  We therefore store the graph as
+dense per-transition weight tensors rather than an adjacency list — this is
+what makes the FIN dynamic program a sequence of (min,+) matrix products
+(see ``bellman_ford.py`` and the ``minplus`` Pallas kernel).
+
+Tensors (N = #nodes, L = #blocks):
+  C[i, n]            compute time of block i (backbone + attached exit) on n   (Eq. 1)
+  T[i, n, n']        transfer time of cut i from n to n' (0 on diagonal)       (Eq. 1)
+  E[i, n, n']        expected energy of edge ((n, l_i) -> (n', l_{i+1}))       (Eq. 2)
+  TT[i, n, n']       latency of the same edge: T[i, n, n'] + C[i+1, n']
+  mask[i, n, n']     edge admissibility after local pruning (3d)-(3e)
+  init_{T,E,mask}[n] source -> (n, l_0) edge (input transfer + block-0 compute)
+
+Energy weighting follows the phi accounting of the objective (3a): compute of
+block i is paid by the fraction of samples that *enter* it, a cut after block
+i is paid by the fraction that *survives* its exit (DESIGN.md Sec. 1).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from .dnn_profile import DNNProfile
+from .problem import AppRequirements
+from .system_model import Network
+
+
+@dataclass
+class ExtendedGraph:
+    network: Network
+    profile: DNNProfile
+    req: AppRequirements
+
+    C: np.ndarray          # (L, N) compute time per block per node
+    T: np.ndarray          # (L-1, N, N) cut transfer time
+    E: np.ndarray          # (L-1, N, N) expected edge energy
+    TT: np.ndarray         # (L-1, N, N) edge latency T + C[next]
+    mask: np.ndarray       # (L-1, N, N) bool, edge admissible
+    init_T: np.ndarray     # (N,) source-edge latency (input transfer + C[0])
+    init_E: np.ndarray     # (N,) source-edge expected energy
+    init_mask: np.ndarray  # (N,) bool
+    surv_in: np.ndarray    # (L,) survival entering block i
+    surv_out: np.ndarray   # (L,) survival after block i's exit
+    acc_seq: np.ndarray    # (L,) accuracy of deepest exit at block <= i (0 if none)
+
+    @property
+    def n_nodes(self) -> int:
+        return self.network.n_nodes
+
+    @property
+    def n_blocks(self) -> int:
+        return self.profile.n_blocks
+
+    @property
+    def n_vertices(self) -> int:
+        return self.n_nodes * self.n_blocks + 1  # + source
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.init_mask.sum() + self.mask.sum())
+
+
+def build_extended_graph(network: Network, profile: DNNProfile,
+                         req: AppRequirements) -> ExtendedGraph:
+    N = network.n_nodes
+    L = profile.n_blocks
+    bw = network.bandwidth
+    comp = np.where(network.compute > 0, network.compute, np.inf)
+    p_act = network.power_active
+    e_tx, e_rx = network.e_tx, network.e_rx
+    sigma = req.sigma
+
+    # ops per block including its attached exit head (all deployed exits run).
+    kmax = profile.n_exits - 1
+    ops = np.array([profile.block_ops_with_exit(i, kmax) for i in range(L)])
+    surv_in = np.array([profile.survival_entering_block(i, kmax) for i in range(L)])
+    surv_out = np.array([profile.survival_after_block(i, kmax) for i in range(L)])
+    cut_bits = np.asarray(profile.cut_bits, dtype=np.float64)
+
+    acc_seq = np.zeros(L)
+    best = 0.0
+    for i in range(L):
+        e = profile.exit_at(i)
+        if e is not None:
+            best = max(best, e.accuracy)
+        acc_seq[i] = best
+
+    C = ops[:, None] / comp[None, :]                                     # (L, N)
+
+    link_ok = (bw > 0) | np.eye(N, dtype=bool)
+    bw_eff = np.where(link_ok, np.where(np.eye(N, dtype=bool), np.inf, bw), np.nan)
+    np.fill_diagonal(bw_eff, np.inf)
+
+    T = cut_bits[:-1, None, None] / bw_eff[None, :, :]                   # (L-1, N, N)
+    T = np.where(np.isnan(T), np.inf, T)
+    np_eye = np.eye(N, dtype=bool)
+    T[:, np_eye] = 0.0
+
+    # energy of edge i -> i+1: comm (survivors of exit i) + compute of block i+1
+    pair_e = (e_tx[:, None] + e_rx[None, :])                             # (N, N)
+    comm_E = surv_out[:-1, None, None] * cut_bits[:-1, None, None] * pair_e[None]
+    comm_E[:, np_eye] = 0.0
+    comp_E = (surv_in[1:, None] * p_act[None, :] * C[1:, :])             # (L-1, N)
+    E = comm_E + comp_E[:, None, :]                                      # (L-1, N, N)
+
+    TT = T + C[1:, :][:, None, :]
+
+    # local pruning (3d)/(3e): expected load must fit the slice.
+    load_bits = sigma * surv_out[:-1, None, None] * cut_bits[:-1, None, None]
+    bw_fits = load_bits <= np.where(np.eye(N, dtype=bool), np.inf, bw)[None]
+    bw_fits |= np_eye[None, :, :]
+    comp_fits = (sigma * surv_in[1:, None] * ops[1:, None]) <= comp[None, :]
+    mask = link_ok[None] & bw_fits & comp_fits[:, None, :]
+
+    # source edges: input transfer from the source-hosting node + block-0 compute
+    src = network.source_node
+    in_bits = profile.input_bits
+    b_src = np.where(np.arange(N) == src, np.inf, bw[src])
+    init_T = in_bits / np.where(b_src > 0, b_src, np.nan) + C[0]
+    init_T = np.where(np.isnan(init_T), np.inf, init_T)
+    init_comm = np.where(np.arange(N) == src, 0.0, (e_tx[src] + e_rx) * in_bits)
+    init_E = init_comm + surv_in[0] * p_act * C[0]
+    init_mask = ((b_src > 0)
+                 & (sigma * in_bits <= b_src)
+                 & (sigma * surv_in[0] * ops[0] <= comp))
+
+    return ExtendedGraph(
+        network=network, profile=profile, req=req,
+        C=C, T=T, E=E, TT=TT, mask=mask,
+        init_T=init_T, init_E=init_E, init_mask=init_mask,
+        surv_in=surv_in, surv_out=surv_out, acc_seq=acc_seq,
+    )
+
+
+def to_networkx(g: ExtendedGraph):
+    """Export to networkx (cross-validation of the DP against Dijkstra)."""
+    import networkx as nx
+
+    G = nx.DiGraph()
+    G.add_node("src")
+    N, L = g.n_nodes, g.n_blocks
+    for n in range(N):
+        if g.init_mask[n]:
+            G.add_edge("src", (0, n), energy=float(g.init_E[n]),
+                       latency=float(g.init_T[n]))
+    for i in range(L - 1):
+        for n in range(N):
+            for n2 in range(N):
+                if g.mask[i, n, n2]:
+                    G.add_edge((i, n), (i + 1, n2),
+                               energy=float(g.E[i, n, n2]),
+                               latency=float(g.TT[i, n, n2]))
+    return G

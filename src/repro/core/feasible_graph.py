@@ -1,0 +1,134 @@
+"""FIN feasible graph (Sec. III): depth-replicated, pruned, layered.
+
+Every extended-graph vertex (n, l_i) is replicated gamma+1 times; replica g
+("depth") encodes quantized accumulated latency.  An edge v_{g1} -> v'_{g2}
+exists iff g2 - g1 equals the quantized edge latency (Eq. 4) and the local
+(3d)/(3e) pruning admits the edge.  By construction every path that stays
+within depth gamma honours the latency budget (up to quantization — see
+``quantize`` below), so the minimum-*energy* path is the FIN solution.
+
+Quantization modes for Eq. (4):
+  * "ceil"  — paper's bracket read conservatively: guaranteed-feasible paths,
+              but every edge costs >= 1 depth, so gamma must exceed the path
+              length (gamma=3 would render 5-block chains infeasible);
+  * "floor" — Xue-et-al.-style scaling: allows 0-steep edges (required for
+              the paper's gamma=3 results), may undershoot latency by up to
+              L*delta/gamma; FIN exact-checks the returned config and
+              re-solves with a tightened delta if needed (fin.py);
+  * "round" — intermediate.
+Default "floor" (matches the paper's reported gamma=3 behaviour).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .extended_graph import ExtendedGraph
+
+
+def _quant(x: np.ndarray, mode: str) -> np.ndarray:
+    if mode == "ceil":
+        q = np.ceil(x - 1e-12)
+    elif mode == "floor":
+        q = np.floor(x + 1e-12)
+    elif mode == "round":
+        q = np.round(x)
+    else:
+        raise ValueError(f"unknown quantize mode {mode!r}")
+    q = np.where(np.isfinite(x), q, np.inf)
+    return q
+
+
+@dataclass
+class FeasibleGraph:
+    """Depth-replicated feasibility graph, stored layer-wise.
+
+    steep[i][n, n']  integer depth increment of edge (n, l_i) -> (n', l_{i+1})
+                     (np.inf where the edge is pruned / latency-infeasible);
+    init_depth[n]    depth of the source edge into (n, l_0);
+    gamma, lam       resolution and lambda-proximity window (Sec. III).
+    """
+
+    ext: ExtendedGraph
+    gamma: int
+    lam: int
+    quantize: str
+    delta_eff: float
+    steep: np.ndarray        # (L-1, N, N) float (int values or inf)
+    init_depth: np.ndarray   # (N,) float (int values or inf)
+
+    @property
+    def n_states(self) -> int:
+        return self.ext.n_nodes * (self.gamma + 1)
+
+    @property
+    def n_vertices(self) -> int:
+        return self.ext.n_blocks * self.n_states + 1
+
+    @property
+    def n_edges(self) -> int:
+        n_init = int(np.isfinite(self.init_depth).sum())
+        # each admissible (n, n') extended edge appears once per source depth g
+        # such that g + steep <= gamma:
+        per_edge = np.where(np.isfinite(self.steep),
+                            np.maximum(0.0, self.gamma + 1 - self.steep), 0.0)
+        return n_init + int(per_edge.sum())
+
+    # -- dense layered transition matrices (for jnp / pallas backends) --------
+    def layer_matrices(self) -> np.ndarray:
+        """Return (L-1, S, S) dense (min,+) transition matrices over states
+        s = n * (gamma+1) + g, with energy weights and inf for non-edges."""
+        N = self.ext.n_nodes
+        G = self.gamma
+        S = N * (G + 1)
+        L = self.ext.n_blocks
+        out = np.full((L - 1, S, S), np.inf, dtype=np.float64)
+        lo = self.gamma - self.lam
+        for i in range(L - 1):
+            for n in range(N):
+                for n2 in range(N):
+                    st = self.steep[i, n, n2]
+                    if not np.isfinite(st):
+                        continue
+                    st = int(st)
+                    e = self.ext.E[i, n, n2]
+                    for g in range(G + 1 - st):
+                        g2 = g + st
+                        if self.lam < self.gamma and not (lo <= g2 <= G or g2 == g):
+                            continue
+                        out[i, n * (G + 1) + g, n2 * (G + 1) + g2] = e
+        return out
+
+    def init_vector(self) -> np.ndarray:
+        """(S,) initial state distances (source edges)."""
+        N, G = self.ext.n_nodes, self.gamma
+        v = np.full(N * (G + 1), np.inf)
+        for n in range(N):
+            d = self.init_depth[n]
+            if np.isfinite(d) and d <= G:
+                v[n * (G + 1) + int(d)] = self.ext.init_E[n]
+        return v
+
+
+def build_feasible_graph(ext: ExtendedGraph, gamma: int,
+                         *, lam: Optional[int] = None,
+                         quantize: str = "floor",
+                         delta_eff: Optional[float] = None) -> FeasibleGraph:
+    """Function I of Alg. 1: replicate vertices, create Eq. (4) edges, prune."""
+    assert gamma >= 1
+    lam = gamma if lam is None else int(lam)
+    assert 1 <= lam <= gamma
+    delta = ext.req.delta if delta_eff is None else float(delta_eff)
+
+    steep = _quant(gamma * ext.TT / delta, quantize)
+    steep = np.where(ext.mask, steep, np.inf)       # (3d)/(3e) pruning
+    steep = np.where(steep <= gamma, steep, np.inf)  # latency-infeasible edges
+
+    init_depth = _quant(gamma * ext.init_T / delta, quantize)
+    init_depth = np.where(ext.init_mask, init_depth, np.inf)
+    init_depth = np.where(init_depth <= gamma, init_depth, np.inf)
+
+    return FeasibleGraph(ext=ext, gamma=gamma, lam=lam, quantize=quantize,
+                         delta_eff=delta, steep=steep, init_depth=init_depth)

@@ -1,0 +1,215 @@
+"""FIN solver (Alg. 1): feasible-graph construction + min-cost traversal.
+
+The traversal is a layered dynamic program over states (node, depth): exact
+minimum-energy path in the feasible graph, vectorized over states.  One DP
+pass yields the best configuration for *every* candidate final exit (the DP
+prefix costs at each exit block), so accuracy filtering (3c) is a post-pass.
+
+Quantization undershoot ("floor" mode, see feasible_graph.py) is handled by
+an exact post-check of the selected configuration and, if the true latency
+violates (3b), re-solving with a geometrically tightened effective delta —
+at most ``max_tighten`` rounds.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .dnn_profile import DNNProfile
+from .extended_graph import ExtendedGraph, build_extended_graph
+from .feasible_graph import FeasibleGraph, build_feasible_graph
+from .problem import AppRequirements, Config, ConfigEval, Solution, evaluate_config
+from .system_model import Network
+
+
+@dataclass
+class _DPResult:
+    """k-best layered DP over states (block, node, depth).
+
+    dist[i, n, g, k] = k-th cheapest energy reaching that state; parents give
+    (node, depth, rank) of the predecessor.  n_best=1 is the paper's DP;
+    n_best>1 is our beyond-paper fix for quantizer state collisions: with a
+    coarse gamma two different placements can land on the same (n, g) state,
+    and keeping only the cheapest can drop the only *exactly-feasible* path
+    (observed at gamma=3 — EXPERIMENTS §Reproduction).  Keeping the k
+    cheapest restores the 1+1/gamma behaviour at small gamma for k ~ 4.
+    """
+    dist: np.ndarray       # (L, N, G+1, K)
+    par_n: np.ndarray      # (L, N, G+1, K)
+    par_g: np.ndarray      # (L, N, G+1, K)
+    par_k: np.ndarray      # (L, N, G+1, K)
+
+
+def _run_dp(fg: FeasibleGraph, n_best: int = 1) -> _DPResult:
+    ext = fg.ext
+    N, L, G = ext.n_nodes, ext.n_blocks, fg.gamma
+    K = max(1, n_best)
+    dist = np.full((L, N, G + 1, K), np.inf)
+    par_n = np.full((L, N, G + 1, K), -1, dtype=np.int32)
+    par_g = np.full((L, N, G + 1, K), -1, dtype=np.int32)
+    par_k = np.full((L, N, G + 1, K), -1, dtype=np.int32)
+
+    for n in range(N):
+        d0 = fg.init_depth[n]
+        if np.isfinite(d0):
+            dist[0, n, int(d0), 0] = ext.init_E[n]
+
+    lo = fg.gamma - fg.lam
+
+    def push(i, n2, g2, cand, pn, pg, pk):
+        row = dist[i, n2, g2]
+        if cand >= row[-1]:
+            return
+        j = int(np.searchsorted(row, cand))
+        dist[i, n2, g2, j + 1:] = row[j:-1]
+        par_n[i, n2, g2, j + 1:] = par_n[i, n2, g2, j:-1]
+        par_g[i, n2, g2, j + 1:] = par_g[i, n2, g2, j:-1]
+        par_k[i, n2, g2, j + 1:] = par_k[i, n2, g2, j:-1]
+        dist[i, n2, g2, j] = cand
+        par_n[i, n2, g2, j] = pn
+        par_g[i, n2, g2, j] = pg
+        par_k[i, n2, g2, j] = pk
+
+    for i in range(L - 1):
+        st = fg.steep[i]          # (N, N)
+        ew = ext.E[i]             # (N, N)
+        for n in range(N):
+            for n2 in range(N):
+                s = st[n, n2]
+                if not np.isfinite(s):
+                    continue
+                s = int(s)
+                cost = ew[n, n2]
+                for g in range(G + 1 - s):
+                    g2 = g + s
+                    if fg.lam < fg.gamma and g2 != g and not (lo <= g2 <= G):
+                        continue  # lambda-proximity window (Alg. 1, Fn II)
+                    for k in range(K):
+                        d = dist[i, n, g, k]
+                        if not np.isfinite(d):
+                            break
+                        push(i + 1, n2, g2, d + cost, n, g, k)
+    return _DPResult(dist=dist, par_n=par_n, par_g=par_g, par_k=par_k)
+
+
+def _backtrack(dp: _DPResult, block: int, node: int, depth: int,
+               rank: int) -> List[int]:
+    place = [node]
+    i, n, g, r = block, node, depth, rank
+    while i > 0:
+        pn = dp.par_n[i, n, g, r]
+        pg = dp.par_g[i, n, g, r]
+        pk = dp.par_k[i, n, g, r]
+        assert pn >= 0
+        place.append(int(pn))
+        i, n, g, r = i - 1, int(pn), int(pg), int(pk)
+    return place[::-1]
+
+
+def _configs_at_exit(dp: _DPResult, profile: DNNProfile, k: int
+                     ) -> List[Tuple[Config, float]]:
+    """All DP end-states (x ranks) at exit k's block, sorted by energy.
+
+    Energy weights are *not* quantized (only latency is), so the DP distance
+    is the exact expected energy of the backtracked path; scanning states in
+    energy order and exact-checking each yields the minimum-energy feasible
+    path representable in the feasible graph.
+    """
+    block = profile.exits[k].block
+    d = dp.dist[block]                      # (N, G+1, K)
+    flat = np.argsort(d, axis=None)
+    out: List[Tuple[Config, float]] = []
+    for idx in flat:
+        n, g, r = np.unravel_index(idx, d.shape)
+        if not np.isfinite(d[n, g, r]):
+            break
+        cfg = Config(placement=_backtrack(dp, block, int(n), int(g), int(r)),
+                     final_exit=k)
+        out.append((cfg, float(d[n, g, r])))
+    return out
+
+
+def solve_fin(network: Network, profile: DNNProfile, req: AppRequirements,
+              *, gamma: int = 10, lam: Optional[int] = None,
+              quantize: str = "floor", max_tighten: int = 6,
+              tighten_factor: float = 0.85, n_best: int = 1,
+              check_aggregate_load: bool = False) -> Solution:
+    """FIN (Alg. 1).  Returns the min-energy feasible configuration.
+
+    ``n_best>1`` keeps the k cheapest paths per (node, depth) state — our
+    beyond-paper fix for small-gamma quantizer collisions (see _DPResult)."""
+    t0 = time.perf_counter()
+    ext = build_extended_graph(network, profile, req)
+
+    admissible_exits = [k for k in range(profile.n_exits)
+                        if profile.accuracy_of(k) >= req.alpha - 1e-12]
+    if not admissible_exits:
+        return Solution(config=None, eval=None,
+                        solve_time=time.perf_counter() - t0, solver="fin",
+                        meta={"reason": "no exit meets alpha (3c)"})
+
+    def _solve_once(q: str, d_eff: float) -> Optional[Tuple[Config, ConfigEval]]:
+        fg = build_feasible_graph(ext, gamma, lam=lam, quantize=q,
+                                  delta_eff=d_eff)
+        dp = _run_dp(fg, n_best=n_best)
+        found: Optional[Tuple[Config, ConfigEval]] = None
+        for k in admissible_exits:
+            for cfg, _graph_e in _configs_at_exit(dp, profile, k):
+                ev = evaluate_config(network, profile, req, cfg,
+                                     check_aggregate_load=check_aggregate_load)
+                if ev.feasible:
+                    if found is None or ev.energy < found[1].energy:
+                        found = (cfg, ev)
+                    break  # states are energy-sorted: first feasible is best at k
+        return found
+
+    delta_eff = req.delta
+    best: Optional[Tuple[Config, ConfigEval]] = None
+    meta = {"gamma": gamma, "quantize": quantize, "tighten_rounds": 0}
+    for round_ in range(max_tighten + 1):
+        best = _solve_once(quantize, delta_eff)
+        if best is not None:
+            break
+        # quantization undershoot: tighten the effective latency budget
+        delta_eff *= tighten_factor
+        meta["tighten_rounds"] = round_ + 1
+    if quantize != "ceil":
+        # conservative pass: ceil quantization is feasible-by-construction and
+        # can rescue state-collision misses of the optimistic quantizer.
+        alt = _solve_once("ceil", req.delta)
+        if alt is not None and (best is None or alt[1].energy < best[1].energy):
+            best = alt
+            meta["used_ceil_pass"] = True
+
+    dt = time.perf_counter() - t0
+    if best is None:
+        return Solution(config=None, eval=None, solve_time=dt, solver="fin",
+                        meta={**meta, "reason": "no feasible path"})
+    cfg, ev = best
+    meta["delta_eff"] = delta_eff
+    meta["n_feasible_states"] = int(np.isfinite(ev.energy))
+    return Solution(config=cfg, eval=ev, solve_time=dt, solver="fin", meta=meta)
+
+
+def fin_all_exit_costs(network: Network, profile: DNNProfile,
+                       req: AppRequirements, *, gamma: int = 10,
+                       lam: Optional[int] = None, quantize: str = "floor",
+                       backend: str = "numpy") -> np.ndarray:
+    """Graph-cost (not exact-eval) per exit — used by scaling benchmarks to
+    exercise the jnp / pallas (min,+) backends on large instances."""
+    ext = build_extended_graph(network, profile, req)
+    fg = build_feasible_graph(ext, gamma, lam=lam, quantize=quantize)
+    if backend == "numpy":
+        dp = _run_dp(fg)
+        dist = dp.dist.reshape(ext.n_blocks, -1)
+    else:
+        from .bellman_ford import layered_relax
+        Ws = fg.layer_matrices()
+        dist = layered_relax(fg.init_vector(), Ws, backend=backend)
+    out = np.full(profile.n_exits, np.inf)
+    for k, e in enumerate(profile.exits):
+        out[k] = dist[e.block].min()
+    return out

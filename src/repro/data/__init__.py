@@ -1,0 +1,4 @@
+"""Synthetic data pipelines (deterministic, host-shardable)."""
+from .synthetic import LMStreamConfig, SyntheticLMStream, synthetic_images
+
+__all__ = ["LMStreamConfig", "SyntheticLMStream", "synthetic_images"]

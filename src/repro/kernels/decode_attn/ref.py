@@ -1,0 +1,12 @@
+"""Oracle for the decode_attn kernel: the serving engine's own jnp path."""
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import decode_attention
+
+
+def decode_attn_ref(q, k_cache, v_cache, cache_pos, pos, *, window: int = 0):
+    """q: [B, H, D] -> [B, H, D] via models.attention.decode_attention."""
+    out = decode_attention(q[:, None], k_cache, v_cache, cache_pos, pos,
+                           window=window)
+    return out[:, 0]

@@ -1,0 +1,11 @@
+"""Jitted wrapper for the ee_gate Pallas kernel (interpret=True on CPU)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .ee_gate import ee_gate_pallas
+
+
+def ee_gate(logits: jnp.ndarray, *, interpret: bool = True):
+    """logits: [B, V] -> (confidence [B], greedy token [B])."""
+    return ee_gate_pallas(logits, interpret=interpret)

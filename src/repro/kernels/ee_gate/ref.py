@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the ee_gate kernel."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def ee_gate_ref(logits: jnp.ndarray):
+    """logits: [B, V] -> (conf [B] f32, argmax [B] i32)."""
+    x = jnp.maximum(logits.astype(jnp.float32), -3.0e38)
+    m = x.max(axis=-1)
+    lse = m + jnp.log(jnp.exp(x - m[:, None]).sum(axis=-1))
+    return jnp.exp(m - lse), jnp.argmax(x, axis=-1).astype(jnp.int32)

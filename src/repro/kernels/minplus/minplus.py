@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: tropical (min,+) matrix product — FIN's relaxation.
+
+out[b, t] = min_s ( dist[b, s] + W[s, t] )
+
+This is the inner loop of FIN's minimum-cost traversal over the feasible
+graph (one product per DNN block layer; see core/bellman_ford.py).  On TPU
+the (min,+) semiring cannot use the MXU (no min-accumulate), but maps onto
+the VPU as a broadcast-add + row-min, tiled so each (dist-block, W-block)
+pair stays in VMEM.
+
+Tiling: grid (B/bb, T/bt, S/bs); S is the minor (fastest) axis so the output
+block acts as a VMEM accumulator across S-steps:
+
+  acc[bb, bt]  <- min(acc, min_s(dist[bb, bs, None] + W[bs, bt]))
+
+Block sizes default to (8, 128, 128) — lane-aligned (8 sublanes x 128 lanes
+for f32) and 8*128 + 128*128 + 8*128 floats ~= 70 KB of VMEM per step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 3.0e38          # acts as +inf under min/add without NaNs (python float,
+                      # NOT jnp scalar: kernels must not capture tracers)
+
+
+def _minplus_kernel(dist_ref, w_ref, out_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, BIG)
+
+    d = dist_ref[...]              # [bb, bs]
+    w = w_ref[...]                 # [bs, bt]
+    cand = jnp.min(d[:, :, None] + w[None, :, :], axis=1)   # [bb, bt]
+    out_ref[...] = jnp.minimum(out_ref[...], cand)
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "bs", "bt", "interpret"))
+def minplus_pallas(dist: jnp.ndarray, W: jnp.ndarray, *, bb: int = 8,
+                   bs: int = 128, bt: int = 128,
+                   interpret: bool = True) -> jnp.ndarray:
+    """dist: [B, S]; W: [S, T] (use BIG or +inf for missing edges).
+    Returns [B, T] min-plus product.  Inputs are padded to block multiples.
+    """
+    B, S = dist.shape
+    S2, T = W.shape
+    assert S == S2
+    dist = jnp.where(jnp.isfinite(dist), dist, BIG).astype(jnp.float32)
+    W = jnp.where(jnp.isfinite(W), W, BIG).astype(jnp.float32)
+
+    def pad_to(x, m, axis):
+        r = (-x.shape[axis]) % m
+        if r == 0:
+            return x
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, r)
+        return jnp.pad(x, widths, constant_values=BIG)
+
+    dist_p = pad_to(pad_to(dist, bb, 0), bs, 1)
+    W_p = pad_to(pad_to(W, bs, 0), bt, 1)
+    Bp, Sp = dist_p.shape
+    Tp = W_p.shape[1]
+
+    out = pl.pallas_call(
+        _minplus_kernel,
+        grid=(Bp // bb, Tp // bt, Sp // bs),
+        in_specs=[
+            pl.BlockSpec((bb, bs), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bs, bt), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, bt), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Tp), jnp.float32),
+        interpret=interpret,
+    )(dist_p, W_p)
+    # saturate padded-path artifacts back to BIG (add of two BIGs overflows
+    # to +inf in f32; clamp for clean downstream comparisons)
+    out = jnp.where(out >= BIG, jnp.inf, out)
+    return out[:B, :T]

@@ -1,0 +1,15 @@
+"""Jitted wrapper for the minplus Pallas kernel.
+
+``interpret=True`` executes the kernel body in Python on CPU (this
+container); on TPU set interpret=False for the compiled Mosaic kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .minplus import minplus_pallas
+
+
+def minplus_vecmat(dist: jnp.ndarray, W: jnp.ndarray, *,
+                   interpret: bool = True) -> jnp.ndarray:
+    """dist: [B, S] float; W: [S, T] float (inf = no edge) -> [B, T]."""
+    return minplus_pallas(dist, W, interpret=interpret)

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the minplus kernel."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def minplus_ref(dist: jnp.ndarray, W: jnp.ndarray) -> jnp.ndarray:
+    """dist: [B, S]; W: [S, T] -> [B, T]; inf-safe tropical product."""
+    return jnp.min(dist[:, :, None] + W[None, :, :], axis=1)

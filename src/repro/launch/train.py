@@ -1,0 +1,39 @@
+"""Training launcher:  PYTHONPATH=src python -m repro.launch.train \
+    --arch qwen3-4b [--reduced] --steps 100 --batch 8 --seq 128
+
+On this CPU container use --reduced (same-family small config); the full
+configs are exercised via the dry-run (launch/dryrun.py).  On a real pod the
+same entry point shards the train state over the production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import ARCH_NAMES, get
+from repro.runtime.train_loop import train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_NAMES)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get(args.arch, reduced=args.reduced)
+    if not args.reduced:
+        print("WARNING: full config on this host — expect to OOM; "
+              "use the dry-run for full-scale validation")
+    res = train(cfg, n_steps=args.steps, global_batch=args.batch,
+                seq_len=args.seq, ckpt_dir=args.ckpt, seed=args.seed)
+    print(f"done: {res.steps} steps, loss {res.losses[0]:.4f} -> "
+          f"{res.losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""JAX model zoo: paper branchy CNNs + assigned LM-family backbones."""

@@ -1,0 +1,219 @@
+"""The paper's branchy DNNs in JAX: B-LeNet, B-AlexNet, B-ResNet (Sec. IV).
+
+A :class:`BranchyModel` is a chain of backbone blocks; some blocks carry an
+early-exit head.  The functional API:
+
+  params = model.init(key)
+  logits_per_exit, feats = model.apply(params, x)          # all exits
+  y, exit_idx = model.infer(params, x, thresholds)         # gated inference
+  profile = model.extract_profile(...)                     # -> core.DNNProfile
+
+Block boundaries and feature-map sizes follow Table III: each block's output
+feature count matches the paper's "number of features" column exactly (that
+column is the block *output*: 290400 = 55x55x96 for B-AlexNet conv1 etc.).
+Exit placement follows Table VI (exits with blocks 1, 3, 5 for AlexNet and
+ResNet; BranchyNet placement for LeNet).  ``extract_profile`` turns the real
+JAX model into a Plane-2 ``DNNProfile`` with true MAC counts — the measured
+alternative to the paper's Table III ops (which count k^2*H*W*C_out only;
+see benchmarks/bench_table3.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .cnn_layers import (Conv, Dense, Flatten, GlobalAvgPool, MaxPool,
+                         Residual, Sequential, Shape)
+
+
+@dataclass(frozen=True)
+class BranchyModel:
+    name: str
+    input_shape: Shape                    # (H, W, C)
+    blocks: Tuple[Sequential, ...]        # backbone blocks
+    exits: Dict[int, Sequential]          # block idx -> exit head
+    n_classes: int
+
+    # -- parameters -----------------------------------------------------------
+    def init(self, key):
+        params = {"blocks": [], "exits": {}}
+        shape = self.input_shape
+        keys = jax.random.split(key, len(self.blocks) + len(self.exits))
+        ki = 0
+        for i, blk in enumerate(self.blocks):
+            p, shape_out = blk.init(keys[ki], shape)
+            ki += 1
+            params["blocks"].append(p)
+            if i in self.exits:
+                pe, _ = self.exits[i].init(keys[ki], shape_out)
+                ki += 1
+                params["exits"][str(i)] = pe
+            shape = shape_out
+        return params
+
+    # -- forward --------------------------------------------------------------
+    def apply(self, params, x, *, up_to_block: Optional[int] = None):
+        """Run blocks 0..up_to_block; return ({block_idx: exit_logits}, feats)."""
+        last = len(self.blocks) - 1 if up_to_block is None else up_to_block
+        logits: Dict[int, jnp.ndarray] = {}
+        h = x
+        for i in range(last + 1):
+            h = self.blocks[i].apply(params["blocks"][i], h)
+            if i in self.exits:
+                logits[i] = self.exits[i].apply(params["exits"][str(i)], h)
+        return logits, h
+
+    def exit_blocks(self) -> List[int]:
+        return sorted(self.exits.keys())
+
+    # -- gated inference (per-sample dynamic depth) -----------------------------
+    def infer(self, params, x, thresholds: Sequence[float]):
+        """Confidence-gated early-exit inference.
+
+        A sample exits at the first exit whose max-softmax confidence clears
+        its threshold.  Returns (predictions, exit_index_per_sample).  All
+        exits are computed (SPMD semantics); the *placement* problem is what
+        turns the phi fractions into saved energy (DESIGN.md Sec. 3).
+        """
+        logits, _ = self.apply(params, x)
+        eb = self.exit_blocks()
+        assert len(thresholds) >= len(eb) - 1
+        B = x.shape[0]
+        pred = jnp.zeros(B, dtype=jnp.int32)
+        exit_idx = jnp.full(B, len(eb) - 1, dtype=jnp.int32)
+        decided = jnp.zeros(B, dtype=bool)
+        for j, b in enumerate(eb):
+            p = jax.nn.softmax(logits[b], axis=-1)
+            conf = p.max(axis=-1)
+            is_last = j == len(eb) - 1
+            take = (~decided) & (jnp.ones(B, bool) if is_last
+                                 else conf >= thresholds[j])
+            pred = jnp.where(take, p.argmax(axis=-1).astype(jnp.int32), pred)
+            exit_idx = jnp.where(take, j, exit_idx)
+            decided = decided | take
+        return pred, exit_idx
+
+    def loss(self, params, x, labels, exit_weights: Optional[Sequence[float]] = None):
+        """BranchyNet joint loss: weighted sum of per-exit cross-entropies."""
+        logits, _ = self.apply(params, x)
+        eb = self.exit_blocks()
+        w = ([1.0] * len(eb)) if exit_weights is None else list(exit_weights)
+        total = 0.0
+        for j, b in enumerate(eb):
+            logp = jax.nn.log_softmax(logits[b], axis=-1)
+            ce = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+            total = total + w[j] * ce
+        return total / sum(w)
+
+    # -- profile extraction -----------------------------------------------------
+    def extract_profile(self, *, bits_per_feature: int = 8,
+                        accuracies: Optional[Sequence[float]] = None,
+                        phis: Optional[Sequence[float]] = None):
+        """Measured Plane-2 profile: true MACs + true cut sizes from the model."""
+        from repro.core.dnn_profile import DNNProfile, ExitSpec
+
+        shape = self.input_shape
+        block_ops, cut_bits, shapes = [], [], []
+        for blk in self.blocks:
+            block_ops.append(blk.macs(shape))
+            shape = blk.out_shape(shape)
+            shapes.append(shape)
+            cut_bits.append(float(np.prod(shape)) * bits_per_feature)
+        eb = self.exit_blocks()
+        n_e = len(eb)
+        acc = list(accuracies) if accuracies is not None else \
+            list(np.linspace(0.5, 0.9, n_e))
+        phi = list(phis) if phis is not None else [1.0 / n_e] * n_e
+        exits = []
+        for j, b in enumerate(eb):
+            head = self.exits[b]
+            exits.append(ExitSpec(
+                block=b, ops=head.macs(shapes[b]),
+                out_bits=self.n_classes * bits_per_feature,
+                accuracy=float(acc[j]), phi=float(phi[j])))
+        return DNNProfile(name=f"{self.name}:measured",
+                          input_bits=float(np.prod(self.input_shape)) * bits_per_feature,
+                          block_ops=block_ops, cut_bits=cut_bits, exits=exits)
+
+
+# ---------------------------------------------------------------------------
+# Model definitions (Table III feature-count-faithful)
+# ---------------------------------------------------------------------------
+
+def b_lenet(n_classes: int = 10) -> BranchyModel:
+    """B-LeNet: 2 conv + 2 pool + 3 FC backbone, 1 early exit (2 exits total).
+
+    Block outputs: 28x28x6 = 4704, 10x10x16 = 1600, 120 (Table III)."""
+    blocks = (
+        Sequential((Conv(6, 5, 1, "SAME"),)),                     # -> 4704
+        Sequential((MaxPool(2, 2), Conv(16, 5, 1, "VALID"))),      # -> 1600
+        Sequential((MaxPool(2, 2), Flatten(), Dense(120, use_relu=True))),
+    )
+    exits = {
+        0: Sequential((MaxPool(4, 4), Flatten(), Dense(n_classes))),
+        2: Sequential((Dense(84, use_relu=True), Dense(n_classes))),
+    }
+    return BranchyModel("b-lenet", (28, 28, 1), blocks, exits, n_classes)
+
+
+def b_alexnet(n_classes: int = 10) -> BranchyModel:
+    """B-AlexNet: 5 conv blocks, exits at blocks 1, 3, 5 (Table VI).
+
+    Block outputs: 55x55x96 = 290400, 27x27x256 = 186624, 13x13x384 = 64896,
+    13x13x384 = 64896, 13x13x256 = 43264 (Table III)."""
+    blocks = (
+        Sequential((Conv(96, 11, 4, "VALID"),)),                   # 55x55x96
+        Sequential((MaxPool(3, 2), Conv(256, 5, 1, "SAME"))),       # 27x27x256
+        Sequential((MaxPool(3, 2), Conv(384, 3, 1, "SAME"))),       # 13x13x384
+        Sequential((Conv(384, 3, 1, "SAME"),)),                     # 13x13x384
+        Sequential((Conv(256, 3, 1, "SAME"),)),                     # 13x13x256
+    )
+    exits = {
+        0: Sequential((MaxPool(3, 2), Conv(96, 3, 1, "SAME"),
+                       GlobalAvgPool(), Dense(n_classes))),
+        2: Sequential((Conv(256, 3, 1, "SAME"), GlobalAvgPool(),
+                       Dense(n_classes))),
+        4: Sequential((GlobalAvgPool(), Dense(n_classes))),
+    }
+    return BranchyModel("b-alexnet", (227, 227, 3), blocks, exits, n_classes)
+
+
+def b_resnet(n_classes: int = 10, *, blocks_per_stage: int = 2) -> BranchyModel:
+    """B-ResNet: CIFAR ResNet backbone in 5 blocks, exits at 1, 3, 5.
+
+    Block outputs: 32x32x16 = 16384 (x3), 8x8x64 = 4096 (x2), per Table III.
+    ``blocks_per_stage=18`` gives the full ResNet-110; the default keeps CPU
+    tests fast (depth is a config knob, not an architecture change)."""
+    n = blocks_per_stage
+    stage1a = tuple([Conv(16, 3, 1, "SAME")] + [Residual(16)] * n)
+    stage1b = tuple([Residual(16)] * n)
+    stage1c = tuple([Residual(16)] * n)
+    stage23 = tuple([Residual(32, stride=2)] + [Residual(32)] * (n - 1)
+                    + [Residual(64, stride=2)] + [Residual(64)] * (n - 1))
+    stage3b = tuple([Residual(64)] * n)
+    blocks = (
+        Sequential(stage1a),    # 32x32x16 = 16384
+        Sequential(stage1b),    # 16384
+        Sequential(stage1c),    # 16384
+        Sequential(stage23),    # 8x8x64 = 4096
+        Sequential(stage3b),    # 4096
+    )
+    exits = {
+        0: Sequential((GlobalAvgPool(), Dense(n_classes))),
+        2: Sequential((GlobalAvgPool(), Dense(n_classes))),
+        4: Sequential((GlobalAvgPool(), Dense(n_classes))),
+    }
+    return BranchyModel("b-resnet", (32, 32, 3), blocks, exits, n_classes)
+
+
+PAPER_MODELS = {"b-lenet": b_lenet, "b-alexnet": b_alexnet, "b-resnet": b_resnet}
+#: Table III block output feature counts, for validation.
+TABLE_III_FEATURES = {
+    "b-lenet": [4704, 1600, 120],
+    "b-alexnet": [290400, 186624, 64896, 64896, 43264],
+    "b-resnet": [16384, 16384, 16384, 4096, 4096],
+}

@@ -1,0 +1,221 @@
+"""Minimal functional CNN layer library (pure JAX) with MAC accounting.
+
+Each layer is a dataclass with:
+  init(key, in_shape)   -> (params, out_shape)
+  apply(params, x)      -> y                    (x: [B, H, W, C] or [B, F])
+  macs(in_shape)        -> multiply-accumulates per sample
+The MAC counts feed ``profile_from_model`` (dnn_profile extraction), closing
+the loop between the JAX models and the placement problem's Plane 2.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Shape = Tuple[int, ...]
+
+
+def _he_init(key, shape, fan_in, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * math.sqrt(2.0 / fan_in)
+
+
+@dataclass(frozen=True)
+class Conv:
+    features: int
+    kernel: int
+    stride: int = 1
+    padding: str = "SAME"          # "SAME" | "VALID"
+    use_relu: bool = True
+
+    def out_shape(self, in_shape: Shape) -> Shape:
+        h, w, c = in_shape
+        if self.padding == "SAME":
+            oh = -(-h // self.stride)
+            ow = -(-w // self.stride)
+        else:
+            oh = (h - self.kernel) // self.stride + 1
+            ow = (w - self.kernel) // self.stride + 1
+        return (oh, ow, self.features)
+
+    def init(self, key, in_shape: Shape):
+        c = in_shape[-1]
+        fan_in = self.kernel * self.kernel * c
+        w = _he_init(key, (self.kernel, self.kernel, c, self.features), fan_in)
+        b = jnp.zeros((self.features,))
+        return {"w": w, "b": b}, self.out_shape(in_shape)
+
+    def apply(self, params, x):
+        y = jax.lax.conv_general_dilated(
+            x, params["w"],
+            window_strides=(self.stride, self.stride),
+            padding=self.padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        y = y + params["b"]
+        return jax.nn.relu(y) if self.use_relu else y
+
+    def macs(self, in_shape: Shape) -> float:
+        oh, ow, _ = self.out_shape(in_shape)
+        c = in_shape[-1]
+        return float(self.kernel * self.kernel * c * self.features * oh * ow)
+
+
+@dataclass(frozen=True)
+class MaxPool:
+    window: int
+    stride: int
+
+    def out_shape(self, in_shape: Shape) -> Shape:
+        h, w, c = in_shape
+        oh = (h - self.window) // self.stride + 1
+        ow = (w - self.window) // self.stride + 1
+        return (oh, ow, c)
+
+    def init(self, key, in_shape: Shape):
+        return {}, self.out_shape(in_shape)
+
+    def apply(self, params, x):
+        return jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max,
+            (1, self.window, self.window, 1),
+            (1, self.stride, self.stride, 1), "VALID")
+
+    def macs(self, in_shape: Shape) -> float:
+        return 0.0
+
+
+@dataclass(frozen=True)
+class GlobalAvgPool:
+    def out_shape(self, in_shape: Shape) -> Shape:
+        return (in_shape[-1],)
+
+    def init(self, key, in_shape: Shape):
+        return {}, self.out_shape(in_shape)
+
+    def apply(self, params, x):
+        return x.mean(axis=(1, 2))
+
+    def macs(self, in_shape: Shape) -> float:
+        return 0.0
+
+
+@dataclass(frozen=True)
+class Flatten:
+    def out_shape(self, in_shape: Shape) -> Shape:
+        return (int(np.prod(in_shape)),)
+
+    def init(self, key, in_shape: Shape):
+        return {}, self.out_shape(in_shape)
+
+    def apply(self, params, x):
+        return x.reshape(x.shape[0], -1)
+
+    def macs(self, in_shape: Shape) -> float:
+        return 0.0
+
+
+@dataclass(frozen=True)
+class Dense:
+    features: int
+    use_relu: bool = False
+
+    def out_shape(self, in_shape: Shape) -> Shape:
+        return (self.features,)
+
+    def init(self, key, in_shape: Shape):
+        fan_in = int(np.prod(in_shape))
+        w = _he_init(key, (fan_in, self.features), fan_in)
+        b = jnp.zeros((self.features,))
+        return {"w": w, "b": b}, (self.features,)
+
+    def apply(self, params, x):
+        y = x.reshape(x.shape[0], -1) @ params["w"] + params["b"]
+        return jax.nn.relu(y) if self.use_relu else y
+
+    def macs(self, in_shape: Shape) -> float:
+        return float(np.prod(in_shape)) * self.features
+
+
+@dataclass(frozen=True)
+class Residual:
+    """Basic 2-conv residual block (ResNet CIFAR style)."""
+    features: int
+    stride: int = 1
+
+    def _convs(self):
+        return (Conv(self.features, 3, self.stride, "SAME", use_relu=True),
+                Conv(self.features, 3, 1, "SAME", use_relu=False))
+
+    def out_shape(self, in_shape: Shape) -> Shape:
+        c1, c2 = self._convs()
+        return c2.out_shape(c1.out_shape(in_shape))
+
+    def init(self, key, in_shape: Shape):
+        k1, k2, k3 = jax.random.split(key, 3)
+        c1, c2 = self._convs()
+        p1, s1 = c1.init(k1, in_shape)
+        p2, s2 = c2.init(k2, s1)
+        params = {"c1": p1, "c2": p2}
+        if in_shape[-1] != self.features or self.stride != 1:
+            proj = Conv(self.features, 1, self.stride, "SAME", use_relu=False)
+            params["proj"], _ = proj.init(k3, in_shape)
+        return params, s2
+
+    def apply(self, params, x):
+        c1, c2 = self._convs()
+        y = c1.apply(params["c1"], x)
+        y = c2.apply(params["c2"], y)
+        if "proj" in params:
+            proj = Conv(self.features, 1, self.stride, "SAME", use_relu=False)
+            x = proj.apply(params["proj"], x)
+        return jax.nn.relu(x + y)
+
+    def macs(self, in_shape: Shape) -> float:
+        c1, c2 = self._convs()
+        m = c1.macs(in_shape)
+        s1 = c1.out_shape(in_shape)
+        m += c2.macs(s1)
+        if in_shape[-1] != self.features or self.stride != 1:
+            m += Conv(self.features, 1, self.stride).macs(in_shape)
+        return m
+
+
+# ---------------------------------------------------------------------------
+# Sequential container
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Sequential:
+    layers: Tuple
+
+    def init(self, key, in_shape: Shape):
+        params = []
+        shape = in_shape
+        keys = jax.random.split(key, max(1, len(self.layers)))
+        for lyr, k in zip(self.layers, keys):
+            p, shape = lyr.init(k, shape)
+            params.append(p)
+        return params, shape
+
+    def apply(self, params, x):
+        for lyr, p in zip(self.layers, params):
+            x = lyr.apply(p, x)
+        return x
+
+    def out_shape(self, in_shape: Shape) -> Shape:
+        shape = in_shape
+        for lyr in self.layers:
+            shape = lyr.out_shape(shape)
+        return shape
+
+    def macs(self, in_shape: Shape) -> float:
+        total = 0.0
+        shape = in_shape
+        for lyr in self.layers:
+            total += lyr.macs(shape)
+            shape = lyr.out_shape(shape)
+        return total

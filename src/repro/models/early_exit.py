@@ -1,0 +1,80 @@
+"""Early exits for LM backbones — the paper's technique at LM scale.
+
+An exit sits at a period boundary: RMSNorm + LM head.  By default the head is
+*tied* to the final LM head (standard for early-exit LMs — CALM/LITE style —
+and essential at 100k+ vocab where per-exit heads would dominate parameters);
+``tied=False`` gives each exit its own head (the paper's CNN exits are
+untied, but their heads are tiny).
+
+``confidence``: max-softmax-probability per position — the gating statistic.
+The fused Pallas kernel (kernels/ee_gate) computes it without materializing
+softmax over the full (padded) vocab; ``confidence_ref`` here is its oracle.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+from .layers import F32, lm_head_apply, lm_head_init, rmsnorm, rmsnorm_init
+
+
+def exit_head_init(key, cfg: ArchConfig, dtype, *, tied: bool = True) -> dict:
+    params = {"norm": rmsnorm_init(cfg.d_model, dtype)}
+    if not tied:
+        params["head"] = lm_head_init(key, cfg.d_model, cfg.padded_vocab, dtype)
+    return params
+
+
+def exit_head_apply(params: dict, cfg: ArchConfig, h: jnp.ndarray,
+                    lm_head_params: dict) -> jnp.ndarray:
+    """h: [B,S,d] -> logits [B,S,V_pad] (fp32, padded tail = -inf)."""
+    hn = rmsnorm(params["norm"], h, cfg.norm_eps)
+    head = params.get("head", lm_head_params)
+    return lm_head_apply(head, hn, cfg.vocab_size)
+
+
+def confidence_ref(logits: jnp.ndarray) -> jnp.ndarray:
+    """Max softmax probability per position (oracle for kernels/ee_gate)."""
+    x = jnp.where(jnp.isfinite(logits), logits, -1e30).astype(F32)
+    m = x.max(axis=-1)
+    lse = m + jnp.log(jnp.exp(x - m[..., None]).sum(axis=-1))
+    return jnp.exp(x.max(axis=-1) - lse)
+
+
+def gate_decisions(logits: jnp.ndarray, threshold: float) -> jnp.ndarray:
+    """True where the sample may exit here (confidence >= threshold)."""
+    return confidence_ref(logits) >= threshold
+
+
+def exit_statistics(exit_logits: Dict[str, jnp.ndarray],
+                    thresholds: Dict[str, float]) -> Dict[str, jnp.ndarray]:
+    """Per-exit capture masks with first-exit-wins semantics.
+
+    Returns {exit_name: bool [B, ...]}: which samples exit at each point.
+    The empirical capture fractions are the phi of the paper's Plane 2."""
+    names = sorted(exit_logits.keys())
+    decided = None
+    out = {}
+    for name in names:
+        can = gate_decisions(exit_logits[name], thresholds.get(name, 1.1))
+        take = can if decided is None else (can & ~decided)
+        out[name] = take
+        decided = take if decided is None else (decided | take)
+    return out
+
+
+def measure_phi(exit_masks: Dict[str, jnp.ndarray]) -> Dict[str, float]:
+    """Empirical phi per exit (feeds core.DNNProfile for FIN placement)."""
+    names = sorted(exit_masks.keys())
+    total = None
+    phi = {}
+    for name in names:
+        m = exit_masks[name].astype(F32)
+        phi[name] = float(m.mean())
+    rem = 1.0 - sum(phi.values())
+    phi["final"] = max(0.0, rem)
+    return phi

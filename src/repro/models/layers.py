@@ -1,0 +1,172 @@
+"""Shared transformer layers: norms, RoPE, SwiGLU MLP, embeddings.
+
+Functional style: every layer is (init(key, cfg) -> params, apply(params, x)).
+All matmuls accumulate in fp32 (``preferred_element_type``) regardless of the
+bf16 parameter/activation dtype.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+F32 = jnp.float32
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+def dense_init(key, shape, fan_in, dtype):
+    return (jax.random.normal(key, shape, F32) / math.sqrt(fan_in)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(F32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=F32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x: [..., S, H, D]; positions: [..., S] int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                          # [D/2]
+    angles = positions[..., None].astype(F32) * freqs     # [..., S, D/2]
+    cos = jnp.cos(angles)[..., None, :]                   # [..., S, 1, D/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), d_model, dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), d_model, dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), d_ff, dtype),
+    }
+
+
+def mlp_apply(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"],
+                   preferred_element_type=F32)
+    u = jnp.einsum("...d,df->...f", x, params["w_up"],
+                   preferred_element_type=F32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, params["w_down"],
+                      preferred_element_type=F32).astype(x.dtype)
+
+
+def mlp_flops(d_model: int, d_ff: int) -> float:
+    return 3 * 2 * d_model * d_ff  # per token
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab_padded: int, d_model: int, dtype) -> dict:
+    return {"table": dense_init(key, (vocab_padded, d_model), d_model, dtype)}
+
+
+def embed_apply(params: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def lm_head_init(key, d_model: int, vocab_padded: int, dtype) -> dict:
+    return {"w": dense_init(key, (d_model, vocab_padded), d_model, dtype)}
+
+
+def lm_head_apply(params: dict, x: jnp.ndarray, vocab_size: int,
+                  ) -> jnp.ndarray:
+    """Logits with padded-vocab tail masked to -inf (fp32)."""
+    logits = jnp.einsum("...d,dv->...v", x, params["w"],
+                        preferred_element_type=F32)
+    v_pad = params["w"].shape[-1]
+    if v_pad != vocab_size:
+        mask = jnp.arange(v_pad) < vocab_size
+        logits = jnp.where(mask, logits, -jnp.inf)
+    return logits
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  z_loss: float = 0.0) -> jnp.ndarray:
+    """Mean CE over all positions; logits fp32 [..., V], labels int [...]."""
+    lse = jax.scipy.special.logsumexp(
+        jnp.where(jnp.isfinite(logits), logits, -1e30), axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = (lse - gold).mean()
+    if z_loss:
+        loss = loss + z_loss * (lse ** 2).mean()
+    return loss
+
+
+def chunked_cross_entropy(h: jnp.ndarray, head_w: jnp.ndarray,
+                          labels: jnp.ndarray, vocab_size: int,
+                          *, chunk: int = 256) -> jnp.ndarray:
+    """Mean CE without materializing full-sequence logits.
+
+    ``h``: pre-head hidden states [B, S, d]; ``head_w``: [d, V_pad].  Scans
+    over sequence chunks; each chunk's logits ([B, chunk, V_pad]) live only
+    inside the (rematerialized) scan body.  This keeps peak memory at
+    O(B * chunk * V_pad / model_shards) instead of O(B * S * V_pad) — at
+    150k vocab and 4k seq the difference is ~40 GB/chip (see DESIGN.md).
+    The gold logit is extracted with a one-hot contraction (vocab-sharding
+    friendly), not a gather.
+    """
+    B, S, d = h.shape
+    V = head_w.shape[-1]
+    if S % chunk:
+        pad = chunk - S % chunk
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        S += pad
+    n = S // chunk
+    hc = h.reshape(B, n, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        hcur, lcur = inp
+        logits = jnp.einsum("bsd,dv->bsv", hcur, head_w,
+                            preferred_element_type=F32)
+        vmask = jnp.arange(V) < vocab_size
+        logits = jnp.where(vmask, logits, -1e30)
+        m = jax.lax.stop_gradient(logits.max(axis=-1))
+        lse = m + jnp.log(jnp.exp(logits - m[..., None]).sum(axis=-1))
+        oh = jax.nn.one_hot(jnp.maximum(lcur, 0), V, dtype=logits.dtype)
+        gold = (logits * oh).sum(axis=-1)
+        valid = (lcur >= 0).astype(F32)
+        return (carry[0] + ((lse - gold) * valid).sum(),
+                carry[1] + valid.sum()), None
+
+    body = jax.checkpoint(body)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), F32),
+                                        jnp.zeros((), F32)), (hc, lc))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,152 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity, two dispatch impls.
+
+``gather`` (default): per-group expert-choice-style dispatch — each token
+group selects its top-C tokens per expert (capacity C = t*k*cf/E), gathers
+them into dense [E, C, d] blocks, runs the expert SwiGLU matmuls, and
+scatter-adds the weighted results back.  Groups align with data shards
+(G axis sharded on "data"), so under expert parallelism the [G, E, C, d]
+dispatch tensor reshards E across the "model" axis — exactly the all-to-all
+of real EP systems.  Router FLOPs + expert FLOPs only; no O(T*E*C*d)
+dispatch einsum.
+
+``einsum``: the literal GShard dispatch (one-hot [t, E, C] einsums) — kept
+for small-scale fidelity tests; its dispatch FLOPs scale as O(T*E*C*d) and
+would dominate the roofline at production scale (see DESIGN.md Sec. 7).
+
+Top-k gates are renormalized over the selected experts (Mixtral convention).
+``moe_dense_residual`` adds a parallel dense SwiGLU branch (Snowflake Arctic).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+from .layers import F32, dense_init, mlp_apply, mlp_init
+
+
+def moe_init(key, cfg: ArchConfig, dtype) -> dict:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    params = {
+        "router": dense_init(k1, (d, E), d, F32),
+        "w_gate": dense_init(k2, (E, d, ff), d, dtype),
+        "w_up": dense_init(k3, (E, d, ff), d, dtype),
+        "w_down": dense_init(k4, (E, ff, d), ff, dtype),
+    }
+    if cfg.moe_dense_residual:
+        dff = cfg.dense_residual_d_ff or 2 * d
+        params["dense_residual"] = mlp_init(k5, d, dff, dtype)
+    return params
+
+
+def _capacity(tokens_per_group: int, cfg: ArchConfig) -> int:
+    c = int(tokens_per_group * cfg.top_k * cfg.capacity_factor
+            / max(1, cfg.n_experts))
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def _route(params, cfg: ArchConfig, xg):
+    """xg: [G, t, d] -> (probs [G,t,E] f32, topk gates/ids [G,t,k])."""
+    logits = jnp.einsum("gtd,de->gte", xg.astype(F32), params["router"],
+                        preferred_element_type=F32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, cfg.top_k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)          # renormalize
+    return probs, gate_vals, expert_ids
+
+
+def _moe_gather(params, cfg: ArchConfig, xg):
+    """Gather-based dispatch. xg: [G, t, d] -> [G, t, d]."""
+    G, t, d = xg.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = _capacity(t, cfg)
+    probs, gate_vals, expert_ids = _route(params, cfg, xg)
+
+    # per-(token, expert) renormalized gate, 0 where not selected: [G, t, E]
+    sel = jax.nn.one_hot(expert_ids, E, dtype=F32)       # [G,t,k,E]
+    gate_te = jnp.einsum("gtke,gtk->gte", sel, gate_vals)
+
+    # each expert takes its top-C tokens by gate weight within the group
+    scores_et = jnp.swapaxes(gate_te, 1, 2)              # [G,E,t]
+    top_w, top_idx = jax.lax.top_k(scores_et, min(C, t))  # [G,E,C]
+    valid = top_w > 0.0
+
+    xe = jnp.take_along_axis(xg[:, None, :, :],          # [G,1,t,d]
+                             top_idx[..., None], axis=2)  # [G,E,C,d]
+    xe = xe * valid[..., None].astype(xg.dtype)
+
+    h_g = jnp.einsum("gecd,edf->gecf", xe, params["w_gate"],
+                     preferred_element_type=F32)
+    h_u = jnp.einsum("gecd,edf->gecf", xe, params["w_up"],
+                     preferred_element_type=F32)
+    h = (jax.nn.silu(h_g) * h_u).astype(xg.dtype)
+    ye = jnp.einsum("gecf,efd->gecd", h, params["w_down"],
+                    preferred_element_type=F32)           # [G,E,C,d] f32
+    ye = ye * (top_w * valid)[..., None]
+
+    # scatter-add back to token positions, *within* each group (vmap keeps
+    # the group axis, so the result stays sharded on "data" — a flat global
+    # scatter would force GSPMD to materialize [G*t, d] unsharded)
+    def scatter_group(idx, contrib):
+        return jnp.zeros((t, d), F32).at[idx.reshape(-1)].add(
+            contrib.reshape(-1, d))
+
+    y = jax.vmap(scatter_group)(top_idx, ye)              # [G, t, d]
+    return y.astype(xg.dtype)
+
+
+def _moe_einsum(params, cfg: ArchConfig, xg):
+    """Literal GShard one-hot dispatch (small-scale fidelity reference)."""
+    G, t, d = xg.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = _capacity(t, cfg)
+    probs, gate_vals, expert_ids = _route(params, cfg, xg)
+    sel = jax.nn.one_hot(expert_ids, E, dtype=F32)        # [G,t,k,E]
+    # position of each (token, choice) in its expert's buffer
+    flat = sel.reshape(G, t * k, E)
+    pos = jnp.cumsum(flat, axis=1) * flat - 1.0           # [G,t*k,E]
+    pos = pos.reshape(G, t, k, E)
+    keep = (pos >= 0) & (pos < C)
+    pos_oh = jax.nn.one_hot(pos, C, dtype=F32) * keep[..., None]
+    dispatch = jnp.einsum("gtke,gtkec->gtec", sel, pos_oh)      # [G,t,E,C]
+    combine = jnp.einsum("gtec,gtke->gtec", dispatch,
+                         sel * gate_vals[..., None])
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch.astype(xg.dtype), xg,
+                    preferred_element_type=F32).astype(xg.dtype)
+    h_g = jnp.einsum("gecd,edf->gecf", xe, params["w_gate"],
+                     preferred_element_type=F32)
+    h_u = jnp.einsum("gecd,edf->gecf", xe, params["w_up"],
+                     preferred_element_type=F32)
+    h = (jax.nn.silu(h_g) * h_u).astype(xg.dtype)
+    ye = jnp.einsum("gecf,efd->gecd", h, params["w_down"],
+                    preferred_element_type=F32)
+    y = jnp.einsum("gtec,gecd->gtd", combine, ye)
+    return y.astype(xg.dtype)
+
+
+def moe_apply(params, cfg: ArchConfig, x, *, n_groups: int = 0) -> jnp.ndarray:
+    """x: [B, S, d] -> [B, S, d].  Groups default to the batch dim (so the
+    group axis inherits the batch's data sharding)."""
+    B, S, d = x.shape
+    G = n_groups or B
+    xg = x.reshape(G, (B * S) // G, d)
+    fn = _moe_gather if cfg.moe_impl == "gather" else _moe_einsum
+    y = fn(params, cfg, xg).reshape(B, S, d)
+    if cfg.moe_dense_residual:
+        y = y + mlp_apply(params["dense_residual"], x)
+    return y
+
+
+def moe_flops_per_token(cfg: ArchConfig) -> float:
+    """Active-parameter FLOPs per token (router + top-k experts + residual)."""
+    d, ff = cfg.d_model, cfg.d_ff
+    f = 2 * d * cfg.n_experts                   # router
+    f += cfg.top_k * 3 * 2 * d * ff             # expert SwiGLU
+    if cfg.moe_dense_residual:
+        f += 3 * 2 * d * (cfg.dense_residual_d_ff or 2 * d)
+    return f

@@ -1,0 +1,224 @@
+"""Mamba-2 (SSD, state-space duality) mixer block.
+
+Chunked SSD algorithm (train/prefill): the sequence is split into chunks of
+length Q; within a chunk the recurrence is computed in its quadratic "dual"
+form (MXU-friendly einsums), across chunks a [B, H, P, N] state is carried by
+a lax.scan — exactly the structure of arXiv:2405.21060 with n_groups=1 and a
+scalar decay per head.  Decode runs the O(1) recurrent step on a cached state.
+
+  h_t = a_t * h_{t-1} + dt_t * x_t (x) B_t        a_t = exp(-exp(A_log) dt_t)
+  y_t = C_t . h_t + D * x_t
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+from .layers import F32, dense_init, rmsnorm, rmsnorm_init
+
+
+def ssm_dims(cfg: ArchConfig) -> Tuple[int, int, int, int]:
+    """(d_inner, n_heads, head_dim, state)."""
+    d_inner = cfg.ssm_expand * cfg.d_model
+    P = cfg.ssm_head_dim
+    assert d_inner % P == 0
+    return d_inner, d_inner // P, P, cfg.ssm_state
+
+
+def _head_constraint(cfg: ArchConfig, x, head_axis: int):
+    """TP for SSD inner dims: shard the head dimension across "model".
+
+    Without this, every device computes the full d_inner-wide SSD replicated
+    across the model axis (16x wasted compute AND the dominant activation-
+    memory term for hybrid archs — see EXPERIMENTS.md §Perf/jamba)."""
+    if not cfg.ssm_head_shard:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.context import current
+    ctx = current()
+    if ctx is None or not ctx.model_axis:
+        return x
+    if x.shape[head_axis] % ctx.model_size:
+        return x
+    spec = [None] * x.ndim
+    spec[0] = ctx.dp_axes
+    spec[head_axis] = ctx.model_axis
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def ssm_init(key, cfg: ArchConfig, dtype) -> dict:
+    d = cfg.d_model
+    di, H, P, N = ssm_dims(cfg)
+    w = cfg.ssm_conv_width
+    conv_ch = di + 2 * N
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        # order: [z (di), conv channels (di + 2N), dt (H)]
+        "in_proj": dense_init(k1, (d, 2 * di + 2 * N + H), d, dtype),
+        "conv_w": dense_init(k2, (w, conv_ch), w, dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((H,), F32),
+        "D": jnp.ones((H,), F32),
+        "dt_bias": jnp.zeros((H,), F32),
+        "norm": rmsnorm_init(di, dtype),
+        "out_proj": dense_init(k3, (di, d), di, dtype),
+    }
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt):
+    di, H, P, N = ssm_dims(cfg)
+    z, conv_in, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
+    return z, conv_in, dt
+
+
+def _causal_conv(conv_w, conv_b, x):
+    """Depthwise causal conv along time. x: [B,S,C]; conv_w: [w,C]."""
+    w = conv_w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * conv_w[i] for i in range(w))
+    return jax.nn.silu((out + conv_b).astype(F32)).astype(x.dtype)
+
+
+def _ssd_scan(cfg: ArchConfig, xh, Bm, Cm, dt, a_log):
+    """Chunked SSD. xh: [B,S,H,P]; Bm/Cm: [B,S,N]; dt: [B,S,H] (post-softplus);
+    a_log: [B,S,H] = log a_t (negative).  Returns y: [B,S,H,P]."""
+    Bsz, S, H, P = xh.shape
+    S_orig = S
+    N = Bm.shape[-1]
+    Q = min(cfg.ssm_chunk, S)
+    if S % Q:
+        pad = Q - S % Q
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+        S += pad
+    n_chunks = S // Q
+
+    def to_chunks(t, extra_dims):
+        return t.reshape((Bsz, n_chunks, Q) + extra_dims).transpose(
+            (1, 0, 2) + tuple(range(3, 3 + len(extra_dims))))
+
+    xc = to_chunks(xh, (H, P))          # [n,B,Q,H,P]
+    bc = to_chunks(Bm, (N,))            # [n,B,Q,N]
+    cc = to_chunks(Cm, (N,))
+    dtc = to_chunks(dt, (H,))           # [n,B,Q,H]
+    alc = to_chunks(a_log, (H,))
+
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def step(state, inp):
+        x, b, c, d_t, al = inp
+        la = jnp.cumsum(al, axis=1)                        # [B,Q,H]
+        xdt = x * d_t[..., None]                           # [B,Q,H,P]
+        # intra-chunk (quadratic dual form)
+        G = jnp.einsum("bqn,bsn->bqs", c, b, preferred_element_type=F32)
+        seg = jnp.exp(la[:, :, None, :] - la[:, None, :, :])   # [B,q,s,H]
+        seg = jnp.where(causal[None, :, :, None], seg, 0.0)
+        M = G[..., None] * seg                              # [B,q,s,H]
+        y_intra = jnp.einsum("bqsh,bshp->bqhp", M, xdt,
+                             preferred_element_type=F32)
+        # inter-chunk via carried state
+        y_inter = jnp.einsum("bqn,bhpn,bqh->bqhp", c, state, jnp.exp(la),
+                             preferred_element_type=F32)
+        # state update
+        la_last = la[:, -1:, :]                             # [B,1,H]
+        decay_rest = jnp.exp(la_last - la)                  # [B,Q,H]
+        chunk_state = jnp.einsum("bqhp,bqn,bqh->bhpn", xdt, b, decay_rest,
+                                 preferred_element_type=F32)
+        state = state * jnp.exp(la_last)[:, 0, :, None, None] + chunk_state
+        return state, (y_intra + y_inter).astype(xh.dtype)
+
+    state0 = _head_constraint(cfg, jnp.zeros((Bsz, H, P, N), F32), 1)
+    final_state, ys = jax.lax.scan(step, state0, (xc, bc, cc, dtc, alc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, S, H, P)
+    return y[:, :S_orig], final_state
+
+
+def ssm_apply_with_state(params, cfg: ArchConfig, x
+                         ) -> Tuple[jnp.ndarray, dict]:
+    """Full-sequence SSD mixer; also returns the decode cache
+    {"state": [B,H,P,N] fp32, "conv": [B,w-1,C]} for prefill."""
+    di, H, P, N = ssm_dims(cfg)
+    w = cfg.ssm_conv_width
+    S_in = x.shape[1]
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"],
+                        preferred_element_type=F32).astype(x.dtype)
+    z, conv_in, dt_raw = _split_proj(cfg, zxbcdt)
+    conv_out = _causal_conv(params["conv_w"], params["conv_b"], conv_in)
+    xs, Bm, Cm = jnp.split(conv_out, [di, di + N], axis=-1)
+    xh = xs.reshape(x.shape[0], S_in, H, P)
+    xh = _head_constraint(cfg, xh, 2)
+    dt = jax.nn.softplus(dt_raw.astype(F32) + params["dt_bias"])
+    dt = _head_constraint(cfg, dt, 2)
+    a_log = -jnp.exp(params["A_log"])[None, None, :] * dt    # log a_t
+    y, final_state = _ssd_scan(cfg, xh, Bm, Cm, dt, a_log)
+    y = y[:, :S_in]
+    y = y + xh * params["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(x.shape[0], S_in, di)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z.astype(F32)).astype(x.dtype),
+                cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"],
+                     preferred_element_type=F32).astype(x.dtype)
+    # conv cache: last w-1 *pre-conv* channel inputs
+    pad = max(0, (w - 1) - S_in)
+    tail = conv_in[:, -(w - 1):, :] if S_in >= w - 1 else jnp.pad(
+        conv_in, ((0, 0), (pad, 0), (0, 0)))
+    return out, {"state": final_state, "conv": tail}
+
+
+def ssm_apply(params, cfg: ArchConfig, x, positions=None) -> jnp.ndarray:
+    """Full-sequence SSD mixer. x: [B,S,d] -> [B,S,d]."""
+    return ssm_apply_with_state(params, cfg, x)[0]
+
+
+# ---------------------------------------------------------------------------
+# Decode (recurrent step)
+# ---------------------------------------------------------------------------
+
+def ssm_cache_shape(cfg: ArchConfig, batch: int):
+    di, H, P, N = ssm_dims(cfg)
+    w = cfg.ssm_conv_width
+    return {"state": (batch, H, P, N), "conv": (batch, w - 1, di + 2 * N)}
+
+
+def ssm_cache_init(cfg: ArchConfig, batch: int, dtype):
+    shapes = ssm_cache_shape(cfg, batch)
+    return {"state": jnp.zeros(shapes["state"], F32),
+            "conv": jnp.zeros(shapes["conv"], dtype)}
+
+
+def ssm_decode_step(params, cfg: ArchConfig, x, cache: dict
+                    ) -> Tuple[jnp.ndarray, dict]:
+    """x: [B,1,d]; cache: {"state": [B,H,P,N] fp32, "conv": [B,w-1,C]}."""
+    di, H, P, N = ssm_dims(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"],
+                        preferred_element_type=F32).astype(x.dtype)
+    z, conv_in, dt_raw = _split_proj(cfg, zxbcdt)
+    # causal conv over [cached w-1 inputs, current]
+    hist = jnp.concatenate([cache["conv"], conv_in], axis=1)   # [B,w,C]
+    conv_out = jnp.einsum("bwc,wc->bc", hist, params["conv_w"]) \
+        + params["conv_b"]
+    conv_out = jax.nn.silu(conv_out.astype(F32)).astype(x.dtype)[:, None, :]
+    new_conv = hist[:, 1:, :]
+    xs, Bm, Cm = jnp.split(conv_out, [di, di + N], axis=-1)
+    xh = xs.reshape(x.shape[0], H, P)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(F32) + params["dt_bias"])  # [B,H]
+    a = jnp.exp(-jnp.exp(params["A_log"])[None, :] * dt)                # [B,H]
+    xdt = xh.astype(F32) * dt[..., None]
+    state = (cache["state"] * a[:, :, None, None]
+             + jnp.einsum("bhp,bn->bhpn", xdt, Bm[:, 0].astype(F32)))
+    y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(F32), state)
+    y = y + xh.astype(F32) * params["D"][None, :, None]
+    y = y.reshape(x.shape[0], 1, di).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z.astype(F32)).astype(x.dtype),
+                cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"],
+                     preferred_element_type=F32).astype(x.dtype)
+    return out, {"state": state, "conv": new_conv}

@@ -1,0 +1,6 @@
+"""Optimizers and gradient utilities (pure JAX)."""
+from .adamw import (AdamW, AdamWState, clip_by_global_norm, compress_grads,
+                    cosine_schedule, decompress_grads, global_norm)
+
+__all__ = ["AdamW", "AdamWState", "clip_by_global_norm", "compress_grads",
+           "cosine_schedule", "decompress_grads", "global_norm"]

@@ -1,0 +1,123 @@
+"""AdamW in pure JAX (pytree-native), with optional bf16 state and
+gradient-compression hooks for the distributed roofline experiments."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray          # scalar int32
+    mu: dict                   # first moment (pytree like params)
+    nu: dict                   # second moment
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    #: fp32 moments by default; bf16 halves optimizer memory (jamba/arctic
+    #: configs) at the cost of moment precision (TPU stochastic rounding is
+    #: the production mitigation; documented in DESIGN.md).
+    state_dtype: Optional[str] = None
+    schedule: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None
+
+    def _sdtype(self, p):
+        if self.state_dtype is None:
+            return jnp.float32
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[
+            self.state_dtype]
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, self._sdtype(p))
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree.map(zeros, params),
+                          nu=jax.tree.map(zeros, params))
+
+    def update(self, grads, state: AdamWState, params
+               ) -> Tuple[dict, AdamWState]:
+        step = state.step + 1
+        lr = self.lr if self.schedule is None else self.lr * self.schedule(step)
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            mh = m_new / bc1
+            vh = v_new / bc2
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            delta = delta + self.weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr * delta
+            return (p_new.astype(p.dtype), m_new.astype(m.dtype),
+                    v_new.astype(v.dtype))
+
+        out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+        p_new = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+        nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+        return p_new, AdamWState(step=step, mu=mu, nu=nu)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (n + 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale
+                                   ).astype(x.dtype), tree), n
+
+
+def cosine_schedule(warmup: int, total: int) -> Callable:
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, s / max(1, warmup))
+        prog = jnp.clip((s - warmup) / max(1, total - warmup), 0.0, 1.0)
+        return warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression (distributed-optimization trick; DESIGN.md Sec. 5).
+# Applied before the (pseudo-)all-reduce: casting gradients to bf16 halves
+# DP collective bytes; int8 with per-tensor scale quarters them.  The
+# roofline collective term quantifies the saving (see EXPERIMENTS.md §Perf).
+# ---------------------------------------------------------------------------
+
+def compress_grads(grads, mode: str):
+    if mode == "none":
+        return grads
+    if mode == "bf16":
+        return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+    if mode == "int8":
+        def q(g):
+            gf = g.astype(jnp.float32)
+            scale = jnp.maximum(jnp.abs(gf).max(), 1e-12) / 127.0
+            return (jnp.round(gf / scale).astype(jnp.int8), scale)
+        return jax.tree.map(q, grads)
+    raise ValueError(mode)
+
+
+def decompress_grads(grads, mode: str):
+    if mode in ("none", "bf16"):
+        return grads
+    if mode == "int8":
+        return jax.tree.map(
+            lambda t: t[0].astype(jnp.float32) * t[1],
+            grads, is_leaf=lambda t: isinstance(t, tuple))
+    raise ValueError(mode)

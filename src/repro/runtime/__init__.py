@@ -1,0 +1,1 @@
+"""Runtime: training loop, split-serving engine, checkpointing, fault tolerance."""

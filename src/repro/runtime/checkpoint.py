@@ -1,0 +1,133 @@
+"""Checkpointing: atomic, step-tagged pytree save/restore with zstd.
+
+Layout:   <dir>/step_<N>/ { manifest.json, arrays.npz.zst }
+Writes go to a temp dir + atomic rename, so a crash mid-save never corrupts
+the latest checkpoint (fault-tolerance requirement, DESIGN.md Sec. 5).
+``restore_latest`` resumes from the newest complete checkpoint; damaged or
+partial directories are skipped.
+"""
+from __future__ import annotations
+
+import io
+import json
+import os
+import pathlib
+import shutil
+import tempfile
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+import zstandard
+
+MANIFEST = "manifest.json"
+ARRAYS = "arrays.npz.zst"
+
+
+def _flatten(tree) -> Tuple[List[Tuple[str, np.ndarray]], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(
+            p, "name", p)))) for p in path)
+        out.append((key, np.asarray(leaf)))
+    return out, treedef
+
+
+def _to_storable(v: np.ndarray) -> np.ndarray:
+    """bf16 (ml_dtypes) does not survive npz — store as a uint16 view."""
+    if v.dtype.kind == "V" or str(v.dtype) == "bfloat16":
+        return v.view(np.uint16)
+    return v
+
+
+def _from_storable(arr: np.ndarray, dtype_str: str) -> np.ndarray:
+    if dtype_str == "bfloat16" and arr.dtype == np.uint16:
+        import ml_dtypes
+        return arr.view(ml_dtypes.bfloat16)
+    return arr
+
+
+def save(ckpt_dir: str, step: int, tree, *, keep: int = 3,
+         extra: Optional[Dict] = None) -> str:
+    """Atomically write ``tree`` as step ``step``; prune old checkpoints."""
+    base = pathlib.Path(ckpt_dir)
+    base.mkdir(parents=True, exist_ok=True)
+    flat, _ = _flatten(tree)
+
+    buf = io.BytesIO()
+    np.savez(buf, **{k: _to_storable(v) for k, v in flat})
+    comp = zstandard.ZstdCompressor(level=3).compress(buf.getvalue())
+
+    manifest = {
+        "step": int(step),
+        "time": time.time(),
+        "keys": [k for k, _ in flat],
+        "dtypes": {k: str(v.dtype) for k, v in flat},
+        "shapes": {k: list(v.shape) for k, v in flat},
+        "extra": extra or {},
+    }
+    tmp = tempfile.mkdtemp(dir=base, prefix=".tmp_")
+    try:
+        (pathlib.Path(tmp) / ARRAYS).write_bytes(comp)
+        (pathlib.Path(tmp) / MANIFEST).write_text(json.dumps(manifest))
+        final = base / f"step_{step:012d}"
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _prune(base, keep)
+    return str(final)
+
+
+def _prune(base: pathlib.Path, keep: int) -> None:
+    steps = sorted(p for p in base.iterdir()
+                   if p.is_dir() and p.name.startswith("step_"))
+    for p in steps[:-keep]:
+        shutil.rmtree(p, ignore_errors=True)
+
+
+def _complete(p: pathlib.Path) -> bool:
+    return (p / MANIFEST).exists() and (p / ARRAYS).exists()
+
+
+def available_steps(ckpt_dir: str) -> List[int]:
+    base = pathlib.Path(ckpt_dir)
+    if not base.exists():
+        return []
+    out = []
+    for p in sorted(base.iterdir()):
+        if p.is_dir() and p.name.startswith("step_") and _complete(p):
+            out.append(int(p.name.split("_")[1]))
+    return out
+
+
+def restore(ckpt_dir: str, step: int, like):
+    """Restore into the structure of ``like`` (a pytree of arrays/shapes)."""
+    base = pathlib.Path(ckpt_dir) / f"step_{step:012d}"
+    raw = zstandard.ZstdDecompressor().decompress(
+        (base / ARRAYS).read_bytes())
+    arrays = dict(np.load(io.BytesIO(raw)))
+    manifest = json.loads((base / MANIFEST).read_text())
+    flat, treedef = _flatten(like)
+    leaves = []
+    for key, ref in flat:
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = _from_storable(arrays[key], manifest["dtypes"].get(key, ""))
+        if list(arr.shape) != list(ref.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {ref.shape}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def restore_latest(ckpt_dir: str, like) -> Optional[Tuple[int, Any]]:
+    for step in reversed(available_steps(ckpt_dir)):
+        try:
+            return step, restore(ckpt_dir, step, like)
+        except Exception:
+            continue  # damaged checkpoint: fall back to the previous one
+    return None

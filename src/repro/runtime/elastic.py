@@ -1,0 +1,91 @@
+"""Elastic scaling: recover a valid production mesh after chip/pod loss.
+
+On a real fleet, losing a host shrinks the usable device set.  This module
+picks the best replacement mesh (largest chip count whose (data, model)
+factorization keeps every sharded dimension divisible), and emits a re-shard
+plan: which axes change and the collective cost of the migration.  Together
+with checkpoint/restart (runtime/checkpoint.py) and FIN re-placement
+(core/system_model.without_node), this is the framework's elasticity story
+(DESIGN.md Sec. 5): train state is restored from the latest checkpoint under
+the new mesh's shardings — resharding happens at load time for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+from repro.configs.base import ArchConfig
+
+
+@dataclass(frozen=True)
+class MeshPlan:
+    data: int
+    model: int
+    pods: int = 1
+
+    @property
+    def chips(self) -> int:
+        return self.data * self.model * self.pods
+
+
+def _divisible_ok(cfg: ArchConfig, model: int) -> bool:
+    """Is a model-axis of this size compatible with the config's dims?"""
+    if cfg.parallelism_mode == "pure_dp":
+        return True
+    if cfg.padded_vocab % model:
+        return False
+    if cfg.d_ff and cfg.d_ff % model:
+        return False
+    if cfg.d_model % model:
+        return False
+    return True
+
+
+def candidate_meshes(cfg: ArchConfig, chips_available: int,
+                     *, min_data: int = 1) -> List[MeshPlan]:
+    """All (data, model) factorizations of <= chips_available that satisfy
+    the config's divisibility constraints, best (largest, most data) first."""
+    out: List[MeshPlan] = []
+    for total in range(chips_available, 0, -1):
+        for model in range(1, total + 1):
+            if total % model:
+                continue
+            data = total // model
+            if data < min_data:
+                continue
+            if _divisible_ok(cfg, model):
+                out.append(MeshPlan(data=data, model=model))
+        if out:
+            break  # largest usable chip count found
+    out.sort(key=lambda m: (-m.chips, -m.data))
+    return out
+
+
+@dataclass
+class ReshardPlan:
+    old: MeshPlan
+    new: MeshPlan
+    #: parameter bytes that must move (everything whose shard size changes)
+    moved_bytes: float
+    #: whether the global batch stays divisible (else grad-accum changes)
+    batch_ok: bool
+
+
+def plan_rescale(cfg: ArchConfig, old: MeshPlan, chips_available: int,
+                 *, param_bytes: float, global_batch: int) -> Optional[ReshardPlan]:
+    """Pick the best new mesh after degradation and cost the migration."""
+    cands = candidate_meshes(cfg, chips_available)
+    if not cands:
+        return None
+    new = cands[0]
+    # if the model axis changes, every model-sharded tensor reshards (all
+    # bytes move once); if only data shrinks, ZeRO shards re-balance (only
+    # the delta moves).
+    if new.model != old.model:
+        moved = param_bytes
+    else:
+        frac = abs(new.data - old.data) / max(old.data, 1)
+        moved = param_bytes * min(1.0, frac)
+    return ReshardPlan(old=old, new=new, moved_bytes=moved,
+                       batch_ok=global_batch % (new.data * new.pods) == 0)

@@ -1,0 +1,208 @@
+"""Split-serving engine: exit-aware continuous batching over a FIN placement.
+
+This is the TPU-native adaptation of the paper's execution model
+(DESIGN.md Sec. 3): SPMD cannot stop computing individual batch lanes, so
+per-sample early exits are realized as *scheduling*:
+
+  * every decode step runs the full stack once for the active batch;
+  * the fused gate (kernels/ee_gate) scores each exit's logits; a sequence
+    whose confidence clears its threshold takes THAT exit's token — deeper
+    blocks' output for it is discarded;
+  * finished sequences free their slot immediately and the next queued
+    request takes it (continuous batching) — phi-fraction compute saving
+    becomes throughput;
+  * per-token *tier accounting*: with a FIN placement (blocks -> tiers),
+    the engine charges each token only the blocks up to its exit, yielding
+    the measured energy the paper's objective (3a) predicts;
+  * fault tolerance: ``fail_node`` re-solves FIN on the reduced network and
+    the engine continues under the new placement (Sec. V elasticity).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import (AppRequirements, Config, DNNProfile, Network,
+                        evaluate_config, solve_fin)
+from repro.kernels.ee_gate.ops import ee_gate
+from repro.models import transformer as T
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    tokens: List[int] = field(default_factory=list)
+    exits_taken: List[int] = field(default_factory=list)  # exit idx per token
+    done: bool = False
+
+
+@dataclass
+class EngineStats:
+    steps: int = 0
+    tokens_out: int = 0
+    exit_histogram: Dict[int, int] = field(default_factory=dict)
+    blocks_executed: int = 0          # tier-charged block executions
+    blocks_saved: int = 0             # skipped by early exits
+    energy_j: float = 0.0             # placement-model energy (Eq. 2 units)
+    replacements: int = 0             # FIN re-solves after failures
+
+    @property
+    def measured_phi(self) -> Dict[int, float]:
+        tot = max(1, sum(self.exit_histogram.values()))
+        return {k: v / tot for k, v in sorted(self.exit_histogram.items())}
+
+
+class SplitServeEngine:
+    """Decode engine with exit-aware continuous batching.
+
+    Prompts are consumed token-by-token through the decode path (prefill-as-
+    decode keeps slot cache surgery trivial); generation then proceeds with
+    gated exits.  ``placement``/``profile``/``network`` wire the engine to
+    the paper's placement problem for energy accounting; they are optional —
+    without them the engine is a plain continuous-batching server.
+    """
+
+    def __init__(self, cfg: ArchConfig, params, *, batch_size: int,
+                 cache_len: int, thresholds: Optional[Sequence[float]] = None,
+                 network: Optional[Network] = None,
+                 profile: Optional[DNNProfile] = None,
+                 req: Optional[AppRequirements] = None,
+                 gamma: int = 10, seed: int = 0):
+        assert cfg.has_decoder
+        self.cfg = cfg
+        self.params = params
+        self.B = batch_size
+        self.cache_len = cache_len
+        self.n_exits = len(cfg.exit_layer_list) + 1
+        self.thresholds = list(thresholds) if thresholds is not None else \
+            [0.9] * (self.n_exits - 1)
+        self.caches = T.init_caches(cfg, batch_size, cache_len)
+        self._decode = jax.jit(
+            lambda p, c, t, pos: T.decode_step(p, cfg, t, c, pos))
+        self.slots: List[Optional[Request]] = [None] * batch_size
+        self.queue: List[Request] = []
+        self.stats = EngineStats()
+        self.pos = 0
+        self._slot_len = np.zeros(batch_size, np.int32)
+        # placement integration
+        self.network = network
+        self.profile = profile
+        self.app_req = req
+        self.gamma = gamma
+        self.placement: Optional[Config] = None
+        if network is not None and profile is not None and req is not None:
+            sol = solve_fin(network, profile, req, gamma=gamma)
+            assert sol.feasible, "no feasible FIN placement"
+            self.placement = sol.config
+
+    # ------------------------------------------------------------------ API
+    def submit(self, prompt: Sequence[int], max_new_tokens: int) -> Request:
+        r = Request(rid=len(self.queue) + 10_000, prompt=list(prompt),
+                    max_new_tokens=max_new_tokens)
+        self.queue.append(r)
+        return r
+
+    def fail_node(self, node_idx: int) -> None:
+        """Node failure: re-solve the placement on the reduced network."""
+        assert self.network is not None
+        self.network = self.network.without_node(node_idx)
+        sol = solve_fin(self.network, self.profile, self.app_req,
+                        gamma=self.gamma)
+        if not sol.feasible:
+            raise RuntimeError("no feasible placement after failure")
+        self.placement = sol.config
+        self.stats.replacements += 1
+
+    def run(self, *, max_steps: int = 10_000) -> EngineStats:
+        while (any(self.slots) or self.queue) and self.stats.steps < max_steps:
+            self.step()
+        return self.stats
+
+    # ----------------------------------------------------------------- step
+    def _fill_slots(self) -> None:
+        for i in range(self.B):
+            if self.slots[i] is None and self.queue:
+                self.slots[i] = self.queue.pop(0)
+                self._slot_len[i] = 0
+
+    def _charge(self, exit_idx: int) -> None:
+        """Tier accounting for one emitted token at the given exit."""
+        st = self.stats
+        st.exit_histogram[exit_idx] = st.exit_histogram.get(exit_idx, 0) + 1
+        if self.profile is None or self.placement is None:
+            return
+        prof, place = self.profile, self.placement
+        last_block = prof.exits[min(exit_idx, prof.n_exits - 1)].block
+        nw = self.network
+        for b in range(prof.n_blocks):
+            if b <= last_block:
+                st.blocks_executed += 1
+                n = place.placement[min(b, len(place.placement) - 1)]
+                t_comp = prof.block_ops_with_exit(b, prof.n_exits - 1) \
+                    / nw.compute[n]
+                st.energy_j += nw.power_active[n] * t_comp
+                if b < last_block:
+                    n2 = place.placement[min(b + 1, len(place.placement) - 1)]
+                    if n2 != n:
+                        st.energy_j += (nw.e_tx[n] + nw.e_rx[n2]) \
+                            * prof.cut_bits[b]
+            else:
+                st.blocks_saved += 1
+
+    def step(self) -> None:
+        self._fill_slots()
+        if not any(self.slots):
+            return
+        toks = np.zeros((self.B, 1), np.int32)
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue
+            consumed = int(self._slot_len[i])
+            if consumed < len(r.prompt):
+                toks[i, 0] = r.prompt[consumed]
+            else:
+                toks[i, 0] = r.tokens[-1] if r.tokens else r.prompt[-1]
+
+        logits, self.caches, exits = self._decode(
+            self.params, self.caches, jnp.asarray(toks),
+            jnp.int32(self.pos))
+        self.pos += 1
+        self.stats.steps += 1
+
+        # gate every exit with the fused kernel; first-exit-wins
+        confs, args = [], []
+        for j, p_idx in enumerate(self.cfg.exit_layer_list):
+            c, a = ee_gate(exits[f"exit_{p_idx}"])
+            confs.append(np.asarray(c))
+            args.append(np.asarray(a))
+        c_f, a_f = ee_gate(logits)
+        confs.append(np.asarray(c_f))
+        args.append(np.asarray(a_f))
+
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue
+            self._slot_len[i] += 1
+            if self._slot_len[i] < len(r.prompt):
+                continue  # still consuming the prompt
+            exit_idx = self.n_exits - 1
+            for j in range(self.n_exits - 1):
+                if confs[j][i] >= self.thresholds[j]:
+                    exit_idx = j
+                    break
+            token = int(args[exit_idx][i])
+            r.tokens.append(token)
+            r.exits_taken.append(exit_idx)
+            self.stats.tokens_out += 1
+            self._charge(exit_idx)
+            if len(r.tokens) >= r.max_new_tokens:
+                r.done = True
+                self.slots[i] = None   # continuous batching: free the slot

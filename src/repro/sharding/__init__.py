@@ -1,0 +1,6 @@
+"""Partition-spec policies for the production mesh."""
+from .specs import (batch_shardings, cache_spec, caches_shardings, dp_axes,
+                    param_spec, params_shardings, scalar_sharding)
+
+__all__ = ["batch_shardings", "cache_spec", "caches_shardings", "dp_axes",
+           "param_spec", "params_shardings", "scalar_sharding"]

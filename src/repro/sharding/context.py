@@ -1,0 +1,48 @@
+"""Explicit sharding context for model-internal sharding constraints.
+
+Model code (e.g. sequence-parallel activation constraints) must not depend
+on driver details; drivers enter ``activation_sharding(mesh)`` and the model
+queries ``current()``.  Absent a context (unit tests, single-device runs),
+constraints are no-ops.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+_STATE = threading.local()
+
+
+@dataclass(frozen=True)
+class ShardCtx:
+    dp_axes: Tuple[str, ...]
+    model_axis: str
+    model_size: int
+    dp_size: int = 1
+
+
+def current() -> Optional[ShardCtx]:
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh):
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_axes = tuple(a for a in ("pod", "data") if a in axes)
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= axes[a]
+    ctx = ShardCtx(
+        dp_axes=dp_axes,
+        model_axis="model" if "model" in axes else "",
+        model_size=axes.get("model", 1),
+        dp_size=dp_size,
+    )
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = ctx
+    try:
+        yield ctx
+    finally:
+        _STATE.ctx = prev

@@ -1,0 +1,108 @@
+"""Branchy CNN tests: Table III fidelity, gating, training step, profiles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.branchy import (PAPER_MODELS, TABLE_III_FEATURES, b_alexnet,
+                                  b_lenet, b_resnet)
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("name", list(PAPER_MODELS))
+def test_block_features_match_table3(name):
+    m = PAPER_MODELS[name]()
+    shape = m.input_shape
+    feats = []
+    for blk in m.blocks:
+        shape = blk.out_shape(shape)
+        feats.append(int(np.prod(shape)))
+    assert feats == TABLE_III_FEATURES[name]
+
+
+@pytest.mark.parametrize("name", list(PAPER_MODELS))
+def test_forward_shapes_and_finite(name, key):
+    m = PAPER_MODELS[name]()
+    params = m.init(key)
+    x = jax.random.normal(key, (3,) + m.input_shape)
+    logits, feats = m.apply(params, x)
+    assert set(logits) == set(m.exit_blocks())
+    for v in logits.values():
+        assert v.shape == (3, m.n_classes)
+        assert bool(jnp.isfinite(v).all())
+    assert bool(jnp.isfinite(feats).all())
+
+
+def test_partial_execution(key):
+    """up_to_block truncates the chain — the split-computing primitive."""
+    m = b_lenet()
+    params = m.init(key)
+    x = jax.random.normal(key, (2,) + m.input_shape)
+    logits, feats = m.apply(params, x, up_to_block=0)
+    assert set(logits) == {0}
+    full_logits, _ = m.apply(params, x)
+    np.testing.assert_allclose(np.asarray(logits[0]),
+                               np.asarray(full_logits[0]), rtol=1e-6)
+
+
+def test_gated_inference_thresholds(key):
+    """Threshold 0 exits everything at exit-0; threshold >1 never exits early."""
+    m = b_lenet()
+    params = m.init(key)
+    x = jax.random.normal(key, (8,) + m.input_shape)
+    _, idx_all_early = m.infer(params, x, [0.0])
+    assert (np.asarray(idx_all_early) == 0).all()
+    _, idx_never = m.infer(params, x, [1.1])
+    assert (np.asarray(idx_never) == len(m.exit_blocks()) - 1).all()
+
+
+def test_training_step_reduces_loss(key):
+    """A few SGD steps on a fixed batch reduce the joint BranchyNet loss."""
+    m = b_lenet()
+    params = m.init(key)
+    x = jax.random.normal(key, (16,) + m.input_shape)
+    y = jax.random.randint(key, (16,), 0, m.n_classes)
+
+    loss_fn = jax.jit(lambda p: m.loss(p, x, y))
+    grad_fn = jax.jit(jax.grad(lambda p: m.loss(p, x, y)))
+    l0 = float(loss_fn(params))
+    lr = 1e-2
+    for _ in range(10):
+        g = grad_fn(params)
+        params = jax.tree.map(lambda p, gg: p - lr * gg, params, g)
+    l1 = float(loss_fn(params))
+    assert np.isfinite(l0) and np.isfinite(l1)
+    assert l1 < l0
+
+
+def test_extract_profile_feeds_fin(key):
+    """The measured profile plugs straight into the placement stack."""
+    from repro.core import AppRequirements, solve_fin, solve_opt
+    from repro.core.scenarios import paper_scenario
+
+    m = b_lenet()
+    prof = m.extract_profile(accuracies=[0.91, 0.97], phis=[0.94, 0.06])
+    nw = paper_scenario()
+    req = AppRequirements(alpha=0.9, delta=1e-3)
+    fin = solve_fin(nw, prof, req, gamma=10)
+    opt = solve_opt(nw, prof, req)
+    assert fin.feasible and opt.feasible
+    assert fin.energy <= opt.energy * 1.1 + 1e-15
+
+
+def test_resnet_depth_knob(key):
+    """blocks_per_stage scales depth (ResNet-110 = 18) without changing shapes."""
+    small = b_resnet(blocks_per_stage=1)
+    shape = small.input_shape
+    feats = []
+    for blk in small.blocks:
+        shape = blk.out_shape(shape)
+        feats.append(int(np.prod(shape)))
+    assert feats == TABLE_III_FEATURES["b-resnet"]
+    deep = b_resnet(blocks_per_stage=3)
+    assert deep.extract_profile().block_ops[1] > \
+        small.extract_profile().block_ops[1]

@@ -1,0 +1,63 @@
+"""Elastic-rescale planning tests (fault tolerance at mesh level)."""
+import pytest
+
+from repro.configs import get
+from repro.runtime.elastic import (MeshPlan, candidate_meshes, plan_rescale)
+
+
+def test_candidates_respect_divisibility():
+    cfg = get("qwen3-4b")  # d_model 2560, d_ff 9728, padded vocab 153600
+    cands = candidate_meshes(cfg, 256)
+    assert cands, "must find a mesh at full size"
+    for m in cands:
+        assert cfg.d_model % m.model == 0
+        assert cfg.d_ff % m.model == 0
+        assert cfg.padded_vocab % m.model == 0
+
+
+def test_degraded_mesh_found_after_loss():
+    """Losing 6 of 256 chips: the planner falls back to the largest usable
+    factorization <= 250."""
+    cfg = get("qwen3-4b")
+    cands = candidate_meshes(cfg, 250)
+    assert cands
+    best = cands[0]
+    assert best.chips <= 250
+    assert best.chips >= 200  # shouldn't collapse to something tiny
+
+
+def test_model_axis_change_moves_all_params():
+    cfg = get("qwen3-4b")
+    old = MeshPlan(data=16, model=16)
+    plan = plan_rescale(cfg, old, 128, param_bytes=8.8e9, global_batch=256)
+    assert plan is not None
+    if plan.new.model != old.model:
+        assert plan.moved_bytes == 8.8e9
+    assert plan.new.chips <= 128
+
+
+def test_data_only_shrink_moves_delta():
+    cfg = get("qwen3-4b")
+    old = MeshPlan(data=16, model=16)
+    # force same model axis by asking for a chip count with a 16-factor
+    plan = plan_rescale(cfg, old, 240, param_bytes=8.8e9, global_batch=256)
+    assert plan is not None
+    if plan.new.model == 16:
+        assert plan.moved_bytes < 8.8e9
+
+
+def test_pure_dp_always_compatible():
+    import dataclasses
+    cfg = dataclasses.replace(get("qwen3-4b"),
+                              parallelism_mode="pure_dp")
+    cands = candidate_meshes(cfg, 251)  # prime chip count
+    assert cands and cands[0].chips == 251
+
+
+def test_batch_divisibility_flagged():
+    cfg = get("qwen3-4b")
+    old = MeshPlan(data=16, model=16)
+    plan = plan_rescale(cfg, old, 255, param_bytes=1e9, global_batch=256)
+    assert plan is not None
+    expected = (256 % (plan.new.data * plan.new.pods) == 0)
+    assert plan.batch_ok == expected

@@ -1,0 +1,161 @@
+"""Pallas kernel tests: shape/dtype sweeps vs pure-jnp oracles (interpret)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attn.ops import decode_attn
+from repro.kernels.decode_attn.ref import decode_attn_ref
+from repro.kernels.ee_gate.ops import ee_gate
+from repro.kernels.ee_gate.ref import ee_gate_ref
+from repro.kernels.minplus.ops import minplus_vecmat
+from repro.kernels.minplus.ref import minplus_ref
+
+
+# ---------------------------------------------------------------------------
+# minplus
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,T", [(1, 16, 16), (8, 128, 128), (3, 37, 65),
+                                   (16, 300, 129), (2, 1, 257)])
+@pytest.mark.parametrize("density", [1.0, 0.4])
+def test_minplus_sweep(B, S, T, density):
+    rng = np.random.default_rng(B * 1000 + S + T)
+    dist = rng.uniform(0, 10, (B, S)).astype(np.float32)
+    W = rng.uniform(0, 5, (S, T)).astype(np.float32)
+    W[rng.uniform(size=W.shape) > density] = np.inf
+    dist[rng.uniform(size=dist.shape) > 0.9] = np.inf
+    got = np.asarray(minplus_vecmat(jnp.asarray(dist), jnp.asarray(W)))
+    want = np.asarray(minplus_ref(jnp.asarray(dist), jnp.asarray(W)))
+    finite = np.isfinite(want)
+    assert (np.isfinite(got) == finite).all()
+    np.testing.assert_allclose(got[finite], want[finite], rtol=1e-6)
+
+
+def test_minplus_identity():
+    S = 64
+    ident = np.full((S, S), np.inf, np.float32)
+    np.fill_diagonal(ident, 0.0)
+    d = np.random.default_rng(0).uniform(0, 3, (4, S)).astype(np.float32)
+    got = np.asarray(minplus_vecmat(jnp.asarray(d), jnp.asarray(ident)))
+    np.testing.assert_allclose(got, d, rtol=1e-6)
+
+
+def test_minplus_backs_fin_dp():
+    """The kernel reproduces the FIN layered relaxation end-to-end."""
+    from repro.core import (AppRequirements, build_extended_graph,
+                            build_feasible_graph, paper_profile)
+    from repro.core.bellman_ford import layered_relax
+    from repro.core.scenarios import paper_scenario
+
+    nw = paper_scenario()
+    prof = paper_profile("h2")
+    ext = build_extended_graph(nw, prof, AppRequirements(0.8, 5e-3))
+    fg = build_feasible_graph(ext, gamma=10)
+    Ws = fg.layer_matrices()
+    init = fg.init_vector()
+    want = layered_relax(init, Ws, backend="numpy")
+    got = layered_relax(init, Ws, backend="pallas")
+    mask = np.isfinite(want)
+    assert (np.isfinite(got) == mask).all()
+    np.testing.assert_allclose(got[mask], want[mask], rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ee_gate
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,V", [(1, 128), (8, 2048), (5, 5000), (16, 50304),
+                                 (2, 131)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ee_gate_sweep(B, V, dtype):
+    key = jax.random.PRNGKey(B + V)
+    logits = (jax.random.normal(key, (B, V), jnp.float32) * 4).astype(dtype)
+    conf, arg = ee_gate(logits)
+    conf_r, arg_r = ee_gate_ref(logits)
+    np.testing.assert_allclose(np.asarray(conf), np.asarray(conf_r),
+                               rtol=2e-3)
+    np.testing.assert_array_equal(np.asarray(arg), np.asarray(arg_r))
+    assert (np.asarray(conf) > 0).all() and (np.asarray(conf) <= 1.0).all()
+
+
+def test_ee_gate_handles_padded_vocab():
+    """-inf padded tail (masked vocab) must not poison the reduction."""
+    B, V = 4, 1000
+    key = jax.random.PRNGKey(0)
+    logits = jax.random.normal(key, (B, V), jnp.float32)
+    padded = jnp.concatenate(
+        [logits, jnp.full((B, 24), -jnp.inf)], axis=1)
+    conf, arg = ee_gate(padded)
+    conf_r, arg_r = ee_gate_ref(logits)
+    np.testing.assert_allclose(np.asarray(conf), np.asarray(conf_r),
+                               rtol=2e-3)
+    np.testing.assert_array_equal(np.asarray(arg), np.asarray(arg_r))
+
+
+def test_ee_gate_peaked_distribution():
+    """A very confident head must yield conf ~ 1 at the right token."""
+    logits = jnp.full((2, 512), -5.0).at[:, 77].set(20.0)
+    conf, arg = ee_gate(logits)
+    assert (np.asarray(arg) == 77).all()
+    assert (np.asarray(conf) > 0.999).all()
+
+
+# ---------------------------------------------------------------------------
+# decode_attn
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,KV,D,T,bt", [
+    (1, 4, 4, 32, 128, 64),       # MHA
+    (2, 8, 2, 64, 256, 128),      # GQA 4:1
+    (1, 8, 1, 64, 300, 128),      # MQA, ragged T
+    (3, 4, 2, 16, 64, 64),        # single block
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attn_sweep(B, H, KV, D, T, bt, dtype):
+    key = jax.random.PRNGKey(B + H + T)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, T, KV, D), dtype)
+    v = jax.random.normal(ks[2], (B, T, KV, D), dtype)
+    cache_pos = jnp.arange(T, dtype=jnp.int32)
+    pos = jnp.int32(T - 3)   # last slots masked (future)
+    got = decode_attn(q, k, v, cache_pos, pos, block_t=bt)
+    want = decode_attn_ref(q, k, v, cache_pos, pos)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_decode_attn_sliding_window():
+    B, H, KV, D, T = 1, 4, 2, 32, 256
+    key = jax.random.PRNGKey(9)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, T, KV, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, T, KV, D), jnp.float32)
+    cache_pos = jnp.arange(T, dtype=jnp.int32)
+    pos = jnp.int32(T - 1)
+    for w in (16, 64):
+        got = decode_attn(q, k, v, cache_pos, pos, window=w, block_t=64)
+        want = decode_attn_ref(q, k, v, cache_pos, pos, window=w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attn_empty_slots_masked():
+    """Slots with cache_pos = -1 (unwritten ring entries) contribute nothing."""
+    B, H, KV, D, T = 1, 2, 2, 16, 64
+    key = jax.random.PRNGKey(5)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, T, KV, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, T, KV, D), jnp.float32)
+    cache_pos = jnp.where(jnp.arange(T) < 10, jnp.arange(T), -1).astype(
+        jnp.int32)
+    got = decode_attn(q, k, v, cache_pos, jnp.int32(9), block_t=32)
+    want = decode_attn_ref(q, k[:, :10], v[:, :10],
+                           cache_pos[:10], jnp.int32(9))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

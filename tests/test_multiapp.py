@@ -1,0 +1,64 @@
+"""Multi-application orchestration tests (Sec. V, Fig. 8 claims)."""
+import numpy as np
+import pytest
+
+from repro.core import PAPER_MULTIAPP_REQS, run_multiapp
+
+APPS = ("h1", "h2", "h3", "h4", "h5", "h6")
+
+
+@pytest.fixture(scope="module")
+def result():
+    return run_multiapp(20, seed=1)
+
+
+def test_fin_saves_energy_vs_mcp(result):
+    """Fig. 8 left: FIN total energy is well below MCP for every app."""
+    for app in APPS:
+        g = result.energy_gain(app)
+        assert np.isfinite(g)
+        assert g <= 0.70 + 1e-9, f"{app}: FIN/MCP energy ratio {g:.3f}"
+
+
+def test_fin_failure_below_mcp(result):
+    """Fig. 8 center-right: FIN fails at most as often as MCP."""
+    for app in APPS:
+        f_fin = result.stats[app]["fin"].failure_prob
+        f_mcp = result.stats[app]["mcp"].failure_prob
+        assert f_fin <= f_mcp + 1e-9
+        assert f_fin <= 0.05 + 1e-9  # paper: FIN < 5%
+
+
+def test_mcp_leans_cloud_fin_leans_local(result):
+    """Fig. 8 center-left: MCP deploys mostly mobile/cloud; FIN exploits
+    mobile + edge more than MCP does."""
+    fin_local = mcp_local = 0.0
+    for app in APPS:
+        fin_local += result.stats[app]["fin"].tier_probs().get("mobile", 0.0)
+        mcp_local += result.stats[app]["mcp"].tier_probs().get("mobile", 0.0)
+    assert fin_local > mcp_local
+
+
+def test_exit_distribution_matches_phi(result):
+    """Fig. 8 right: h2/h6 use the earliest exit; h1 reaches exit-3."""
+    e_h2 = result.stats["h2"]["fin"].exit_probs()
+    assert e_h2[0] == pytest.approx(1.0)
+    e_h1 = result.stats["h1"]["fin"].exit_probs()
+    assert e_h1[-1] > 0.05  # deep exit used when alpha requires it
+
+
+def test_contention_mode_degrades_gracefully():
+    """Hard-contention slicing: failures may appear but FIN still <= MCP."""
+    res = run_multiapp(40, seed=1, divide_slice_by_users=True)
+    for app in APPS:
+        f_fin = res.stats[app]["fin"].failure_prob
+        f_mcp = res.stats[app]["mcp"].failure_prob
+        assert f_fin <= f_mcp + 1e-9
+
+
+def test_deterministic_given_seed():
+    a = run_multiapp(8, seed=42)
+    b = run_multiapp(8, seed=42)
+    for app in APPS:
+        assert a.stats[app]["fin"].energy_total == \
+            pytest.approx(b.stats[app]["fin"].energy_total)

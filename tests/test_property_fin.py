@@ -1,0 +1,145 @@
+"""Property-based tests (hypothesis) for the FIN framework invariants."""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import (AppRequirements, Network, build_extended_graph,
+                        build_feasible_graph, evaluate_config, make_network,
+                        solve_fin, solve_mcp, solve_opt, synthetic_profile)
+from repro.core.bellman_ford import (bellman_ford_np, layered_relax,
+                                     minplus_vecmat_np)
+
+SETTINGS = settings(max_examples=25, deadline=None,
+                    suppress_health_check=[HealthCheck.too_slow])
+
+
+def _random_network(seed: int, n_extra: int = 0) -> Network:
+    rng = np.random.default_rng(seed)
+    tiers = ["mobile", "edge", "cloud"] + ["edge"] * n_extra
+    frac = rng.uniform(1e-4, 1e-2, len(tiers))
+    frac[0] = rng.uniform(1e-4, 5e-3)
+    nw = make_network(tuple(tiers), compute_frac=frac,
+                      bw_frac=float(rng.uniform(0.001, 0.01)))
+    return nw
+
+
+@given(seed=st.integers(0, 10_000), n_blocks=st.integers(2, 6),
+       gamma=st.sampled_from([4, 10, 25]))
+@SETTINGS
+def test_competitive_ratio_property(seed, n_blocks, gamma):
+    """Property 2: FIN cost <= (1 + 1/gamma) * Opt cost, whenever Opt is feasible."""
+    rng = np.random.default_rng(seed)
+    prof = synthetic_profile(n_blocks, min(n_blocks, int(rng.integers(1, 4))),
+                             seed=seed)
+    nw = _random_network(seed)
+    alpha = float(rng.uniform(0.0, max(e.accuracy for e in prof.exits)))
+    delta = float(rng.uniform(1e-3, 50e-3))
+    req = AppRequirements(alpha=alpha, delta=delta, sigma=1.0)
+    opt = solve_opt(nw, prof, req)
+    fin = solve_fin(nw, prof, req, gamma=gamma)
+    if opt.feasible:
+        assert fin.feasible, "FIN must find a solution when Opt does"
+        assert fin.energy <= opt.energy * (1 + 1.0 / gamma) + 1e-12
+    if fin.feasible:
+        # FIN never beats the optimum (it is exact on the quantized graph)
+        assert fin.energy >= opt.energy - 1e-12
+
+
+@given(seed=st.integers(0, 10_000), n_blocks=st.integers(2, 6))
+@SETTINGS
+def test_fin_output_always_honours_constraints(seed, n_blocks):
+    """Whatever FIN returns re-evaluates as feasible (its defining invariant)."""
+    rng = np.random.default_rng(seed)
+    prof = synthetic_profile(n_blocks, 2 if n_blocks >= 2 else 1, seed=seed + 1)
+    nw = _random_network(seed + 2)
+    req = AppRequirements(alpha=float(rng.uniform(0, 1)),
+                          delta=float(rng.uniform(5e-4, 20e-3)))
+    sol = solve_fin(nw, prof, req, gamma=10)
+    if sol.found:
+        ev = evaluate_config(nw, prof, req, sol.config)
+        assert ev.feasible, ev.violations
+        assert ev.energy == pytest.approx(sol.energy)
+
+
+@given(seed=st.integers(0, 10_000))
+@SETTINGS
+def test_survival_accounting(seed):
+    """phi accounting: survival is monotone non-increasing, in [0, 1], and the
+    effective phi of any final exit sums to 1."""
+    rng = np.random.default_rng(seed)
+    n_blocks = int(rng.integers(2, 8))
+    prof = synthetic_profile(n_blocks, int(rng.integers(1, min(4, n_blocks + 1))),
+                             seed=seed)
+    for k in range(prof.n_exits):
+        phi = prof.effective_phi(k)
+        assert phi.sum() == pytest.approx(1.0)
+        assert (phi >= -1e-12).all()
+        prev = 1.0
+        for i in range(prof.exits[k].block + 1):
+            s_in = prof.survival_entering_block(i, k)
+            s_out = prof.survival_after_block(i, k)
+            assert -1e-12 <= s_out <= s_in <= prev + 1e-12
+            prev = s_in
+        assert prof.survival_after_block(prof.exits[k].block, k) == pytest.approx(0.0)
+
+
+@given(seed=st.integers(0, 10_000))
+@SETTINGS
+def test_expected_ops_monotone_in_exit_depth(seed):
+    rng = np.random.default_rng(seed)
+    prof = synthetic_profile(int(rng.integers(3, 8)), 3, seed=seed)
+    ops = [prof.expected_ops(k) for k in range(prof.n_exits)]
+    assert all(b >= a - 1e-9 for a, b in zip(ops, ops[1:]))
+
+
+@given(seed=st.integers(0, 10_000), size=st.integers(2, 40))
+@SETTINGS
+def test_minplus_identity_and_bf(seed, size):
+    """(min,+) algebra: relaxation with the tropical identity is a no-op, and
+    Bellman-Ford on a DAG equals the layered DP."""
+    rng = np.random.default_rng(seed)
+    W = rng.uniform(0.1, 5.0, (size, size))
+    W[rng.uniform(size=(size, size)) < 0.5] = np.inf
+    ident = np.full((size, size), np.inf)
+    np.fill_diagonal(ident, 0.0)
+    d = rng.uniform(0, 10, size)
+    out, _ = minplus_vecmat_np(d, ident)
+    np.testing.assert_allclose(out, d)
+    # BF from a single source terminates and is stable under one more iter
+    dist, _ = bellman_ford_np(np.triu(W, 1) + np.tril(ident, 0), 0)
+    again, _ = minplus_vecmat_np(dist, np.triu(W, 1) + np.tril(ident, 0))
+    assert (again >= dist - 1e-12).all()
+
+
+@given(seed=st.integers(0, 5_000), S=st.integers(2, 24), L=st.integers(1, 6))
+@SETTINGS
+def test_layered_relax_backends_agree(seed, S, L):
+    rng = np.random.default_rng(seed)
+    Ws = rng.uniform(0.1, 5.0, (L, S, S))
+    Ws[rng.uniform(size=Ws.shape) < 0.4] = np.inf
+    init = rng.uniform(0, 3, S)
+    init[rng.uniform(size=S) < 0.3] = np.inf
+    d_np = layered_relax(init, Ws, backend="numpy")
+    d_jnp = layered_relax(init, Ws, backend="jnp")
+    mask = np.isfinite(d_np)
+    assert (np.isfinite(d_jnp) == mask).all()
+    np.testing.assert_allclose(d_np[mask], d_jnp[mask], rtol=1e-6)
+
+
+@given(seed=st.integers(0, 10_000))
+@SETTINGS
+def test_mcp_vs_fin_energy_dominance(seed):
+    """When both are feasible, FIN's energy is never worse than MCP's (FIN
+    optimizes energy directly; MCP optimizes the auxiliary Omega weight)."""
+    rng = np.random.default_rng(seed)
+    n_blocks = int(rng.integers(2, 7))
+    prof = synthetic_profile(n_blocks, int(rng.integers(1, min(4, n_blocks + 1))),
+                             seed=seed)
+    nw = _random_network(seed + 7)
+    req = AppRequirements(alpha=float(rng.uniform(0, 0.8)),
+                          delta=float(rng.uniform(1e-3, 30e-3)))
+    fin = solve_fin(nw, prof, req, gamma=16)
+    mcp = solve_mcp(nw, prof, req)
+    if fin.feasible and mcp.feasible:
+        assert fin.energy <= mcp.energy * (1 + 1.0 / 16) + 1e-12

@@ -1,0 +1,104 @@
+"""Split-serving engine tests: continuous batching, gating, FIN integration."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.core import AppRequirements, paper_profile
+from repro.core.scenarios import paper_scenario
+from repro.models import transformer as T
+from repro.runtime.serve_engine import SplitServeEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get("qwen3-4b", reduced=True)
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_engine_serves_all_requests(setup):
+    cfg, params = setup
+    eng = SplitServeEngine(cfg, params, batch_size=4, cache_len=64)
+    reqs = [eng.submit([1, 2, 3], max_new_tokens=5) for _ in range(10)]
+    stats = eng.run(max_steps=200)
+    assert all(r.done for r in reqs)
+    assert stats.tokens_out == 10 * 5
+    assert all(len(r.tokens) == 5 for r in reqs)
+
+
+def test_continuous_batching_beats_sequential_steps(setup):
+    """10 requests on 4 slots must take far fewer steps than 10 sequential
+    prompts (slots are refilled as soon as a sequence finishes)."""
+    cfg, params = setup
+    eng = SplitServeEngine(cfg, params, batch_size=4, cache_len=128)
+    for _ in range(10):
+        eng.submit([1, 2, 3], max_new_tokens=4)
+    stats = eng.run(max_steps=400)
+    sequential_steps = 10 * (3 + 4)
+    assert stats.steps < sequential_steps
+
+
+def test_exit_thresholds_control_depth(setup):
+    cfg, params = setup
+    # threshold 0: everything exits at the first exit
+    eng = SplitServeEngine(cfg, params, batch_size=2, cache_len=32,
+                           thresholds=[0.0])
+    eng.submit([1, 2], max_new_tokens=4)
+    stats = eng.run(max_steps=50)
+    assert set(stats.exit_histogram) == {0}
+    # threshold > 1: nothing exits early
+    eng2 = SplitServeEngine(cfg, params, batch_size=2, cache_len=32,
+                            thresholds=[1.1])
+    eng2.submit([1, 2], max_new_tokens=4)
+    stats2 = eng2.run(max_steps=50)
+    assert set(stats2.exit_histogram) == {eng2.n_exits - 1}
+
+
+def test_fin_placement_energy_accounting(setup):
+    cfg, params = setup
+    nw = paper_scenario()
+    prof = paper_profile("h2")
+    req = AppRequirements(alpha=0.5, delta=8e-3)
+    eng = SplitServeEngine(cfg, params, batch_size=2, cache_len=64,
+                           thresholds=[0.0], network=nw, profile=prof,
+                           req=req)
+    assert eng.placement is not None
+    eng.submit([1, 2], max_new_tokens=6)
+    stats = eng.run(max_steps=100)
+    assert stats.energy_j > 0
+    assert stats.blocks_saved > 0           # exit-0 skips deep blocks
+    assert stats.blocks_executed > 0
+    # early exits save work: executed < total blocks x tokens
+    total = prof.n_blocks * stats.tokens_out
+    assert stats.blocks_executed < total
+
+
+def test_failure_triggers_replacement(setup):
+    cfg, params = setup
+    nw = paper_scenario()
+    prof = paper_profile("h2")
+    req = AppRequirements(alpha=0.5, delta=8e-3)
+    eng = SplitServeEngine(cfg, params, batch_size=2, cache_len=64,
+                           network=nw, profile=prof, req=req)
+    before = list(eng.placement.placement)
+    used = {p for p in before if p != nw.source_node}
+    victim = used.pop() if used else 1
+    eng.fail_node(victim)
+    assert eng.stats.replacements == 1
+    eng.submit([1], max_new_tokens=2)
+    stats = eng.run(max_steps=50)
+    assert stats.tokens_out == 2
+
+
+def test_measured_phi_feeds_placement(setup):
+    """measured_phi from the gates is a valid phi vector for core.DNNProfile."""
+    cfg, params = setup
+    eng = SplitServeEngine(cfg, params, batch_size=2, cache_len=64,
+                           thresholds=[0.5])
+    eng.submit(list(range(1, 5)), max_new_tokens=8)
+    stats = eng.run(max_steps=100)
+    phi = stats.measured_phi
+    assert abs(sum(phi.values()) - 1.0) < 1e-9

@@ -1,0 +1,27 @@
+"""Runs tests/test_sharding.py in a subprocess with 8 host devices.
+
+The main pytest process keeps the default single CPU device (smoke tests
+must not see a forced device count); the sharding suite needs a mesh, so it
+runs in its own interpreter with XLA_FLAGS set before jax imports.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+@pytest.mark.timeout(900)
+def test_sharding_suite_with_host_devices():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(REPO / "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "-p", "no:cacheprovider",
+         str(REPO / "tests" / "test_sharding.py")],
+        env=env, cwd=REPO, capture_output=True, text=True, timeout=880)
+    tail = "\n".join((r.stdout + r.stderr).splitlines()[-25:])
+    assert r.returncode == 0, f"sharding suite failed:\n{tail}"
