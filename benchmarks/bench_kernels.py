@@ -16,10 +16,11 @@ from repro.kernels.decode_attn.ops import decode_attn
 from repro.kernels.decode_attn.ref import decode_attn_ref
 from repro.kernels.ee_gate.ops import ee_gate
 from repro.kernels.ee_gate.ref import ee_gate_ref
-from repro.kernels.minplus.ops import minplus_vecmat
-from repro.kernels.minplus.ref import minplus_ref
+from repro.kernels.minplus.ops import (minplus_matmat, minplus_vecmat,
+                                       minplus_vecmat_argmin)
+from repro.kernels.minplus.ref import minplus_argmin_ref, minplus_ref
 
-from .common import Row, kv, timed
+from .common import Row, batched_solver_row, kv, timed
 
 
 def run() -> List[Row]:
@@ -41,6 +42,29 @@ def run() -> List[Row]:
         rows.append(Row(f"kernels/minplus/B{B}xS{S}", us_k,
                         kv(ref_us=us_r, max_abs_err=err,
                            block="8x128x128")))
+
+    # minplus argmin variant (parent recovery) and tropical matmat
+    B, S = 8, 512
+    dist = jnp.asarray(rng.uniform(0, 10, (B, S)), jnp.float32)
+    W = rng.uniform(0, 5, (S, S)).astype(np.float32)
+    W[rng.uniform(size=W.shape) < 0.5] = np.inf
+    W = jnp.asarray(W)
+    (got, arg), us_k = timed(lambda: jax.block_until_ready(
+        minplus_vecmat_argmin(dist, W)), repeats=2)
+    (want, arg_r), us_r = timed(lambda: jax.block_until_ready(
+        minplus_argmin_ref(dist, W)), repeats=2)
+    agree = float((np.asarray(arg) == np.asarray(arg_r)).mean())
+    rows.append(Row(f"kernels/minplus-argmin/B{B}xS{S}", us_k,
+                    kv(ref_us=us_r, argmin_agree=agree, block="8x128x128")))
+    got_mm, us_mm = timed(lambda: jax.block_until_ready(
+        minplus_matmat(dist, W)), repeats=2)
+    rows.append(Row(f"kernels/minplus-matmat/B{B}xS{S}", us_mm,
+                    kv(max_abs_err=float(np.abs(
+                        np.asarray(got_mm)[np.isfinite(np.asarray(want))]
+                        - np.asarray(want)[np.isfinite(np.asarray(want))]
+                    ).max()))))
+
+    rows.extend(_batched_solver_rows())
 
     # ee_gate: decode-batch gating at large vocab
     for B, V in ((64, 50304), (128, 151936)):
@@ -71,6 +95,18 @@ def run() -> List[Row]:
         rows.append(Row(f"kernels/decode_attn/B{B}H{H}T{T}", us_k,
                         kv(ref_us=us_r, max_abs_err=err, block_t=512)))
     return rows
+
+
+def _batched_solver_rows() -> List[Row]:
+    """Batched-solver mode: solver wall-clock of one solve_many relaxation
+    vs the equivalent loop of legacy ``backend="python"`` solves."""
+    from repro.core.scenarios import sweep_scenarios
+
+    ps, ns, rs = sweep_scenarios(apps=("h2", "h6"),
+                                 deltas_ms=(1.0, 2.0, 4.0, 8.0, 12.0),
+                                 n_extra_edge=6)
+    return [batched_solver_row("kernels/solver-batched", ps, ns, rs,
+                               repeats=2)]
 
 
 if __name__ == "__main__":

@@ -42,8 +42,24 @@ def _paper_convention_macs(seq: Sequential, in_shape) -> float:
     return total
 
 
+def _batched_placement_rows(profiles) -> List[Row]:
+    """Batched-solver mode: place every extracted model profile in one
+    ``solve_many`` call and report solver wall-clock vs the legacy loop —
+    ties the Table III model extraction to the deployment pipeline."""
+    from repro.core import AppRequirements
+    from repro.core.scenarios import paper_scenario
+
+    from .common import batched_solver_row
+
+    return [batched_solver_row("table3/solver-batched", profiles,
+                               paper_scenario(),
+                               AppRequirements(alpha=0.0, delta=8e-3),
+                               n_models=len(profiles))]
+
+
 def run() -> List[Row]:
     rows: List[Row] = []
+    extracted = []
     for name, ctor in PAPER_MODELS.items():
         model = ctor()
 
@@ -51,6 +67,7 @@ def run() -> List[Row]:
             return model.extract_profile()
 
         prof, us = timed(build_profile)
+        extracted.append(prof)
         shape = model.input_shape
         for i, blk in enumerate(model.blocks):
             out_shape = blk.out_shape(shape)
@@ -66,6 +83,7 @@ def run() -> List[Row]:
                    paper_convention_MOPs=conv_macs / 1e6,
                    paper_MOPs=TABLE_III_MOPS[name][i])))
             shape = out_shape
+    rows.extend(_batched_placement_rows(extracted))
     return rows
 
 

@@ -16,10 +16,11 @@ from typing import List
 import numpy as np
 
 from repro.core import (AppRequirements, fin_all_exit_costs, make_network,
-                        paper_profile, solve_fin, solve_mcp, synthetic_profile)
+                        paper_profile, solve_fin, solve_mcp,
+                        synthetic_profile)
 from repro.core.scenarios import paper_scenario
 
-from .common import Row, kv
+from .common import Row, batched_solver_row, kv
 
 MODELS = {"b-alexnet": "h2", "b-resnet": "h4", "b-lenet": "h6"}
 
@@ -43,11 +44,26 @@ def run() -> List[Row]:
         t_mcp = _avg_time(lambda: solve_mcp(nw, prof, req))
         t_fin3 = _avg_time(lambda: solve_fin(nw, prof, req, gamma=3))
         t_fin10 = _avg_time(lambda: solve_fin(nw, prof, req, gamma=10))
+        t_legacy = _avg_time(
+            lambda: solve_fin(nw, prof, req, gamma=10, backend="python"))
         rows.append(Row(
             f"table7/{model}", t_fin10 * 1e6,
             kv(mcp_ms=t_mcp * 1e3, fin3_ms=t_fin3 * 1e3,
-               fin10_ms=t_fin10 * 1e3,
-               fin10_over_mcp=t_fin10 / t_mcp)))
+               fin10_ms=t_fin10 * 1e3, fin10_python_ms=t_legacy * 1e3,
+               fin10_over_mcp=t_fin10 / t_mcp,
+               minplus_speedup=t_legacy / t_fin10)))
+
+    # batched solver wall-clock: all three models' per-model requirement grid
+    # as one solve_many call vs the legacy per-scenario loop
+    profs, reqs = [], []
+    for model, app in MODELS.items():
+        prof = paper_profile(app)
+        alpha = min(e.accuracy for e in prof.exits)
+        for delta in (1e-3, 2e-3, 4e-3, 8e-3):
+            profs.append(prof)
+            reqs.append(AppRequirements(alpha=alpha, delta=delta))
+    rows.append(batched_solver_row("table7/solver-batched", profs, nw, reqs,
+                                   repeats=5))
 
     # scaling study: bigger networks / gamma, numpy DP vs jnp min-plus backend
     for n_extra, gamma in ((13, 32), (29, 64)):

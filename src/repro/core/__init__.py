@@ -17,7 +17,7 @@ from .problem import (AppRequirements, Config, ConfigEval, Solution,
                       evaluate_config)
 from .extended_graph import ExtendedGraph, build_extended_graph, to_networkx
 from .feasible_graph import FeasibleGraph, build_feasible_graph
-from .fin import solve_fin, fin_all_exit_costs
+from .fin import solve_fin, solve_many, fin_all_exit_costs
 from .mcp import solve_mcp
 from .optimum import solve_opt
 from .multiapp import (run_multiapp, MultiAppResult, AppStats,
@@ -29,7 +29,8 @@ __all__ = [
     "synthetic_profile", "BITS_PER_FEATURE", "AppRequirements", "Config",
     "ConfigEval", "Solution", "evaluate_config", "ExtendedGraph",
     "build_extended_graph", "to_networkx", "FeasibleGraph",
-    "build_feasible_graph", "solve_fin", "fin_all_exit_costs", "solve_mcp",
+    "build_feasible_graph", "solve_fin", "solve_many", "fin_all_exit_costs",
+    "solve_mcp",
     "solve_opt", "run_multiapp", "MultiAppResult", "AppStats",
     "PAPER_MULTIAPP_REQS", "default_solvers", "user_network",
 ]

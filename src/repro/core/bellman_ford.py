@@ -113,3 +113,149 @@ def layered_relax(init: np.ndarray, Ws: np.ndarray, backend: str = "numpy",
             out.append(np.asarray(d))
         return np.stack(out)
     raise ValueError(f"unknown backend {backend!r}")
+
+
+# ---------------------------------------------------------------------------
+# argmin-tracking relaxation (exact path reconstruction for the FIN DP)
+# ---------------------------------------------------------------------------
+
+def layered_relax_argmin(init: np.ndarray, Ws: np.ndarray,
+                         backend: str = "numpy"
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+    """Layered relaxation with parent recovery.
+
+    init: (S,), Ws: (L, S, S).  Returns (dist, parent) where dist is (L+1, S)
+    distances after each layer and parent is (L, S): parent[l, t] is the
+    argmin source state in layer l for state t in layer l+1, or -1 where t is
+    unreached.  Single-scenario view of ``batched_layered_relax_argmin``
+    (which see for the backend contract); the pallas backend runs the
+    ``minplus`` argmin kernel layer by layer.
+    """
+    hist, par = batched_layered_relax_argmin(np.asarray(init)[None],
+                                             np.asarray(Ws)[None],
+                                             backend=backend)
+    return hist[0], par[0]
+
+
+def batched_layered_relax_argmin(init: np.ndarray, Ws: np.ndarray,
+                                 backend: str = "numpy"
+                                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """Batched layered relaxation with parents: one (min,+) chain per scenario.
+
+    init: (B, S); Ws: (B, L, S, S).  Returns (dist (B, L+1, S), parent
+    (B, L, S)); parent is -1 where the target state is unreachable.  Backends:
+    ``numpy`` (vectorized over the whole batch per layer), ``jnp`` (one
+    lax.scan over layers, batch in the leading dim), ``pallas`` (argmin
+    kernel, looped per scenario — per-scenario W defeats the shared-W kernel
+    batching; block-diagonal matmat batching is the TPU follow-up).
+    """
+    B, S = init.shape
+    L = Ws.shape[1]
+    if L == 0:                       # single-block chain: no transitions
+        return (np.asarray(init)[:, None, :].astype(np.float64),
+                np.zeros((B, 0, S), dtype=np.int64))
+    if backend == "numpy":
+        dist = init
+        hist = [dist]
+        pars = []
+        cand = np.empty((B, S, S), dtype=np.float64)   # reused across layers
+        for l in range(L):
+            np.add(dist[:, :, None], Ws[:, l], out=cand)     # (B, S, T)
+            arg = np.argmin(cand, axis=1)
+            new = np.take_along_axis(cand, arg[:, None, :], axis=1)[:, 0, :]
+            pars.append(np.where(np.isfinite(new), arg, -1))
+            hist.append(new)
+            dist = new
+        return np.stack(hist, axis=1), np.stack(pars, axis=1).astype(np.int64)
+    if backend == "jnp":
+        def step(d, W):
+            cand = d[:, :, None] + W                         # (B, S, T)
+            new = jnp.min(cand, axis=1)
+            arg = jnp.argmin(cand, axis=1)
+            return new, (new, jnp.where(jnp.isfinite(new), arg, -1))
+        _, (h, p) = jax.lax.scan(step, jnp.asarray(init),
+                                 jnp.moveaxis(jnp.asarray(Ws), 1, 0))
+        hist = np.concatenate([np.asarray(init)[:, None],
+                               np.moveaxis(np.asarray(h), 0, 1)], axis=1)
+        return hist, np.moveaxis(np.asarray(p), 0, 1).astype(np.int64)
+    if backend == "pallas":
+        from repro.kernels.minplus.ops import minplus_vecmat_argmin
+        hists, pars = [], []
+        for b in range(B):
+            d = jnp.asarray(init[b], jnp.float32)
+            hist = [np.asarray(init[b])]
+            par = []
+            for W in Ws[b]:
+                out, arg = minplus_vecmat_argmin(
+                    d[None, :], jnp.asarray(W, jnp.float32))
+                d = out[0]
+                hist.append(np.asarray(d, np.float64))
+                par.append(np.asarray(arg[0], np.int64))
+            hists.append(np.stack(hist))
+            pars.append(np.stack(par))
+        return np.stack(hists), np.stack(pars)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+# ---------------------------------------------------------------------------
+# k-best relaxation (beyond-paper quantizer-collision fix, vectorized)
+# ---------------------------------------------------------------------------
+
+def batched_layered_relax_min(init: np.ndarray, Ws: np.ndarray) -> np.ndarray:
+    """Batched layered relaxation, distances only (numpy).
+
+    init: (B, S); Ws: (B, L, S, S).  Returns dist (B, L+1, S).  The parent
+    tensor is deliberately NOT computed: callers that need path
+    reconstruction recover a parent with one argmin column scan per
+    backtracked step (see fin._FlatDP) — orders of magnitude fewer argmins
+    than materializing (B, L, S) parents when only a handful of end states
+    are ever traced back.
+    """
+    B, S = init.shape
+    L = Ws.shape[1]
+    if L == 0:
+        return np.asarray(init)[:, None, :].astype(np.float64)
+    dist = init
+    hist = [dist]
+    cand = np.empty((B, S, S), dtype=np.float64)   # reused across layers
+    for l in range(L):
+        np.add(dist[:, :, None], Ws[:, l], out=cand)
+        dist = np.min(cand, axis=1)
+        hist.append(dist)
+    return np.stack(hist, axis=1)
+
+
+def batched_layered_relax_kbest(init: np.ndarray, Ws: np.ndarray, K: int
+                                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Keep the K cheapest paths per state while relaxing layer by layer.
+
+    init: (B, S); Ws: (B, L, S, S).  Returns (dist (B, L+1, S, K), par_s,
+    par_k (B, L, S, K)) — the k-th cheapest distance at each state with the
+    (source state, source rank) that produced it (-1 where unused).  Each
+    layer sorts the S*K candidate pool per target with a stable argsort, so
+    tie order is deterministic (source-state-major).  numpy only: K > 1 is
+    the beyond-paper small-gamma mode and stays far from the hot path.
+    """
+    B, S = init.shape
+    L = Ws.shape[1]
+    dist = np.full((B, S, K), np.inf)
+    dist[:, :, 0] = init
+    if L == 0:
+        return (dist[:, None], np.zeros((B, 0, S, K), dtype=np.int64),
+                np.zeros((B, 0, S, K), dtype=np.int64))
+    hist = [dist]
+    ps, pk = [], []
+    for l in range(L):
+        # (B, S, K, T) candidate pool -> K smallest per (B, T)
+        cand = (dist[:, :, :, None] + Ws[:, l, :, None, :]).reshape(B, S * K, S)
+        idx = np.argsort(cand, axis=1, kind="stable")[:, :K, :]    # (B, K, T)
+        val = np.take_along_axis(cand, idx, axis=1)
+        new = np.moveaxis(val, 1, 2)                               # (B, T, K)
+        src = np.moveaxis(idx, 1, 2)
+        fin = np.isfinite(new)
+        ps.append(np.where(fin, src // K, -1))
+        pk.append(np.where(fin, src % K, -1))
+        hist.append(new)
+        dist = new
+    return (np.stack(hist, axis=1), np.stack(ps, axis=1).astype(np.int64),
+            np.stack(pk, axis=1).astype(np.int64))

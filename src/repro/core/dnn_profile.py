@@ -54,6 +54,12 @@ class DNNProfile:
             "the deepest exit must sit on the last block"
         blocks = [e.block for e in self.exits]
         assert len(set(blocks)) == len(blocks), "at most one exit per block"
+        # phi / survival accounting is pure in (block, final_exit) and sits on
+        # the exact-evaluation hot path (every candidate configuration of
+        # every solver calls it) — memoize per profile.  Profiles are treated
+        # as immutable after construction.
+        self._phi_cache: Dict[int, np.ndarray] = {}
+        self._surv_cache: Dict[Tuple[int, int], float] = {}
 
     # -- structure ------------------------------------------------------------
     @property
@@ -92,20 +98,29 @@ class DNNProfile:
         deployed exit (those samples are forced to exit there).
         """
         assert 0 <= final_exit < self.n_exits
-        phi = np.array([e.phi for e in self.exits], dtype=np.float64)
-        phi = phi / phi.sum()  # normalize Table II percentages
-        out = phi[: final_exit + 1].copy()
-        out[final_exit] += phi[final_exit + 1:].sum()
-        return out
+        cached = self._phi_cache.get(final_exit)
+        if cached is None:
+            phi = np.array([e.phi for e in self.exits], dtype=np.float64)
+            phi = phi / phi.sum()  # normalize Table II percentages
+            cached = phi[: final_exit + 1].copy()
+            cached[final_exit] += phi[final_exit + 1:].sum()
+            cached.flags.writeable = False   # shared across callers
+            self._phi_cache[final_exit] = cached
+        return cached
 
     def survival_after_block(self, block: int, final_exit: int) -> float:
         """Fraction of samples still in flight after block ``block``'s exit."""
-        phi = self.effective_phi(final_exit)
-        gone = 0.0
-        for k, e in enumerate(self.exits[: final_exit + 1]):
-            if e.block <= block:
-                gone += phi[k]
-        return max(0.0, 1.0 - gone)
+        key = (block, final_exit)
+        cached = self._surv_cache.get(key)
+        if cached is None:
+            phi = self.effective_phi(final_exit)
+            gone = 0.0
+            for k, e in enumerate(self.exits[: final_exit + 1]):
+                if e.block <= block:
+                    gone += phi[k]
+            cached = max(0.0, 1.0 - gone)
+            self._surv_cache[key] = cached
+        return cached
 
     def survival_entering_block(self, block: int, final_exit: int) -> float:
         """Fraction of samples that still need to *execute* block ``block``."""

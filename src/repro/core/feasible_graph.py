@@ -76,40 +76,95 @@ class FeasibleGraph:
                             np.maximum(0.0, self.gamma + 1 - self.steep), 0.0)
         return n_init + int(per_edge.sum())
 
-    # -- dense layered transition matrices (for jnp / pallas backends) --------
+    # -- dense layered transition matrices (all vectorized backends) ----------
     def layer_matrices(self) -> np.ndarray:
         """Return (L-1, S, S) dense (min,+) transition matrices over states
-        s = n * (gamma+1) + g, with energy weights and inf for non-edges."""
+        s = n * (gamma+1) + g, with energy weights and inf for non-edges.
+
+        Each admissible extended edge (n, n') with integer steepness st fans
+        out into one feasible-graph edge per source depth g with g + st <= G,
+        subject to the lambda-proximity window; distinct (n, g) sources map to
+        distinct states, so a single fancy-indexed scatter builds the tensor
+        with no Python loops.
+        """
         N = self.ext.n_nodes
         G = self.gamma
         S = N * (G + 1)
         L = self.ext.n_blocks
         out = np.full((L - 1, S, S), np.inf, dtype=np.float64)
-        lo = self.gamma - self.lam
-        for i in range(L - 1):
-            for n in range(N):
-                for n2 in range(N):
-                    st = self.steep[i, n, n2]
-                    if not np.isfinite(st):
-                        continue
-                    st = int(st)
-                    e = self.ext.E[i, n, n2]
-                    for g in range(G + 1 - st):
-                        g2 = g + st
-                        if self.lam < self.gamma and not (lo <= g2 <= G or g2 == g):
-                            continue
-                        out[i, n * (G + 1) + g, n2 * (G + 1) + g2] = e
+        st = self.steep                                     # (L-1, N, N)
+        finite = np.isfinite(st)
+        g = np.arange(G + 1, dtype=np.float64)
+        g2 = np.where(finite, st, np.inf)[..., None] + g    # (L-1, N, N, G+1)
+        ok = finite[..., None] & (g2 <= G)
+        if self.lam < self.gamma:
+            lo = self.gamma - self.lam
+            ok &= (g2 >= lo) | (g2 == g)                    # Alg. 1, Fn II
+        ii, nn, mm, gg = np.nonzero(ok)
+        g2i = g2[ii, nn, mm, gg].astype(np.int64)
+        out[ii, nn * (G + 1) + gg, mm * (G + 1) + g2i] = self.ext.E[ii, nn, mm]
         return out
 
     def init_vector(self) -> np.ndarray:
         """(S,) initial state distances (source edges)."""
         N, G = self.ext.n_nodes, self.gamma
         v = np.full(N * (G + 1), np.inf)
-        for n in range(N):
-            d = self.init_depth[n]
-            if np.isfinite(d) and d <= G:
-                v[n * (G + 1) + int(d)] = self.ext.init_E[n]
+        d = self.init_depth
+        ok = np.isfinite(d) & (d <= G)
+        n_idx = np.nonzero(ok)[0]
+        v[n_idx * (G + 1) + d[n_idx].astype(np.int64)] = self.ext.init_E[n_idx]
         return v
+
+
+def batch_layer_tensors(fgs: List["FeasibleGraph"]
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """Stacked ``layer_matrices`` / ``init_vector`` for a same-shape group.
+
+    All graphs must share (n_blocks, n_nodes, gamma, lam) — the usual case in
+    a batched sweep, where scenarios differ only in delta / quantizer /
+    energy weights.  One scatter over the (D, L-1, N, N, G+1) admissibility
+    mask replaces D separate per-graph builds; element-for-element identical
+    to calling ``fg.layer_matrices()`` / ``fg.init_vector()`` per graph.
+
+    Returns (Ws (D, L-1, S, S), init (D, S)).
+    """
+    f0 = fgs[0]
+    N, G, L = f0.ext.n_nodes, f0.gamma, f0.ext.n_blocks
+    lam = f0.lam
+    assert all(fg.ext.n_nodes == N and fg.gamma == G and fg.lam == lam
+               and fg.ext.n_blocks == L for fg in fgs)
+    D = len(fgs)
+    S = N * (G + 1)
+    st = np.stack([fg.steep for fg in fgs])             # (D, L-1, N, N)
+    E = np.stack([fg.ext.E for fg in fgs])
+    # target depth per (d, i, n, g, n2): g + steep; inadmissible edges are
+    # routed to a sentinel column S that is sliced away below — every write
+    # lands, so no boolean filtering / nonzero pass is needed and the
+    # scatter runs with regular strides.
+    finite = np.isfinite(st)
+    g = np.arange(G + 1, dtype=np.float64)[None, None, None, :, None]
+    g2 = np.where(finite, st, np.inf)[:, :, :, None, :] + g
+    ok = finite[:, :, :, None, :] & (g2 <= G)           # (D, L-1, N, G+1, N)
+    if lam < G:
+        lo = G - lam
+        ok &= (g2 >= lo) | (g2 == g)
+    n2 = np.arange(N, dtype=np.float64)[None, None, None, None, :]
+    t = np.where(ok, n2 * (G + 1) + g2, S).astype(np.int64)
+
+    pad = np.full((D, L - 1, N, G + 1, S + 1), np.inf)
+    pad[np.arange(D)[:, None, None, None, None],
+        np.arange(L - 1)[None, :, None, None, None],
+        np.arange(N)[None, None, :, None, None],
+        np.arange(G + 1)[None, None, None, :, None],
+        t] = E[:, :, :, None, :]
+    Ws = pad.reshape(D, L - 1, S, S + 1)[..., :S]       # zero-copy view
+
+    d0 = np.stack([fg.init_depth for fg in fgs])        # (D, N)
+    iE = np.stack([fg.ext.init_E for fg in fgs])
+    init = np.full((D, S), np.inf)
+    di, ni = np.nonzero(np.isfinite(d0) & (d0 <= G))
+    init[di, ni * (G + 1) + d0[di, ni].astype(np.int64)] = iE[di, ni]
+    return Ws, init
 
 
 def build_feasible_graph(ext: ExtendedGraph, gamma: int,

@@ -1,9 +1,24 @@
 """FIN solver (Alg. 1): feasible-graph construction + min-cost traversal.
 
 The traversal is a layered dynamic program over states (node, depth): exact
-minimum-energy path in the feasible graph, vectorized over states.  One DP
-pass yields the best configuration for *every* candidate final exit (the DP
-prefix costs at each exit block), so accuracy filtering (3c) is a post-pass.
+minimum-energy path in the feasible graph.  The DP is expressed as a chain of
+tropical (min,+) matrix-vector products over the flattened state space
+s = node * (gamma+1) + depth (one product per DNN block transition), with
+argmin parents recorded for exact path reconstruction.  Backends (see
+``bellman_ford.py`` for the dispatch):
+
+  ``python``   the original triple-nested loop DP — kept verbatim as the
+               bit-for-bit oracle for the vectorized backends;
+  ``minplus``  vectorized numpy relaxation (default; alias ``numpy``);
+  ``jnp``      jitted dense relaxation (float32) for large instances;
+  ``pallas``   the ``minplus`` argmin TPU kernel (kernels/minplus).
+
+One DP pass yields the best configuration for *every* candidate final exit
+(the DP prefix costs at each exit block), so accuracy filtering (3c) is a
+post-pass.  ``solve_many`` stacks per-scenario transition tensors into one
+(B, L, S, S) relaxation so whole scenario sweeps (apps x delta targets x
+uplink settings; the Fig. 5-7 grids, multi-app placement) run as a single
+batched call instead of a Python loop over ``solve_fin``.
 
 Quantization undershoot ("floor" mode, see feasible_graph.py) is handled by
 an exact post-check of the selected configuration and, if the true latency
@@ -14,15 +29,40 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from .bellman_ford import (batched_layered_relax_argmin,
+                           batched_layered_relax_kbest,
+                           batched_layered_relax_min, layered_relax)
 from .dnn_profile import DNNProfile
 from .extended_graph import ExtendedGraph, build_extended_graph
-from .feasible_graph import FeasibleGraph, build_feasible_graph
+from .feasible_graph import (FeasibleGraph, batch_layer_tensors,
+                             build_feasible_graph)
 from .problem import AppRequirements, Config, ConfigEval, Solution, evaluate_config
 from .system_model import Network
+
+#: solver backend -> relaxation engine ("python" stays the legacy oracle).
+DP_BACKENDS: Dict[str, str] = {
+    "minplus": "numpy",
+    "numpy": "numpy",
+    "jnp": "jnp",
+    "pallas": "pallas",
+}
+
+#: per-chunk budget for the batched relaxation's (D, S, S) candidate tensor.
+_RELAX_CHUNK_BYTES = 4 << 20
+
+
+def _dist_tol(backend: str) -> float:
+    """Relative error of a backend's DP distances, for the exit prune guard.
+
+    The jnp and pallas engines relax in float32 (~1e-7 relative rounding)
+    even though their histories are returned as float64 arrays; numpy/
+    minplus are exact float64.
+    """
+    return 1e-5 if DP_BACKENDS.get(backend) in ("jnp", "pallas") else 1e-9
 
 
 @dataclass
@@ -42,8 +82,40 @@ class _DPResult:
     par_g: np.ndarray      # (L, N, G+1, K)
     par_k: np.ndarray      # (L, N, G+1, K)
 
+    def parent(self, i: int, n: int, g: int, k: int) -> Tuple[int, int, int]:
+        pn = int(self.par_n[i, n, g, k])
+        assert pn >= 0
+        return pn, int(self.par_g[i, n, g, k]), int(self.par_k[i, n, g, k])
+
+
+class _FlatDP:
+    """DP result over flat states with lazily recovered parents (K=1).
+
+    The vectorized numpy engine relaxes distances only; a parent is
+    recomputed on demand with one argmin column scan per backtracked step.
+    Only a handful of end states per solve are ever traced back, so this
+    skips materializing the full (L, S) argmin tensor entirely.  ``dist`` is
+    a (L, N, G+1, 1) reshaped view of the distance history, interface-
+    compatible with :class:`_DPResult`.
+    """
+    __slots__ = ("hist", "Ws", "G", "dist")
+
+    def __init__(self, hist: np.ndarray, Ws: np.ndarray, N: int, G: int):
+        self.hist = hist               # (L, S)
+        self.Ws = Ws                   # (L-1, S, S)
+        self.G = G
+        self.dist = hist.reshape(hist.shape[0], N, G + 1, 1)
+
+    def parent(self, i: int, n: int, g: int, k: int) -> Tuple[int, int, int]:
+        t = n * (self.G + 1) + g
+        # first-occurrence argmin matches the stored-parent backends' tie
+        # order; dist[i, t] was computed as exactly this column's min
+        s = int(np.argmin(self.hist[i - 1] + self.Ws[i - 1, :, t]))
+        return s // (self.G + 1), s % (self.G + 1), 0
+
 
 def _run_dp(fg: FeasibleGraph, n_best: int = 1) -> _DPResult:
+    """Legacy pure-Python DP — the oracle behind ``backend="python"``."""
     ext = fg.ext
     N, L, G = ext.n_nodes, ext.n_blocks, fg.gamma
     K = max(1, n_best)
@@ -95,29 +167,126 @@ def _run_dp(fg: FeasibleGraph, n_best: int = 1) -> _DPResult:
     return _DPResult(dist=dist, par_n=par_n, par_g=par_g, par_k=par_k)
 
 
-def _backtrack(dp: _DPResult, block: int, node: int, depth: int,
+def _dp_from_flat(hist: np.ndarray, par_s: np.ndarray, par_k: np.ndarray,
+                  N: int, G: int) -> _DPResult:
+    """Reshape flat-state relaxation output (L, S, K) back into a _DPResult.
+
+    par_s/par_k cover layers 1..L-1 ((L-1, S, K)); layer 0 has no parents.
+    """
+    L, S, K = hist.shape
+    dist = hist.reshape(L, N, G + 1, K)
+    par_n = np.full((L, S, K), -1, dtype=np.int32)
+    par_g = np.full((L, S, K), -1, dtype=np.int32)
+    par_k_ = np.full((L, S, K), -1, dtype=np.int32)
+    if L > 1:
+        valid = par_s >= 0
+        np.floor_divide(par_s, G + 1, out=par_n[1:], where=valid,
+                        casting="unsafe")
+        np.remainder(par_s, G + 1, out=par_g[1:], where=valid,
+                     casting="unsafe")
+        np.copyto(par_k_[1:], par_k, where=valid, casting="unsafe")
+    shape = (L, N, G + 1, K)
+    return _DPResult(dist=dist, par_n=par_n.reshape(shape),
+                     par_g=par_g.reshape(shape), par_k=par_k_.reshape(shape))
+
+
+def _run_dp_batch(fgs: Sequence[FeasibleGraph], n_best: int = 1,
+                  backend: str = "minplus") -> List["_DPState"]:
+    """Batched relaxation for a list of feasible graphs.
+
+    Same-shape scenarios (e.g. a delta sweep over one app) are grouped: each
+    group's transition tensors are built in one vectorized scatter and
+    relaxed in one (D, L-1, S, S) batched (min,+) chain — no padding buffers
+    and no cross-shape copies, so mixed-size batches cost exactly the sum of
+    their homogeneous groups.  Distances match per-scenario solves
+    bit-for-bit on the numpy engine.
+    """
+    if backend == "python":
+        return [_run_dp(fg, n_best=n_best) for fg in fgs]
+    engine = DP_BACKENDS.get(backend)
+    if engine is None:
+        raise ValueError(f"unknown FIN backend {backend!r} "
+                         f"(expected python or one of {sorted(DP_BACKENDS)})")
+    K = max(1, n_best)
+    if K > 1 or engine == "pallas":
+        # k-best is numpy-only; per-scenario W defeats shared-W kernel
+        # batching for pallas — both fall back to a per-scenario pass.
+        return [_run_dp_single(fg, n_best=n_best, backend=backend)
+                for fg in fgs]
+
+    groups: Dict[Tuple[int, int, int, int], List[int]] = {}
+    for j, fg in enumerate(fgs):
+        groups.setdefault((fg.ext.n_blocks, fg.ext.n_nodes, fg.gamma, fg.lam),
+                          []).append(j)
+    out: List[Optional["_DPState"]] = [None] * len(fgs)
+    for (_, N, G, _), idxs in groups.items():
+        S = N * (G + 1)
+        # keep the relaxation's (D, S, S) candidate tensor cache-resident:
+        # beyond ~L2/L3 size the broadcast turns memory-bound and batched
+        # throughput collapses, so large groups run as resident chunks
+        chunk = max(1, _RELAX_CHUNK_BYTES // (S * S * 8))
+        for lo in range(0, len(idxs), chunk):
+            part = idxs[lo:lo + chunk]
+            gWs, ginit = batch_layer_tensors([fgs[j] for j in part])
+            if engine == "numpy":
+                hist = batched_layered_relax_min(ginit, gWs)
+                for pos, j in enumerate(part):
+                    out[j] = _FlatDP(hist[pos], gWs[pos], N, G)
+                continue
+            hist, par = batched_layered_relax_argmin(ginit, gWs,
+                                                     backend=engine)
+            for pos, j in enumerate(part):
+                out[j] = _dp_from_flat(
+                    hist[pos][..., None], par[pos][..., None],
+                    np.where(par[pos][..., None] >= 0, 0, -1), N, G)
+    return out
+
+
+def _run_dp_single(fg: FeasibleGraph, n_best: int = 1,
+                   backend: str = "minplus") -> "_DPState":
+    """Vectorized DP for one scenario (dispatches on ``backend``)."""
+    if backend == "python":
+        return _run_dp(fg, n_best=n_best)
+    engine = DP_BACKENDS.get(backend)
+    if engine is None:
+        raise ValueError(f"unknown FIN backend {backend!r} "
+                         f"(expected python or one of {sorted(DP_BACKENDS)})")
+    ext = fg.ext
+    N, G = ext.n_nodes, fg.gamma
+    K = max(1, n_best)
+    Ws = fg.layer_matrices()
+    init = fg.init_vector()
+    if K == 1:
+        if engine == "numpy":
+            hist = batched_layered_relax_min(init[None], Ws[None])
+            return _FlatDP(hist[0], Ws, N, G)
+        hist, par = batched_layered_relax_argmin(init[None], Ws[None],
+                                                 backend=engine)
+        return _dp_from_flat(hist[0][..., None], par[0][..., None],
+                             np.where(par[0][..., None] >= 0, 0, -1), N, G)
+    # k-best keeps the K cheapest slots per state (numpy relaxation).
+    hist, ps, pk = batched_layered_relax_kbest(init[None], Ws[None], K)
+    return _dp_from_flat(hist[0], ps[0], pk[0], N, G)
+
+
+def _backtrack(dp, block: int, node: int, depth: int,
                rank: int) -> List[int]:
     place = [node]
     i, n, g, r = block, node, depth, rank
     while i > 0:
-        pn = dp.par_n[i, n, g, r]
-        pg = dp.par_g[i, n, g, r]
-        pk = dp.par_k[i, n, g, r]
-        assert pn >= 0
-        place.append(int(pn))
-        i, n, g, r = i - 1, int(pn), int(pg), int(pk)
+        n, g, r = dp.parent(i, n, g, r)
+        place.append(n)
+        i -= 1
     return place[::-1]
 
 
-def _configs_at_exit(dp: _DPResult, profile: DNNProfile, k: int
+def _configs_at_exit(dp: "_DPState", profile: DNNProfile, k: int
                      ) -> List[Tuple[Config, float]]:
-    """All DP end-states (x ranks) at exit k's block, sorted by energy.
-
-    Energy weights are *not* quantized (only latency is), so the DP distance
-    is the exact expected energy of the backtracked path; scanning states in
-    energy order and exact-checking each yields the minimum-energy feasible
-    path representable in the feasible graph.
-    """
+    """Seed-faithful eager scan: ALL DP end-states at exit k's block, sorted
+    by energy, every path backtracked up front.  Only the ``python`` oracle
+    backend uses this — it preserves the original solver pipeline that the
+    batched-sweep benchmarks compare against (and that the vectorized lazy
+    post-pass is validated to reproduce)."""
     block = profile.exits[k].block
     d = dp.dist[block]                      # (N, G+1, K)
     flat = np.argsort(d, axis=None)
@@ -132,15 +301,85 @@ def _configs_at_exit(dp: _DPResult, profile: DNNProfile, k: int
     return out
 
 
+def _iter_configs_at_exit(dp: "_DPState", profile: DNNProfile, k: int
+                          ) -> Iterator[Tuple[Config, float]]:
+    """DP end-states (x ranks) at exit k's block, lazily, in energy order.
+
+    Energy weights are *not* quantized (only latency is), so the DP distance
+    is the exact expected energy of the backtracked path; scanning states in
+    energy order and exact-checking each yields the minimum-energy feasible
+    path representable in the feasible graph.  Lazy: the caller stops at the
+    first exactly-feasible configuration, so almost all backtracks are never
+    materialized.
+    """
+    block = profile.exits[k].block
+    d = dp.dist[block]                      # (N, G+1, K)
+    order = np.argsort(d, axis=None, kind="stable")
+    vals = d.ravel()[order]
+    n_finite = int(np.searchsorted(vals, np.inf))
+    ns_, gs_, rs_ = np.unravel_index(order[:n_finite], d.shape)
+    for j in range(n_finite):
+        cfg = Config(placement=_backtrack(dp, block, int(ns_[j]), int(gs_[j]),
+                                          int(rs_[j])),
+                     final_exit=k)
+        yield cfg, float(vals[j])
+
+
+def _best_feasible(network: Network, profile: DNNProfile,
+                   req: AppRequirements, dp: "_DPState",
+                   admissible_exits: Sequence[int],
+                   check_aggregate_load: bool,
+                   oracle: bool = False,
+                   bound_energy: Optional[float] = None,
+                   dist_tol: float = 1e-9
+                   ) -> Optional[Tuple[Config, ConfigEval]]:
+    """Exact (3a)-(3e) post-pass: cheapest feasible config over all exits.
+
+    ``oracle=True`` reproduces the seed pipeline exactly (eager per-exit
+    config lists, no pruning).  Otherwise configs are backtracked lazily and
+    exits are skipped when their cheapest graph state cannot beat the
+    incumbent (or ``bound_energy``, the already-found best of an earlier
+    quantizer pass): the graph distance IS the exact path energy (energy
+    weights are not quantized), so an exit whose minimum is clearly above
+    the bound cannot yield a better feasible config — the ``dist_tol``
+    relative guard keeps float-rounding near-ties evaluated exactly.
+    Callers must widen ``dist_tol`` to the engine's distance error (the
+    float32 jnp/pallas relaxations carry ~1e-7 relative error even though
+    their histories are stored as float64).
+    """
+    found: Optional[Tuple[Config, ConfigEval]] = None
+    for k in admissible_exits:
+        if not oracle:
+            best_e = found[1].energy if found is not None else bound_energy
+            if best_e is not None:
+                dmin = float(dp.dist[profile.exits[k].block].min())
+                if dmin > best_e * (1 + dist_tol):
+                    continue
+        configs = (_configs_at_exit(dp, profile, k) if oracle
+                   else _iter_configs_at_exit(dp, profile, k))
+        for cfg, _graph_e in configs:
+            ev = evaluate_config(network, profile, req, cfg,
+                                 check_aggregate_load=check_aggregate_load)
+            if ev.feasible:
+                if found is None or ev.energy < found[1].energy:
+                    found = (cfg, ev)
+                break  # states are energy-sorted: first feasible is best at k
+    return found
+
+
 def solve_fin(network: Network, profile: DNNProfile, req: AppRequirements,
               *, gamma: int = 10, lam: Optional[int] = None,
               quantize: str = "floor", max_tighten: int = 6,
               tighten_factor: float = 0.85, n_best: int = 1,
+              backend: str = "minplus",
               check_aggregate_load: bool = False) -> Solution:
     """FIN (Alg. 1).  Returns the min-energy feasible configuration.
 
-    ``n_best>1`` keeps the k cheapest paths per (node, depth) state — our
-    beyond-paper fix for small-gamma quantizer collisions (see _DPResult)."""
+    ``backend`` selects the DP engine (``minplus`` vectorized numpy default,
+    ``jnp``/``pallas`` accelerated, ``python`` legacy oracle); all return the
+    same configuration.  ``n_best>1`` keeps the k cheapest paths per (node,
+    depth) state — our beyond-paper fix for small-gamma quantizer collisions
+    (see _DPResult)."""
     t0 = time.perf_counter()
     ext = build_extended_graph(network, profile, req)
 
@@ -151,24 +390,22 @@ def solve_fin(network: Network, profile: DNNProfile, req: AppRequirements,
                         solve_time=time.perf_counter() - t0, solver="fin",
                         meta={"reason": "no exit meets alpha (3c)"})
 
-    def _solve_once(q: str, d_eff: float) -> Optional[Tuple[Config, ConfigEval]]:
+    def _solve_once(q: str, d_eff: float,
+                    bound: Optional[float] = None
+                    ) -> Optional[Tuple[Config, ConfigEval]]:
         fg = build_feasible_graph(ext, gamma, lam=lam, quantize=q,
                                   delta_eff=d_eff)
-        dp = _run_dp(fg, n_best=n_best)
-        found: Optional[Tuple[Config, ConfigEval]] = None
-        for k in admissible_exits:
-            for cfg, _graph_e in _configs_at_exit(dp, profile, k):
-                ev = evaluate_config(network, profile, req, cfg,
-                                     check_aggregate_load=check_aggregate_load)
-                if ev.feasible:
-                    if found is None or ev.energy < found[1].energy:
-                        found = (cfg, ev)
-                    break  # states are energy-sorted: first feasible is best at k
-        return found
+        dp = _run_dp_single(fg, n_best=n_best, backend=backend)
+        return _best_feasible(network, profile, req, dp, admissible_exits,
+                              check_aggregate_load,
+                              oracle=(backend == "python"),
+                              bound_energy=bound,
+                              dist_tol=_dist_tol(backend))
 
     delta_eff = req.delta
     best: Optional[Tuple[Config, ConfigEval]] = None
-    meta = {"gamma": gamma, "quantize": quantize, "tighten_rounds": 0}
+    meta = {"gamma": gamma, "quantize": quantize, "tighten_rounds": 0,
+            "backend": backend}
     for round_ in range(max_tighten + 1):
         best = _solve_once(quantize, delta_eff)
         if best is not None:
@@ -178,8 +415,10 @@ def solve_fin(network: Network, profile: DNNProfile, req: AppRequirements,
         meta["tighten_rounds"] = round_ + 1
     if quantize != "ceil":
         # conservative pass: ceil quantization is feasible-by-construction and
-        # can rescue state-collision misses of the optimistic quantizer.
-        alt = _solve_once("ceil", req.delta)
+        # can rescue state-collision misses of the optimistic quantizer.  The
+        # floor-pass energy bounds the scan (vectorized backends only).
+        alt = _solve_once("ceil", req.delta,
+                          best[1].energy if best is not None else None)
         if alt is not None and (best is None or alt[1].energy < best[1].energy):
             best = alt
             meta["used_ceil_pass"] = True
@@ -194,21 +433,155 @@ def solve_fin(network: Network, profile: DNNProfile, req: AppRequirements,
     return Solution(config=cfg, eval=ev, solve_time=dt, solver="fin", meta=meta)
 
 
+def _broadcast_scenarios(profiles, networks, requirements
+                         ) -> Tuple[List[DNNProfile], List[Network],
+                                    List[AppRequirements]]:
+    def listify(x, single) -> list:
+        return list(x) if not isinstance(x, single) else [x]
+
+    ps = listify(profiles, DNNProfile)
+    ns = listify(networks, Network)
+    rs = listify(requirements, AppRequirements)
+    B = max(len(ps), len(ns), len(rs))
+    out = []
+    for name, xs in (("profiles", ps), ("networks", ns),
+                     ("requirements", rs)):
+        if len(xs) == 1:
+            xs = xs * B
+        if len(xs) != B:
+            raise ValueError(f"solve_many: {name} has length {len(xs)}, "
+                             f"expected 1 or {B}")
+        out.append(xs)
+    return tuple(out)
+
+
+def solve_many(profiles: Union[DNNProfile, Sequence[DNNProfile]],
+               networks: Union[Network, Sequence[Network]],
+               requirements: Union[AppRequirements, Sequence[AppRequirements]],
+               *, gamma: int = 10, lam: Optional[int] = None,
+               quantize: str = "floor", max_tighten: int = 6,
+               tighten_factor: float = 0.85, n_best: int = 1,
+               backend: str = "minplus",
+               check_aggregate_load: bool = False) -> List[Solution]:
+    """Batched FIN: solve B scenarios as one stacked (B, L, S, S) relaxation.
+
+    Arguments broadcast: each of ``profiles`` / ``networks`` /
+    ``requirements`` may be a single object or a length-B sequence (length-1
+    sequences repeat).  Returns one ``Solution`` per scenario, equal to what
+    ``solve_fin`` returns for that scenario with the same ``backend`` — the
+    batched path shares the exact-evaluation post-pass, the tighten loop
+    (re-batched over the still-unsolved scenarios each round) and the ceil
+    rescue pass.  Extended graphs are deduplicated across scenarios that
+    share (network, profile, sigma) — a delta/alpha sweep builds each graph
+    once.  Scenarios of different sizes are grouped by shape and each group
+    relaxes as its own stacked chain (see ``_run_dp_batch``).
+    """
+    t0 = time.perf_counter()
+    profs, nets, reqs = _broadcast_scenarios(profiles, networks, requirements)
+    B = len(profs)
+
+    # extended graphs depend on (network, profile, req.sigma) only — dedupe.
+    ext_cache: Dict[Tuple[int, int, float], ExtendedGraph] = {}
+    exts: List[ExtendedGraph] = []
+    for nw, pf, rq in zip(nets, profs, reqs):
+        key = (id(nw), id(pf), rq.sigma)
+        ext = ext_cache.get(key)
+        if ext is None:
+            ext = build_extended_graph(nw, pf, rq)
+            ext_cache[key] = ext
+        exts.append(ext)
+
+    admissible: List[List[int]] = [
+        [k for k in range(pf.n_exits)
+         if pf.accuracy_of(k) >= rq.alpha - 1e-12]
+        for pf, rq in zip(profs, reqs)]
+
+    metas = [{"gamma": gamma, "quantize": quantize, "tighten_rounds": 0,
+              "backend": backend, "batch_size": B} for _ in range(B)]
+    best: List[Optional[Tuple[Config, ConfigEval]]] = [None] * B
+
+    oracle = backend == "python"
+
+    def _scan(b: int, dp: "_DPState", bound: Optional[float] = None
+              ) -> Optional[Tuple]:
+        return _best_feasible(nets[b], profs[b], reqs[b], dp, admissible[b],
+                              check_aggregate_load, oracle=oracle,
+                              bound_energy=bound,
+                              dist_tol=_dist_tol(backend))
+
+    def _fg(b: int, qmode: str, d_eff: float) -> FeasibleGraph:
+        return build_feasible_graph(exts[b], gamma, lam=lam, quantize=qmode,
+                                    delta_eff=d_eff)
+
+    active = [b for b in range(B) if admissible[b]]
+    delta_eff = [rq.delta for rq in reqs]
+    pending = list(active)
+    ceil_dps: Dict[int, "_DPState"] = {}
+    for round_ in range(max_tighten + 1):
+        if not pending:
+            break
+        fgs = [_fg(b, quantize, delta_eff[b]) for b in pending]
+        if round_ == 0 and quantize != "ceil":
+            # the ceil rescue pass never depends on the tighten loop (it runs
+            # at the un-tightened delta), so its DPs ride in the same batched
+            # relaxation as round 0 — one (2B, L-1, S, S) group per shape.
+            fgs += [_fg(b, "ceil", reqs[b].delta) for b in active]
+        dps = _run_dp_batch(fgs, n_best=n_best, backend=backend)
+        if round_ == 0 and quantize != "ceil":
+            ceil_dps = dict(zip(active, dps[len(pending):]))
+        found = [_scan(b, dp) for b, dp in zip(pending, dps[:len(pending)])]
+        still = []
+        for b, f in zip(pending, found):
+            if f is not None:
+                best[b] = f
+            else:
+                delta_eff[b] *= tighten_factor
+                metas[b]["tighten_rounds"] = round_ + 1
+                still.append(b)
+        pending = still
+    for b in active:
+        if quantize == "ceil":
+            break
+        f = _scan(b, ceil_dps[b],
+                  None if best[b] is None else best[b][1].energy)
+        if f is not None and (best[b] is None
+                              or f[1].energy < best[b][1].energy):
+            best[b] = f
+            metas[b]["used_ceil_pass"] = True
+
+    dt = time.perf_counter() - t0
+    out: List[Solution] = []
+    for b in range(B):
+        if not admissible[b]:
+            out.append(Solution(config=None, eval=None, solve_time=dt / B,
+                                solver="fin",
+                                meta={"reason": "no exit meets alpha (3c)",
+                                      "batch_size": B, "batch_time": dt}))
+            continue
+        meta = {**metas[b], "batch_time": dt}
+        if best[b] is None:
+            out.append(Solution(config=None, eval=None, solve_time=dt / B,
+                                solver="fin",
+                                meta={**meta, "reason": "no feasible path"}))
+            continue
+        cfg, ev = best[b]
+        meta["delta_eff"] = delta_eff[b]
+        meta["n_feasible_states"] = int(np.isfinite(ev.energy))
+        out.append(Solution(config=cfg, eval=ev, solve_time=dt / B,
+                            solver="fin", meta=meta))
+    return out
+
+
 def fin_all_exit_costs(network: Network, profile: DNNProfile,
                        req: AppRequirements, *, gamma: int = 10,
                        lam: Optional[int] = None, quantize: str = "floor",
                        backend: str = "numpy") -> np.ndarray:
     """Graph-cost (not exact-eval) per exit — used by scaling benchmarks to
-    exercise the jnp / pallas (min,+) backends on large instances."""
+    exercise the numpy / jnp / pallas (min,+) backends on large instances."""
     ext = build_extended_graph(network, profile, req)
     fg = build_feasible_graph(ext, gamma, lam=lam, quantize=quantize)
-    if backend == "numpy":
-        dp = _run_dp(fg)
-        dist = dp.dist.reshape(ext.n_blocks, -1)
-    else:
-        from .bellman_ford import layered_relax
-        Ws = fg.layer_matrices()
-        dist = layered_relax(fg.init_vector(), Ws, backend=backend)
+    Ws = fg.layer_matrices()
+    dist = layered_relax(fg.init_vector(), Ws, backend=backend)
     out = np.full(profile.n_exits, np.inf)
     for k, e in enumerate(profile.exits):
         out[k] = dist[e.block].min()

@@ -20,7 +20,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 import numpy as np
 
 from .dnn_profile import DNNProfile, all_paper_apps
-from .fin import solve_fin
+from .fin import solve_fin, solve_many
 from .mcp import solve_mcp
 from .problem import AppRequirements, Solution
 from .system_model import Network, make_network
@@ -77,9 +77,22 @@ class MultiAppResult:
 SolverFn = Callable[[Network, DNNProfile, AppRequirements], Solution]
 
 
-def default_solvers(gamma: int = 10) -> Dict[str, SolverFn]:
+def default_solvers(gamma: int = 10,
+                    backend: str = "minplus") -> Dict[str, SolverFn]:
+    """FIN + MCP.  The FIN entry carries a ``solve_batch`` attribute so the
+    orchestrator can place a whole user population with one batched
+    ``solve_many`` relaxation instead of a per-user solver loop."""
+
+    def fin(nw: Network, pf: DNNProfile, rq: AppRequirements) -> Solution:
+        return solve_fin(nw, pf, rq, gamma=gamma, backend=backend)
+
+    def fin_batch(nws: Sequence[Network], pf: DNNProfile,
+                  rq: AppRequirements) -> List[Solution]:
+        return solve_many(pf, nws, rq, gamma=gamma, backend=backend)
+
+    fin.solve_batch = fin_batch
     return {
-        "fin": lambda nw, pf, rq: solve_fin(nw, pf, rq, gamma=gamma),
+        "fin": fin,
         "mcp": solve_mcp,
     }
 
@@ -134,16 +147,22 @@ def run_multiapp(n_users: int,
         per_user = (slice_frac / max(1, n_users) if divide_slice_by_users
                     else slice_frac)
         qualities = rng.uniform(0.3, 1.0, size=n_users)
+        networks = [user_network(rng, per_user, uplink_quality=float(q))
+                    for q in qualities]
         stats[app] = {name: AppStats(app=app, solver=name, n_users=n_users,
                                      exit_usage=np.zeros(profile.n_exits))
                       for name in solvers}
-        for u in range(n_users):
-            nw = user_network(rng, per_user, uplink_quality=float(qualities[u]))
-            for name, solver in solvers.items():
-                st = stats[app][name]
-                t0 = time.perf_counter()
-                sol = solver(nw, profile, req)
-                st.solve_time += time.perf_counter() - t0
+        for name, solver in solvers.items():
+            st = stats[app][name]
+            batch = getattr(solver, "solve_batch", None)
+            t0 = time.perf_counter()
+            if batch is not None:
+                # one batched relaxation over the whole user population
+                sols = batch(networks, profile, req)
+            else:
+                sols = [solver(nw, profile, req) for nw in networks]
+            st.solve_time += time.perf_counter() - t0
+            for nw, sol in zip(networks, sols):
                 if not sol.feasible:
                     st.failures += 1
                     # an infeasible-but-found config still burns energy in

@@ -18,11 +18,12 @@ Calibration notes (recorded per DESIGN.md Sec. 7):
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .dnn_profile import DNNProfile, all_paper_apps, paper_profile
+from .problem import AppRequirements
 from .system_model import Network, make_network
 
 #: mobile per-app compute slice calibrated on Fig. 4 (see module docstring).
@@ -35,10 +36,17 @@ MOBILE_UPLINK_BPS = 1e9                     # calibrated (see docstring)
 def paper_scenario(*, uplink_bps: float = MOBILE_UPLINK_BPS,
                    mobile_frac: float = MOBILE_SLICE_FRAC,
                    edge_frac: float = EDGE_SLICE_FRAC,
-                   cloud_frac: float = CLOUD_SLICE_FRAC) -> Network:
-    """The single-application evaluation network of Figs. 4-7."""
-    nw = make_network(("mobile", "edge", "cloud"),
-                      compute_frac=(mobile_frac, edge_frac, cloud_frac))
+                   cloud_frac: float = CLOUD_SLICE_FRAC,
+                   n_extra_edge: int = 0) -> Network:
+    """The single-application evaluation network of Figs. 4-7.
+
+    ``n_extra_edge > 0`` densifies the edge tier with that many additional
+    edge nodes (same per-app slice) — the multi-helper infrastructure flavour
+    of Sec. V, used by the batched scenario-sweep benchmarks where placement
+    search spans many candidate hosts."""
+    tiers = ("mobile", "edge") + ("edge",) * n_extra_edge + ("cloud",)
+    fracs = (mobile_frac, edge_frac) + (edge_frac,) * n_extra_edge + (cloud_frac,)
+    nw = make_network(tiers, compute_frac=fracs)
     bw = nw.bandwidth.copy()
     bw[0, 1:] = uplink_bps
     bw[1:, 0] = uplink_bps
@@ -49,6 +57,42 @@ def paper_scenario(*, uplink_bps: float = MOBILE_UPLINK_BPS,
 
 def paper_apps() -> Dict[str, DNNProfile]:
     return all_paper_apps()
+
+
+def sweep_scenarios(*, apps: Sequence[str] = ("h1", "h2", "h3", "h4", "h5",
+                                              "h6"),
+                    deltas_ms: Sequence[float] = (2.0, 5.0, 8.0, 12.0),
+                    alphas: Optional[Sequence[float]] = None,
+                    uplinks_bps: Sequence[float] = (MOBILE_UPLINK_BPS,),
+                    n_extra_edge: int = 0
+                    ) -> Tuple[List[DNNProfile], List[Network],
+                               List[AppRequirements]]:
+    """Cartesian (app x delta x alpha x uplink) scenario grid for batched
+    Fig. 5-7 style sweeps — parallel lists ready for ``fin.solve_many``.
+
+    ``alphas=None`` uses each app's always-satisfiable floor (its weakest
+    exit accuracy), so every scenario exercises the full placement search.
+    Networks are shared across scenarios per uplink setting, which lets the
+    batched solver dedupe the extended-graph construction.
+    """
+    profiles = paper_apps()
+    nets = {u: paper_scenario(uplink_bps=u, n_extra_edge=n_extra_edge)
+            for u in uplinks_bps}
+    ps: List[DNNProfile] = []
+    ns: List[Network] = []
+    rs: List[AppRequirements] = []
+    for app in apps:
+        prof = profiles[app]
+        app_alphas = ([min(e.accuracy for e in prof.exits)] if alphas is None
+                      else alphas)
+        for u in uplinks_bps:
+            for alpha in app_alphas:
+                for d in deltas_ms:
+                    ps.append(prof)
+                    ns.append(nets[u])
+                    rs.append(AppRequirements(alpha=alpha, delta=d * 1e-3,
+                                              sigma=1.0))
+    return ps, ns, rs
 
 
 #: Table VI example configurations (block counts per tier) for Fig. 4.

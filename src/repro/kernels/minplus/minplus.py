@@ -80,3 +80,70 @@ def minplus_pallas(dist: jnp.ndarray, W: jnp.ndarray, *, bb: int = 8,
     # to +inf in f32; clamp for clean downstream comparisons)
     out = jnp.where(out >= BIG, jnp.inf, out)
     return out[:B, :T]
+
+
+def _minplus_argmin_kernel(bs, dist_ref, w_ref, out_ref, arg_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, BIG)
+        arg_ref[...] = jnp.full_like(arg_ref, -1)
+
+    d = dist_ref[...]              # [bb, bs]
+    w = w_ref[...]                 # [bs, bt]
+    cand = d[:, :, None] + w[None, :, :]                     # [bb, bs, bt]
+    local = jnp.min(cand, axis=1)
+    larg = jnp.argmin(cand, axis=1).astype(jnp.int32) + k * bs
+    prev = out_ref[...]
+    # strict < keeps the first-occurrence argmin across S-blocks, matching
+    # np.argmin tie order (within a block jnp.argmin is first-occurrence too)
+    improved = local < prev
+    arg_ref[...] = jnp.where(improved, larg, arg_ref[...])
+    out_ref[...] = jnp.where(improved, local, prev)
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "bs", "bt", "interpret"))
+def minplus_argmin_pallas(dist: jnp.ndarray, W: jnp.ndarray, *, bb: int = 8,
+                          bs: int = 128, bt: int = 128,
+                          interpret: bool = True):
+    """dist: [B, S]; W: [S, T].  Returns (out [B, T], argmin_s [B, T] int32);
+    argmin is -1 where no finite path reaches t.  Same VMEM tiling as
+    ``minplus_pallas`` with an int32 accumulator riding along — this is the
+    parent-recovery variant backing exact FIN path reconstruction."""
+    B, S = dist.shape
+    S2, T = W.shape
+    assert S == S2
+    dist = jnp.where(jnp.isfinite(dist), dist, BIG).astype(jnp.float32)
+    W = jnp.where(jnp.isfinite(W), W, BIG).astype(jnp.float32)
+
+    def pad_to(x, m, axis):
+        r = (-x.shape[axis]) % m
+        if r == 0:
+            return x
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, r)
+        return jnp.pad(x, widths, constant_values=BIG)
+
+    dist_p = pad_to(pad_to(dist, bb, 0), bs, 1)
+    W_p = pad_to(pad_to(W, bs, 0), bt, 1)
+    Bp, Sp = dist_p.shape
+    Tp = W_p.shape[1]
+
+    out, arg = pl.pallas_call(
+        functools.partial(_minplus_argmin_kernel, bs),
+        grid=(Bp // bb, Tp // bt, Sp // bs),
+        in_specs=[
+            pl.BlockSpec((bb, bs), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bs, bt), lambda i, j, k: (k, j)),
+        ],
+        out_specs=(pl.BlockSpec((bb, bt), lambda i, j, k: (i, j)),
+                   pl.BlockSpec((bb, bt), lambda i, j, k: (i, j))),
+        out_shape=(jax.ShapeDtypeStruct((Bp, Tp), jnp.float32),
+                   jax.ShapeDtypeStruct((Bp, Tp), jnp.int32)),
+        interpret=interpret,
+    )(dist_p, W_p)
+    unreached = out >= BIG
+    out = jnp.where(unreached, jnp.inf, out)
+    arg = jnp.where(unreached, -1, arg)
+    return out[:B, :T], arg[:B, :T]

@@ -1,15 +1,36 @@
-"""Jitted wrapper for the minplus Pallas kernel.
+"""Jitted wrappers for the minplus Pallas kernels.
 
 ``interpret=True`` executes the kernel body in Python on CPU (this
 container); on TPU set interpret=False for the compiled Mosaic kernel."""
 from __future__ import annotations
 
+from typing import Tuple
+
 import jax.numpy as jnp
 
-from .minplus import minplus_pallas
+from .minplus import minplus_argmin_pallas, minplus_pallas
 
 
 def minplus_vecmat(dist: jnp.ndarray, W: jnp.ndarray, *,
                    interpret: bool = True) -> jnp.ndarray:
     """dist: [B, S] float; W: [S, T] float (inf = no edge) -> [B, T]."""
     return minplus_pallas(dist, W, interpret=interpret)
+
+
+def minplus_matmat(A: jnp.ndarray, B: jnp.ndarray, *,
+                   interpret: bool = True) -> jnp.ndarray:
+    """Tropical matmul: out[i, j] = min_k A[i, k] + B[k, j].
+
+    The kernel is the same VMEM-tiled reduction as ``minplus_vecmat`` — a
+    row-batch of relaxation fronts IS a (min,+) matrix product — exposed
+    under the algebraic name for batched scenario sweeps (the rows of A are
+    the per-scenario distance fronts sharing one transition matrix B)."""
+    return minplus_pallas(A, B, interpret=interpret)
+
+
+def minplus_vecmat_argmin(dist: jnp.ndarray, W: jnp.ndarray, *,
+                          interpret: bool = True
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """dist: [B, S]; W: [S, T] -> (out [B, T], argmin_s [B, T] int32, -1
+    where t is unreachable).  Parent-recovery variant for the FIN DP."""
+    return minplus_argmin_pallas(dist, W, interpret=interpret)

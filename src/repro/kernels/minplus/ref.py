@@ -7,3 +7,17 @@ import jax.numpy as jnp
 def minplus_ref(dist: jnp.ndarray, W: jnp.ndarray) -> jnp.ndarray:
     """dist: [B, S]; W: [S, T] -> [B, T]; inf-safe tropical product."""
     return jnp.min(dist[:, :, None] + W[None, :, :], axis=1)
+
+
+#: matmat is the same contraction — rows of A are independent fronts.
+minplus_matmat_ref = minplus_ref
+
+
+@jax.jit
+def minplus_argmin_ref(dist: jnp.ndarray, W: jnp.ndarray):
+    """Oracle for the argmin variant: (out [B, T], argmin_s [B, T], -1 where
+    unreachable; first-occurrence tie order like np.argmin)."""
+    cand = dist[:, :, None] + W[None, :, :]
+    out = jnp.min(cand, axis=1)
+    arg = jnp.argmin(cand, axis=1).astype(jnp.int32)
+    return out, jnp.where(jnp.isfinite(out), arg, -1)

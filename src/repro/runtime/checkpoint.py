@@ -1,5 +1,10 @@
 """Checkpointing: atomic, step-tagged pytree save/restore with zstd.
 
+``zstandard`` is optional: without it, saves are uncompressed npz bytes
+under the same layout and restore transparently handles both (it sniffs the
+zstd frame magic); restoring a compressed checkpoint without the module
+raises a clear ModuleNotFoundError.
+
 Layout:   <dir>/step_<N>/ { manifest.json, arrays.npz.zst }
 Writes go to a temp dir + atomic rename, so a crash mid-save never corrupts
 the latest checkpoint (fault-tolerance requirement, DESIGN.md Sec. 5).
@@ -19,10 +24,18 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ModuleNotFoundError:      # optional: fall back to uncompressed npz
+    zstandard = None
 
 MANIFEST = "manifest.json"
 ARRAYS = "arrays.npz.zst"
+
+#: zstd frame magic — restore sniffs it to pick the decompressor, so saves
+#: from environments with and without ``zstandard`` interoperate.
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
 
 
 def _flatten(tree) -> Tuple[List[Tuple[str, np.ndarray]], Any]:
@@ -58,7 +71,10 @@ def save(ckpt_dir: str, step: int, tree, *, keep: int = 3,
 
     buf = io.BytesIO()
     np.savez(buf, **{k: _to_storable(v) for k, v in flat})
-    comp = zstandard.ZstdCompressor(level=3).compress(buf.getvalue())
+    if zstandard is not None:
+        comp = zstandard.ZstdCompressor(level=3).compress(buf.getvalue())
+    else:
+        comp = buf.getvalue()    # uncompressed npz under the same filename
 
     manifest = {
         "step": int(step),
@@ -108,8 +124,14 @@ def available_steps(ckpt_dir: str) -> List[int]:
 def restore(ckpt_dir: str, step: int, like):
     """Restore into the structure of ``like`` (a pytree of arrays/shapes)."""
     base = pathlib.Path(ckpt_dir) / f"step_{step:012d}"
-    raw = zstandard.ZstdDecompressor().decompress(
-        (base / ARRAYS).read_bytes())
+    raw = (base / ARRAYS).read_bytes()
+    if raw[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise ModuleNotFoundError(
+                f"checkpoint {base} is zstd-compressed but the 'zstandard' "
+                "module is not installed — pip install zstandard (or the "
+                "[dev] extra) to restore it")
+        raw = zstandard.ZstdDecompressor().decompress(raw)
     arrays = dict(np.load(io.BytesIO(raw)))
     manifest = json.loads((base / MANIFEST).read_text())
     flat, treedef = _flatten(like)

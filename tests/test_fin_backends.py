@@ -1,0 +1,186 @@
+"""Vectorized min-plus FIN backends vs the legacy Python DP oracle.
+
+The vectorized solver must be *indistinguishable* from the legacy
+``backend="python"`` triple-loop DP: same selected configuration, same final
+exit, same (exactly evaluated) energy — on every paper app and across
+gamma / delta / quantizer settings.  ``solve_many`` must in turn equal a
+loop of per-scenario ``solve_fin`` calls.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (AppRequirements, paper_profile, solve_fin, solve_many,
+                        synthetic_profile)
+from repro.core.bellman_ford import (batched_layered_relax_argmin,
+                                     batched_layered_relax_kbest,
+                                     layered_relax, layered_relax_argmin)
+from repro.core.scenarios import paper_scenario, sweep_scenarios
+
+APPS = ("h1", "h2", "h3", "h4", "h5", "h6")
+
+
+@pytest.fixture(scope="module")
+def scenario():
+    return paper_scenario()
+
+
+def _same(a, b):
+    if a.found != b.found:
+        return False
+    if not a.found:
+        return True
+    return (a.config.placement == b.config.placement
+            and a.config.final_exit == b.config.final_exit
+            and a.energy == b.energy)
+
+
+@pytest.mark.parametrize("backend", ["minplus", "jnp"])
+@pytest.mark.parametrize("app", APPS)
+def test_vectorized_backend_matches_python_oracle(scenario, app, backend):
+    prof = paper_profile(app)
+    alpha = min(e.accuracy for e in prof.exits)
+    for delta in (2e-3, 5e-3, 12e-3):
+        req = AppRequirements(alpha=alpha, delta=delta)
+        oracle = solve_fin(scenario, prof, req, gamma=10, backend="python")
+        vec = solve_fin(scenario, prof, req, gamma=10, backend=backend)
+        assert _same(oracle, vec), (app, delta, backend)
+
+
+@pytest.mark.parametrize("gamma", [3, 10, 25])
+@pytest.mark.parametrize("quantize", ["floor", "ceil"])
+def test_backend_equivalence_across_gamma_and_quantizer(scenario, gamma,
+                                                        quantize):
+    prof = paper_profile("h2")
+    for delta in (2e-3, 4e-3, 8e-3):
+        req = AppRequirements(alpha=0.80, delta=delta)
+        oracle = solve_fin(scenario, prof, req, gamma=gamma,
+                           quantize=quantize, backend="python")
+        vec = solve_fin(scenario, prof, req, gamma=gamma,
+                        quantize=quantize, backend="minplus")
+        assert _same(oracle, vec), (gamma, quantize, delta)
+
+
+def test_kbest_vectorized_matches_python(scenario):
+    """n_best>1 (the beyond-paper collision fix) stays oracle-exact."""
+    prof = paper_profile("h2")
+    req = AppRequirements(0.80, 4e-3)
+    for k in (2, 4):
+        oracle = solve_fin(scenario, prof, req, gamma=3, n_best=k,
+                           backend="python")
+        vec = solve_fin(scenario, prof, req, gamma=3, n_best=k,
+                        backend="minplus")
+        assert _same(oracle, vec), k
+
+
+def test_pallas_backend_matches_python(scenario):
+    """Interpret-mode kernel path (small instance: interpret is slow)."""
+    prof = paper_profile("h6")
+    req = AppRequirements(alpha=0.93, delta=0.5e-3)
+    oracle = solve_fin(scenario, prof, req, gamma=5, backend="python")
+    vec = solve_fin(scenario, prof, req, gamma=5, backend="pallas")
+    assert _same(oracle, vec)
+
+
+def test_unknown_backend_raises(scenario):
+    prof = paper_profile("h6")
+    with pytest.raises(ValueError, match="backend"):
+        solve_fin(scenario, prof, AppRequirements(0.5, 5e-3),
+                  backend="cuda")
+
+
+def test_solve_many_equals_per_scenario_solve(scenario):
+    """Batched sweep over apps x deltas x uplinks == loop of solve()."""
+    ps, ns, rs = sweep_scenarios(deltas_ms=(2.0, 5.0, 12.0),
+                                 uplinks_bps=(1e9, 0.5e9))
+    assert len(ps) >= 20
+    batched = solve_many(ps, ns, rs, gamma=10)
+    looped = [solve_fin(nw, pf, rq, gamma=10)
+              for pf, nw, rq in zip(ps, ns, rs)]
+    oracle = [solve_fin(nw, pf, rq, gamma=10, backend="python")
+              for pf, nw, rq in zip(ps, ns, rs)]
+    for b, l, o in zip(batched, looped, oracle):
+        assert _same(b, l)
+        assert _same(b, o)
+
+
+def test_solve_many_mixed_sizes_and_broadcast(scenario):
+    """Different block counts in one batch (relaxed as separate same-shape
+    groups) and broadcasting of single network / requirement arguments."""
+    profs = [paper_profile("h2"), paper_profile("h6"),
+             synthetic_profile(4, 2, seed=0)]
+    req = AppRequirements(alpha=0.0, delta=8e-3)
+    batched = solve_many(profs, scenario, req)
+    for prof, sol in zip(profs, batched):
+        ref = solve_fin(scenario, prof, req)
+        assert _same(ref, sol), prof.name
+
+
+def test_solve_many_infeasible_alpha_slot(scenario):
+    """An unsatisfiable-alpha scenario inside the batch stays a clean miss
+    without disturbing its neighbours."""
+    prof = paper_profile("h2")          # best exit accuracy < 0.95
+    reqs = [AppRequirements(0.80, 5e-3), AppRequirements(0.95, 5e-3)]
+    sols = solve_many(prof, scenario, reqs)
+    assert sols[0].feasible
+    assert not sols[1].found
+    assert "alpha" in sols[1].meta["reason"]
+    assert _same(sols[0], solve_fin(scenario, prof, reqs[0]))
+
+
+def test_solve_many_backend_jnp(scenario):
+    ps, ns, rs = sweep_scenarios(apps=("h2", "h6"), deltas_ms=(2.0, 8.0))
+    batched = solve_many(ps, ns, rs, backend="jnp")
+    for pf, nw, rq, sol in zip(ps, ns, rs, batched):
+        assert _same(solve_fin(nw, pf, rq, backend="python"), sol)
+
+
+# ---------------------------------------------------------------------------
+# relaxation-primitive level
+# ---------------------------------------------------------------------------
+
+def test_batched_relax_argmin_matches_single():
+    rng = np.random.default_rng(0)
+    B, L, S = 5, 4, 24
+    Ws = rng.uniform(0.1, 5.0, (B, L, S, S))
+    Ws[rng.uniform(size=Ws.shape) < 0.5] = np.inf
+    init = rng.uniform(0, 3, (B, S))
+    init[rng.uniform(size=init.shape) < 0.4] = np.inf
+    hist, par = batched_layered_relax_argmin(init, Ws, backend="numpy")
+    hist_j, par_j = batched_layered_relax_argmin(init, Ws, backend="jnp")
+    for b in range(B):
+        d = layered_relax(init[b], Ws[b], backend="numpy")
+        np.testing.assert_array_equal(hist[b], d)
+        m = np.isfinite(d)
+        np.testing.assert_allclose(hist_j[b][m], d[m], rtol=1e-6)
+        np.testing.assert_array_equal(par_j[b], par[b])
+        # parents reconstruct the distances exactly
+        for l in range(1, L + 1):
+            for t in range(S):
+                p = par[b, l - 1, t]
+                if p >= 0:
+                    assert hist[b, l, t] == hist[b, l - 1, p] + Ws[b, l - 1, p, t]
+                else:
+                    assert not np.isfinite(hist[b, l, t])
+
+
+def test_kbest_rank1_equals_argmin_relax():
+    rng = np.random.default_rng(3)
+    B, L, S = 3, 3, 16
+    Ws = rng.uniform(0.1, 5.0, (B, L, S, S))
+    Ws[rng.uniform(size=Ws.shape) < 0.5] = np.inf
+    init = rng.uniform(0, 3, (B, S))
+    hist1, _ = batched_layered_relax_argmin(init, Ws, backend="numpy")
+    histk, ps, pk = batched_layered_relax_kbest(init, Ws, K=3)
+    np.testing.assert_array_equal(histk[..., 0], hist1)
+    # ranks are sorted per state (inf <= inf for the unused slots)
+    assert (histk[..., :-1] <= histk[..., 1:]).all()
+
+
+def test_layered_relax_argmin_single_wrapper():
+    rng = np.random.default_rng(5)
+    S, L = 12, 3
+    Ws = rng.uniform(0.1, 5.0, (L, S, S))
+    init = rng.uniform(0, 3, S)
+    hist, par = layered_relax_argmin(init, Ws, backend="numpy")
+    assert hist.shape == (L + 1, S) and par.shape == (L, S)
+    np.testing.assert_array_equal(hist, layered_relax(init, Ws, "numpy"))

@@ -8,8 +8,10 @@ from repro.kernels.decode_attn.ops import decode_attn
 from repro.kernels.decode_attn.ref import decode_attn_ref
 from repro.kernels.ee_gate.ops import ee_gate
 from repro.kernels.ee_gate.ref import ee_gate_ref
-from repro.kernels.minplus.ops import minplus_vecmat
-from repro.kernels.minplus.ref import minplus_ref
+from repro.kernels.minplus.ops import (minplus_matmat, minplus_vecmat,
+                                       minplus_vecmat_argmin)
+from repro.kernels.minplus.ref import (minplus_argmin_ref, minplus_matmat_ref,
+                                       minplus_ref)
 
 
 # ---------------------------------------------------------------------------
@@ -39,6 +41,53 @@ def test_minplus_identity():
     d = np.random.default_rng(0).uniform(0, 3, (4, S)).astype(np.float32)
     got = np.asarray(minplus_vecmat(jnp.asarray(d), jnp.asarray(ident)))
     np.testing.assert_allclose(got, d, rtol=1e-6)
+
+
+@pytest.mark.parametrize("B,S,T", [(1, 16, 16), (8, 128, 128), (3, 37, 65),
+                                   (2, 1, 257)])
+@pytest.mark.parametrize("density", [1.0, 0.4])
+def test_minplus_argmin_sweep(B, S, T, density):
+    rng = np.random.default_rng(B * 999 + S + T)
+    dist = rng.uniform(0, 10, (B, S)).astype(np.float32)
+    W = rng.uniform(0, 5, (S, T)).astype(np.float32)
+    W[rng.uniform(size=W.shape) > density] = np.inf
+    dist[rng.uniform(size=dist.shape) > 0.9] = np.inf
+    got, arg = minplus_vecmat_argmin(jnp.asarray(dist), jnp.asarray(W))
+    want, arg_r = minplus_argmin_ref(jnp.asarray(dist), jnp.asarray(W))
+    got, arg = np.asarray(got), np.asarray(arg)
+    want, arg_r = np.asarray(want), np.asarray(arg_r)
+    finite = np.isfinite(want)
+    assert (np.isfinite(got) == finite).all()
+    np.testing.assert_allclose(got[finite], want[finite], rtol=1e-6)
+    assert (arg[~finite] == -1).all()
+    # the reported parent reproduces the min exactly (ties may differ from
+    # the oracle's argmin only between equal-valued sources)
+    b, t = np.nonzero(finite)
+    np.testing.assert_allclose(dist[b, arg[b, t]] + W[arg[b, t], t],
+                               got[finite], rtol=1e-6)
+    np.testing.assert_array_equal(arg, arg_r)
+
+
+def test_minplus_matmat_is_tropical_matmul():
+    rng = np.random.default_rng(7)
+    A = rng.uniform(0, 5, (17, 33)).astype(np.float32)
+    B = rng.uniform(0, 5, (33, 21)).astype(np.float32)
+    B[rng.uniform(size=B.shape) < 0.3] = np.inf
+    got = np.asarray(minplus_matmat(jnp.asarray(A), jnp.asarray(B)))
+    want = np.asarray(minplus_matmat_ref(jnp.asarray(A), jnp.asarray(B)))
+    finite = np.isfinite(want)
+    assert (np.isfinite(got) == finite).all()
+    np.testing.assert_allclose(got[finite], want[finite], rtol=1e-6)
+    # associativity on a chain: (A*B)*C == A*(B*C) in the tropical semiring
+    C = rng.uniform(0, 5, (21, 9)).astype(np.float32)
+    left = minplus_matmat(minplus_matmat(jnp.asarray(A), jnp.asarray(B)),
+                          jnp.asarray(C))
+    right = minplus_matmat(jnp.asarray(A),
+                           np.asarray(minplus_matmat(jnp.asarray(B),
+                                                     jnp.asarray(C))))
+    l, r = np.asarray(left), np.asarray(right)
+    m = np.isfinite(l)
+    np.testing.assert_allclose(l[m], r[m], rtol=1e-5)
 
 
 def test_minplus_backs_fin_dp():

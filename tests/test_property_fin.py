@@ -1,6 +1,8 @@
 """Property-based tests (hypothesis) for the FIN framework invariants."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 
