@@ -16,9 +16,10 @@ from repro.kernels.decode_attn.ops import decode_attn
 from repro.kernels.decode_attn.ref import decode_attn_ref
 from repro.kernels.ee_gate.ops import ee_gate
 from repro.kernels.ee_gate.ref import ee_gate_ref
-from repro.kernels.minplus.ops import (minplus_matmat, minplus_vecmat,
-                                       minplus_vecmat_argmin)
-from repro.kernels.minplus.ref import minplus_argmin_ref, minplus_ref
+from repro.kernels.minplus.ops import (banded_minplus_argmin, minplus_matmat,
+                                       minplus_vecmat, minplus_vecmat_argmin)
+from repro.kernels.minplus.ref import (banded_minplus_ref, minplus_argmin_ref,
+                                       minplus_ref)
 
 from .common import Row, batched_solver_row, kv, timed
 
@@ -63,6 +64,27 @@ def run() -> List[Row]:
                         np.asarray(got_mm)[np.isfinite(np.asarray(want))]
                         - np.asarray(want)[np.isfinite(np.asarray(want))]
                     ).max()))))
+
+    # banded minplus: one FIN relaxation layer over the compact (node, depth)
+    # grid — the O(N^2 G) variant the banded solver backends run on TPU
+    for N, G in ((32, 24), (64, 48)):
+        bdist = rng.uniform(0, 10, (N, G + 1)).astype(np.float32)
+        bdist[rng.uniform(size=bdist.shape) < 0.4] = np.inf
+        bE = rng.uniform(0, 5, (N, N)).astype(np.float32)
+        bE[rng.uniform(size=bE.shape) < 0.3] = np.inf
+        bst = rng.integers(0, G + 1, (N, N)).astype(np.int32)
+        args = (jnp.asarray(bdist), jnp.asarray(bE), jnp.asarray(bst))
+        (gb, ab), us_k = timed(lambda: jax.block_until_ready(
+            banded_minplus_argmin(*args)), repeats=2)
+        (wb, wab), us_r = timed(lambda: jax.block_until_ready(
+            banded_minplus_ref(*args)), repeats=2)
+        m = np.isfinite(np.asarray(wb))
+        err = float(np.abs(np.asarray(gb)[m] - np.asarray(wb)[m]).max()) \
+            if m.any() else 0.0
+        agree = float((np.asarray(ab) == np.asarray(wab)).mean())
+        rows.append(Row(f"kernels/minplus-banded/N{N}xG{G}", us_k,
+                        kv(ref_us=us_r, max_abs_err=err, argmin_agree=agree,
+                           dense_S=N * (G + 1))))
 
     rows.extend(_batched_solver_rows())
 

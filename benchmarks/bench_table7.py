@@ -4,9 +4,14 @@ Paper reference values (ms, ThinkPad P1 i7): B-AlexNet 0.591/0.892/2.450,
 B-ResNet 0.545/0.657/1.158, B-LeNet 0.243/0.461/0.816 for MCP/FIN3/FIN10.
 Claims validated: FIN(3) < 2x MCP, FIN(10) < 5x MCP, FIN < 2.5 ms.
 
-Also exercises the large-instance scaling path (many nodes, large gamma)
-through the jnp (min,+) backend — the workload the Pallas ``minplus`` kernel
-targets on TPU.
+The ``table7-banded`` rows record the PR-2 headline: the depth-banded
+relaxation (compact (N, G+1) states) vs the dense flattened-state (S, S)
+path — wall-clock speedup and peak-tensor-bytes ratio per gamma, plus a
+``solve_many`` backend comparison with a per-scenario config-agreement
+count against the ``python`` oracle.  Also exercises the large-instance
+scaling path (many nodes, large gamma) through the banded / dense-jnp
+backends — the workload the banded ``minplus`` Pallas kernel targets on
+TPU.
 """
 from __future__ import annotations
 
@@ -16,11 +21,11 @@ from typing import List
 import numpy as np
 
 from repro.core import (AppRequirements, fin_all_exit_costs, make_network,
-                        paper_profile, solve_fin, solve_mcp,
+                        paper_profile, solve_fin, solve_many, solve_mcp,
                         synthetic_profile)
-from repro.core.scenarios import paper_scenario
+from repro.core.scenarios import paper_scenario, sweep_scenarios
 
-from .common import Row, batched_solver_row, kv
+from .common import Row, batched_solver_row, kv, smoke
 
 MODELS = {"b-alexnet": "h2", "b-resnet": "h4", "b-lenet": "h6"}
 
@@ -28,10 +33,81 @@ MODELS = {"b-alexnet": "h2", "b-resnet": "h4", "b-lenet": "h6"}
 def _avg_time(fn, repeats=20):
     # warmup
     fn()
+    repeats = min(repeats, 2) if smoke() else repeats
     t0 = time.perf_counter()
     for _ in range(repeats):
         fn()
     return (time.perf_counter() - t0) / repeats
+
+
+def _relax_peak_bytes(N: int, L: int, gamma: int) -> dict:
+    """Peak tensor bytes of one scenario's relaxation, dense vs banded.
+
+    Dense: the scattered (L-1, S, S) float64 transition tensors plus the
+    (S, S) per-layer candidate, S = N*(gamma+1) — O(N^2 G^2).  Banded: the
+    (L-1, N, N) energy+steepness pair, the int32 gather-index tensor and
+    the (N, N, G+1) per-layer candidate — O(N^2 G).
+    """
+    S = N * (gamma + 1)
+    dense = (L - 1) * S * S * 8 + S * S * 8
+    banded = (2 * (L - 1) * N * N * 8            # E + steep
+              + (L - 1) * N * N * (gamma + 1) * 4   # gather indices (int32)
+              + N * N * (gamma + 1) * 8             # candidate
+              + N * (gamma + 2) * 8)                # padded distance grid
+    return dict(dense_peak_bytes=dense, banded_peak_bytes=banded,
+                mem_ratio=dense / banded)
+
+
+def _banded_vs_dense_rows() -> List[Row]:
+    """The PR-2 acceptance rows: banded vs dense relaxation at gamma=10/25."""
+    rows: List[Row] = []
+    n_nodes = 7 if smoke() else 15
+    n_blocks = 6 if smoke() else 12
+    tiers = ("mobile",) + ("edge",) * (n_nodes - 2) + ("cloud",)
+    big = make_network(tiers, compute_frac=[1e-3] * n_nodes)
+    prof = synthetic_profile(n_blocks, 4, seed=0, ops_scale=5e7)
+    req = AppRequirements(alpha=0.0, delta=20e-3)
+    for gamma in (10, 25):
+        t_dense = _avg_time(
+            lambda: fin_all_exit_costs(big, prof, req, gamma=gamma,
+                                       backend="numpy"), repeats=10)
+        t_banded = _avg_time(
+            lambda: fin_all_exit_costs(big, prof, req, gamma=gamma,
+                                       backend="banded"), repeats=10)
+        np.testing.assert_array_equal(
+            fin_all_exit_costs(big, prof, req, gamma=gamma, backend="banded"),
+            fin_all_exit_costs(big, prof, req, gamma=gamma, backend="numpy"))
+        rows.append(Row(
+            f"table7-banded/N{n_nodes}/g{gamma}", t_banded * 1e6,
+            kv(dense_ms=t_dense * 1e3, banded_ms=t_banded * 1e3,
+               speedup=t_dense / t_banded,
+               **_relax_peak_bytes(n_nodes, n_blocks, gamma))))
+
+    # end-to-end: the 48-scenario Fig. 5-7 sweep through solve_many with the
+    # banded default vs the dense (S, S) backend, configs checked against
+    # the python oracle per scenario
+    ps, ns, rs = sweep_scenarios(deltas_ms=(2.0, 5.0, 8.0, 12.0),
+                                 uplinks_bps=(1e9, 0.5e9))
+    if smoke():
+        ps, ns, rs = ps[:12], ns[:12], rs[:12]
+    sols_banded = solve_many(ps, ns, rs, gamma=10, backend="minplus")
+    t_banded = _avg_time(lambda: solve_many(ps, ns, rs, gamma=10,
+                                            backend="minplus"), repeats=3)
+    t_dense = _avg_time(lambda: solve_many(ps, ns, rs, gamma=10,
+                                           backend="dense"), repeats=3)
+    oracle = [solve_fin(n_, p_, r_, gamma=10, backend="python")
+              for p_, n_, r_ in zip(ps, ns, rs)]
+    agree = sum(
+        1 for a, b in zip(oracle, sols_banded)
+        if a.found == b.found and (not a.found or
+                                   (a.config.placement == b.config.placement
+                                    and a.energy == b.energy)))
+    rows.append(Row(
+        f"table7-banded/solve_many-{len(ps)}", t_banded / len(ps) * 1e6,
+        kv(n_scenarios=len(ps), banded_ms=t_banded * 1e3,
+           dense_ms=t_dense * 1e3, speedup=t_dense / t_banded,
+           oracle_agree=agree)))
+    return rows
 
 
 def run() -> List[Row]:
@@ -53,6 +129,8 @@ def run() -> List[Row]:
                fin10_over_mcp=t_fin10 / t_mcp,
                minplus_speedup=t_legacy / t_fin10)))
 
+    rows.extend(_banded_vs_dense_rows())
+
     # batched solver wall-clock: all three models' per-model requirement grid
     # as one solve_many call vs the legacy per-scenario loop
     profs, reqs = [], []
@@ -63,10 +141,12 @@ def run() -> List[Row]:
             profs.append(prof)
             reqs.append(AppRequirements(alpha=alpha, delta=delta))
     rows.append(batched_solver_row("table7/solver-batched", profs, nw, reqs,
-                                   repeats=5))
+                                   repeats=2 if smoke() else 5))
 
-    # scaling study: bigger networks / gamma, numpy DP vs jnp min-plus backend
-    for n_extra, gamma in ((13, 32), (29, 64)):
+    # scaling study: bigger networks / gamma — banded vs dense-numpy vs
+    # dense-jnp relaxation on large state spaces
+    scales = ((5, 16),) if smoke() else ((13, 32), (29, 64))
+    for n_extra, gamma in scales:
         tiers = ("mobile",) + ("edge",) * n_extra + ("cloud",)
         big = make_network(tiers, compute_frac=[1e-3] * (n_extra + 2))
         prof = synthetic_profile(12, 4, seed=0, ops_scale=5e7)
@@ -77,10 +157,14 @@ def run() -> List[Row]:
         t_jnp = _avg_time(
             lambda: fin_all_exit_costs(big, prof, req, gamma=gamma,
                                        backend="jnp"), repeats=3)
+        t_banded = _avg_time(
+            lambda: fin_all_exit_costs(big, prof, req, gamma=gamma,
+                                       backend="banded"), repeats=3)
         states = big.n_nodes * (gamma + 1)
         rows.append(Row(
-            f"table7-scale/N{big.n_nodes}/g{gamma}", t_np * 1e6,
-            kv(states=states, numpy_ms=t_np * 1e3, jnp_ms=t_jnp * 1e3)))
+            f"table7-scale/N{big.n_nodes}/g{gamma}", t_banded * 1e6,
+            kv(states=states, numpy_ms=t_np * 1e3, jnp_ms=t_jnp * 1e3,
+               banded_ms=t_banded * 1e3, banded_speedup=t_np / t_banded)))
     return rows
 
 

@@ -2,13 +2,23 @@
 
 Every bench function yields ``Row(name, us_per_call, derived)`` records; the
 ``derived`` field carries the paper-facing metric (energy, latency, ratio...)
-as a compact ``key=value;...`` string so ``run.py`` can emit a uniform CSV.
+as a compact ``key=value;...`` string so ``run.py`` can emit a uniform CSV
+(or, with ``--json``, machine-readable records with the key-values parsed).
+
+``run.py --smoke`` sets REPRO_BENCH_SMOKE=1; benches consult ``smoke()`` to
+shrink instance sizes / repeat counts for the CI perf-regression smoke job.
 """
 from __future__ import annotations
 
+import os
 import time
 from dataclasses import dataclass
 from typing import Callable, Dict, Iterable, List
+
+
+def smoke() -> bool:
+    """True when running as the reduced-size CI smoke pass."""
+    return os.environ.get("REPRO_BENCH_SMOKE", "") not in ("", "0")
 
 
 @dataclass
@@ -19,6 +29,22 @@ class Row:
 
     def csv(self) -> str:
         return f"{self.name},{self.us_per_call:.3f},{self.derived}"
+
+    def to_dict(self) -> Dict[str, object]:
+        """JSON-friendly record: the ``key=value;...`` payload is parsed and
+        numeric values converted, so downstream tooling (BENCH_PR2.json,
+        regression checks) can compare fields without re-parsing CSV."""
+        out: Dict[str, object] = {"name": self.name,
+                                  "us_per_call": round(self.us_per_call, 3)}
+        for part in self.derived.split(";"):
+            if "=" not in part:
+                continue
+            k, v = part.split("=", 1)
+            try:
+                out[k] = int(v) if v.lstrip("+-").isdigit() else float(v)
+            except ValueError:
+                out[k] = v
+        return out
 
 
 def timed(fn: Callable, *args, repeats: int = 3, **kwargs):

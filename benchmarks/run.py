@@ -1,9 +1,13 @@
 """Benchmark harness — one bench per paper table/figure + system benches.
 
-Usage:  PYTHONPATH=src python -m benchmarks.run [--only substr]
+Usage:  PYTHONPATH=src python -m benchmarks.run [--only substr] [--json]
+                                                [--smoke]
 
-Prints ``name,us_per_call,derived`` CSV rows (one per measurement), matching
-the paper artifacts:
+Prints ``name,us_per_call,derived`` CSV rows (one per measurement) or, with
+``--json``, a JSON document ``{"benches": {<bench>: [row...]}}`` with the
+derived key-values parsed (the format of the committed BENCH_PR2.json).
+``--smoke`` shrinks instance sizes / repeats (REPRO_BENCH_SMOKE=1) for the
+CI perf-regression smoke job.  Benches match the paper artifacts:
   fig4      Table VI configuration study (latency / energy / accuracy)
   fig5_7    Opt vs MCP vs FIN(3,10) energy across (delta, alpha) targets
   fig6      computation/communication energy breakdown
@@ -17,6 +21,8 @@ from __future__ import annotations
 
 import argparse
 import importlib
+import json
+import os
 import sys
 import traceback
 
@@ -37,9 +43,19 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="run only benches whose name contains this substring")
+    ap.add_argument("--json", action="store_true",
+                    help="emit a JSON document with parsed derived key-values"
+                         " instead of CSV rows")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes/repeats (sets REPRO_BENCH_SMOKE=1) — "
+                         "the CI perf smoke mode")
     args = ap.parse_args()
+    if args.smoke:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
 
-    print("name,us_per_call,derived")
+    if not args.json:
+        print("name,us_per_call,derived")
+    collected = {}
     failures = []
     for mod_name in BENCHES:
         if args.only and args.only not in mod_name:
@@ -51,10 +67,17 @@ def main() -> None:
             continue
         try:
             for row in mod.run():
-                print(row.csv())
-                sys.stdout.flush()
+                if args.json:
+                    collected.setdefault(mod_name.replace("bench_", ""),
+                                         []).append(row.to_dict())
+                else:
+                    print(row.csv())
+                    sys.stdout.flush()
         except Exception:
             failures.append((mod_name, traceback.format_exc()))
+    if args.json:
+        print(json.dumps({"smoke": bool(args.smoke), "benches": collected},
+                         indent=1))
     if failures:
         for name, err in failures:
             print(f"# BENCH-FAILED {name}: {err.splitlines()[-1]}", file=sys.stderr)

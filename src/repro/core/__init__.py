@@ -15,22 +15,27 @@ from .dnn_profile import (DNNProfile, ExitSpec, paper_profile, all_paper_apps,
                           synthetic_profile, BITS_PER_FEATURE)
 from .problem import (AppRequirements, Config, ConfigEval, Solution,
                       evaluate_config)
-from .extended_graph import ExtendedGraph, build_extended_graph, to_networkx
-from .feasible_graph import FeasibleGraph, build_feasible_graph
+from .extended_graph import (ExtendedGraph, build_extended_graph,
+                             build_extended_graphs, to_networkx)
+from .feasible_graph import (FeasibleGraph, build_feasible_graph,
+                             build_feasible_graphs)
 from .fin import solve_fin, solve_many, fin_all_exit_costs
 from .mcp import solve_mcp
 from .optimum import solve_opt
 from .multiapp import (run_multiapp, MultiAppResult, AppStats,
-                       PAPER_MULTIAPP_REQS, default_solvers, user_network)
+                       PAPER_MULTIAPP_REQS, default_solvers, user_network,
+                       user_networks)
 
 __all__ = [
     "NodeSpec", "Network", "make_node", "make_network", "PAPER_TIERS",
     "TPU_TIERS", "DNNProfile", "ExitSpec", "paper_profile", "all_paper_apps",
     "synthetic_profile", "BITS_PER_FEATURE", "AppRequirements", "Config",
     "ConfigEval", "Solution", "evaluate_config", "ExtendedGraph",
-    "build_extended_graph", "to_networkx", "FeasibleGraph",
-    "build_feasible_graph", "solve_fin", "solve_many", "fin_all_exit_costs",
+    "build_extended_graph", "build_extended_graphs", "to_networkx",
+    "FeasibleGraph", "build_feasible_graph", "build_feasible_graphs",
+    "solve_fin", "solve_many", "fin_all_exit_costs",
     "solve_mcp",
     "solve_opt", "run_multiapp", "MultiAppResult", "AppStats",
     "PAPER_MULTIAPP_REQS", "default_solvers", "user_network",
+    "user_networks",
 ]

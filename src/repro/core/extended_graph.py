@@ -23,7 +23,7 @@ i is paid by the fraction that *survives* its exit (DESIGN.md Sec. 1).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -77,20 +77,7 @@ def build_extended_graph(network: Network, profile: DNNProfile,
     e_tx, e_rx = network.e_tx, network.e_rx
     sigma = req.sigma
 
-    # ops per block including its attached exit head (all deployed exits run).
-    kmax = profile.n_exits - 1
-    ops = np.array([profile.block_ops_with_exit(i, kmax) for i in range(L)])
-    surv_in = np.array([profile.survival_entering_block(i, kmax) for i in range(L)])
-    surv_out = np.array([profile.survival_after_block(i, kmax) for i in range(L)])
-    cut_bits = np.asarray(profile.cut_bits, dtype=np.float64)
-
-    acc_seq = np.zeros(L)
-    best = 0.0
-    for i in range(L):
-        e = profile.exit_at(i)
-        if e is not None:
-            best = max(best, e.accuracy)
-        acc_seq[i] = best
+    ops, surv_in, surv_out, cut_bits, acc_seq = _profile_tensors(profile)
 
     C = ops[:, None] / comp[None, :]                                     # (L, N)
 
@@ -137,6 +124,137 @@ def build_extended_graph(network: Network, profile: DNNProfile,
         init_T=init_T, init_E=init_E, init_mask=init_mask,
         surv_in=surv_in, surv_out=surv_out, acc_seq=acc_seq,
     )
+
+
+def _profile_tensors(profile: DNNProfile):
+    """Per-profile vectors shared by every scenario using that profile.
+
+    ops per block include the attached exit head (all deployed exits run);
+    the single source for both the per-scenario and the batched builders.
+    """
+    L = profile.n_blocks
+    kmax = profile.n_exits - 1
+    ops = np.array([profile.block_ops_with_exit(i, kmax) for i in range(L)])
+    surv_in = np.array([profile.survival_entering_block(i, kmax)
+                        for i in range(L)])
+    surv_out = np.array([profile.survival_after_block(i, kmax)
+                         for i in range(L)])
+    cut_bits = np.asarray(profile.cut_bits, dtype=np.float64)
+    acc_seq = np.zeros(L)
+    best = 0.0
+    for i in range(L):
+        e = profile.exit_at(i)
+        if e is not None:
+            best = max(best, e.accuracy)
+        acc_seq[i] = best
+    return ops, surv_in, surv_out, cut_bits, acc_seq
+
+
+def build_extended_graphs(networks: Sequence[Network],
+                          profiles: Sequence[DNNProfile],
+                          requirements: Sequence[AppRequirements]
+                          ) -> List[ExtendedGraph]:
+    """Batched stage-1 construction for B scenarios (parallel lists).
+
+    Scenarios sharing (network, profile, sigma) are deduplicated — they get
+    the *same* ``ExtendedGraph`` object, like the per-scenario cache the
+    batched solver used to keep.  The remaining unique scenarios are grouped
+    by (profile, node count) and each group's tensors are computed in one
+    vectorized pass over stacked (D, N, N) bandwidth / (D, N) compute
+    arrays — a user population (Fig. 8: one network per user, differing in
+    uplink factor and slice) is constructed in a handful of array ops
+    instead of D Python builds.  Element-for-element identical to
+    ``build_extended_graph`` per scenario.
+    """
+    B = len(networks)
+    assert len(profiles) == B and len(requirements) == B
+    out: List[Optional[ExtendedGraph]] = [None] * B
+
+    # dedupe on object identity + sigma (the only req field stage 1 reads)
+    unique: Dict[Tuple[int, int, float], List[int]] = {}
+    for b, (nw, pf, rq) in enumerate(zip(networks, profiles, requirements)):
+        unique.setdefault((id(nw), id(pf), rq.sigma), []).append(b)
+
+    groups: Dict[Tuple[int, int], List[Tuple[int, int, float]]] = {}
+    for key in unique:
+        b0 = unique[key][0]
+        groups.setdefault((id(profiles[b0]), networks[b0].n_nodes),
+                          []).append(key)
+
+    prof_cache: Dict[int, Tuple] = {}
+    for (pid, N), keys in groups.items():
+        reps = [unique[k][0] for k in keys]          # one scenario per key
+        profile = profiles[reps[0]]
+        if pid not in prof_cache:
+            prof_cache[pid] = _profile_tensors(profile)
+        ops, surv_in, surv_out, cut_bits, acc_seq = prof_cache[pid]
+        L = profile.n_blocks
+        D = len(reps)
+
+        bw = np.stack([networks[b].bandwidth for b in reps])     # (D, N, N)
+        comp_raw = np.stack([networks[b].compute for b in reps])  # (D, N)
+        p_act = np.stack([networks[b].power_active for b in reps])
+        e_tx = np.stack([networks[b].e_tx for b in reps])
+        e_rx = np.stack([networks[b].e_rx for b in reps])
+        src = np.array([networks[b].source_node for b in reps])
+        sigma = np.array([requirements[b].sigma for b in reps])
+        comp = np.where(comp_raw > 0, comp_raw, np.inf)
+
+        eye = np.eye(N, dtype=bool)
+        C = ops[None, :, None] / comp[:, None, :]                # (D, L, N)
+
+        link_ok = (bw > 0) | eye[None]
+        bw_eff = np.where(link_ok, np.where(eye[None], np.inf, bw), np.nan)
+        bw_eff[:, eye] = np.inf
+
+        T = cut_bits[:-1, None, None][None] / bw_eff[:, None]    # (D, L-1, N, N)
+        T = np.where(np.isnan(T), np.inf, T)
+        T[:, :, eye] = 0.0
+
+        pair_e = e_tx[:, :, None] + e_rx[:, None, :]             # (D, N, N)
+        comm_E = (surv_out[:-1, None, None] * cut_bits[:-1, None, None]
+                  )[None] * pair_e[:, None]
+        comm_E[:, :, eye] = 0.0
+        comp_E = surv_in[1:, None][None] * p_act[:, None, :] * C[:, 1:, :]
+        E = comm_E + comp_E[:, :, None, :]                       # (D, L-1, N, N)
+
+        TT = T + C[:, 1:, :][:, :, None, :]
+
+        load_bits = (sigma[:, None, None, None]
+                     * surv_out[:-1, None, None][None]
+                     * cut_bits[:-1, None, None][None])
+        bw_fits = load_bits <= np.where(eye[None], np.inf, bw)[:, None]
+        bw_fits |= eye[None, None]
+        comp_fits = (sigma[:, None, None] * surv_in[1:][None, :, None]
+                     * ops[1:][None, :, None]) <= comp[:, None, :]
+        mask = link_ok[:, None] & bw_fits & comp_fits[:, :, None, :]
+
+        in_bits = profile.input_bits
+        d_i = np.arange(D)
+        is_src = np.arange(N)[None, :] == src[:, None]           # (D, N)
+        b_src = np.where(is_src, np.inf, bw[d_i, src])           # (D, N)
+        init_T = in_bits / np.where(b_src > 0, b_src, np.nan) + C[:, 0]
+        init_T = np.where(np.isnan(init_T), np.inf, init_T)
+        init_comm = np.where(is_src, 0.0,
+                             (e_tx[d_i, src][:, None] + e_rx) * in_bits)
+        init_E = init_comm + surv_in[0] * p_act * C[:, 0]
+        init_mask = ((b_src > 0)
+                     & (sigma[:, None] * in_bits <= b_src)
+                     & (sigma[:, None] * surv_in[0] * ops[0] <= comp))
+
+        for pos, key in enumerate(keys):
+            b0 = unique[key][0]
+            ext = ExtendedGraph(
+                network=networks[b0], profile=profile,
+                req=requirements[b0],
+                C=C[pos], T=T[pos], E=E[pos], TT=TT[pos], mask=mask[pos],
+                init_T=init_T[pos], init_E=init_E[pos],
+                init_mask=init_mask[pos],
+                surv_in=surv_in, surv_out=surv_out, acc_seq=acc_seq,
+            )
+            for b in unique[key]:
+                out[b] = ext
+    return out
 
 
 def to_networkx(g: ExtendedGraph):

@@ -64,6 +64,14 @@ class FeasibleGraph:
         return self.ext.n_nodes * (self.gamma + 1)
 
     @property
+    def depth_window_lo(self) -> Optional[int]:
+        """Lower bound of the lambda-proximity window on target depths
+        (Alg. 1, Fn II), or None when the window is inactive (lam == gamma).
+        A target depth g2 is admissible iff g2 >= lo or the edge is flat
+        (steepness 0, i.e. g2 == g)."""
+        return self.gamma - self.lam if self.lam < self.gamma else None
+
+    @property
     def n_vertices(self) -> int:
         return self.ext.n_blocks * self.n_states + 1
 
@@ -113,6 +121,28 @@ class FeasibleGraph:
         ok = np.isfinite(d) & (d <= G)
         n_idx = np.nonzero(ok)[0]
         v[n_idx * (G + 1) + d[n_idx].astype(np.int64)] = self.ext.init_E[n_idx]
+        return v
+
+    # -- compact banded representation (no (S, S) materialization) ------------
+    def banded_tensors(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(E (L-1, N, N), steep (L-1, N, N)) — the native banded form.
+
+        The feasible graph's transition structure is banded in depth: an edge
+        only ever connects depth g to depth g + steep(n, n'), so the whole
+        (S, S) layer matrix is determined by one energy weight and one
+        integer steepness per (n, n') pair.  These are exactly the tensors
+        the graph already stores — no scatter, no copy.
+        """
+        return self.ext.E, self.steep
+
+    def init_grid(self) -> np.ndarray:
+        """(N, G+1) initial distances over (node, depth) — banded init."""
+        N, G = self.ext.n_nodes, self.gamma
+        v = np.full((N, G + 1), np.inf)
+        d = self.init_depth
+        ok = np.isfinite(d) & (d <= G)
+        n_idx = np.nonzero(ok)[0]
+        v[n_idx, d[n_idx].astype(np.int64)] = self.ext.init_E[n_idx]
         return v
 
 
@@ -167,6 +197,31 @@ def batch_layer_tensors(fgs: List["FeasibleGraph"]
     return Ws, init
 
 
+def batch_banded_tensors(fgs: List["FeasibleGraph"]
+                         ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Stacked banded tensors for a same-shape group of feasible graphs.
+
+    Returns (E (D, L-1, N, N), steep (D, L-1, N, N), init (D, N, G+1)) — the
+    compact inputs of the banded relaxation.  O(N^2 G) memory per scenario
+    where the dense ``batch_layer_tensors`` pays O(N^2 G^2); no scatter is
+    needed because the banded form is what the graphs natively store.
+    """
+    f0 = fgs[0]
+    N, G, L = f0.ext.n_nodes, f0.gamma, f0.ext.n_blocks
+    lam = f0.lam
+    assert all(fg.ext.n_nodes == N and fg.gamma == G and fg.lam == lam
+               and fg.ext.n_blocks == L for fg in fgs)
+    D = len(fgs)
+    E = np.stack([fg.ext.E for fg in fgs])              # (D, L-1, N, N)
+    st = np.stack([fg.steep for fg in fgs])             # (D, L-1, N, N)
+    d0 = np.stack([fg.init_depth for fg in fgs])        # (D, N)
+    iE = np.stack([fg.ext.init_E for fg in fgs])
+    init = np.full((D, N, G + 1), np.inf)
+    di, ni = np.nonzero(np.isfinite(d0) & (d0 <= G))
+    init[di, ni, d0[di, ni].astype(np.int64)] = iE[di, ni]
+    return E, st, init
+
+
 def build_feasible_graph(ext: ExtendedGraph, gamma: int,
                          *, lam: Optional[int] = None,
                          quantize: str = "floor",
@@ -187,3 +242,55 @@ def build_feasible_graph(ext: ExtendedGraph, gamma: int,
 
     return FeasibleGraph(ext=ext, gamma=gamma, lam=lam, quantize=quantize,
                          delta_eff=delta, steep=steep, init_depth=init_depth)
+
+
+def build_feasible_graphs(exts: List[ExtendedGraph], gamma: int,
+                          *, lam: Optional[int] = None,
+                          quantize: str = "floor",
+                          delta_effs: Optional[List[Optional[float]]] = None
+                          ) -> List[FeasibleGraph]:
+    """Batched Function I: quantize a whole scenario group in one array op.
+
+    Same-shape extended graphs (grouped internally by (L, N)) have their TT /
+    init_T tensors stacked once and pushed through a single vectorized
+    ``_quant`` with a per-scenario delta — a B-scenario sweep builds all its
+    feasible graphs in a handful of array ops instead of B Python calls.
+    ``delta_effs`` broadcasts like ``build_feasible_graph``'s ``delta_eff``
+    (None entries fall back to each scenario's ``req.delta``).  Each returned
+    ``FeasibleGraph`` holds contiguous views into the stacked tensors and is
+    element-for-element identical to a per-scenario build.
+    """
+    assert gamma >= 1
+    lam_ = gamma if lam is None else int(lam)
+    assert 1 <= lam_ <= gamma
+    B = len(exts)
+    if delta_effs is None:
+        delta_effs = [None] * B
+    deltas = np.array([ext.req.delta if d is None else float(d)
+                       for ext, d in zip(exts, delta_effs)])
+
+    out: List[Optional[FeasibleGraph]] = [None] * B
+    groups: dict = {}
+    for j, ext in enumerate(exts):
+        groups.setdefault((ext.n_blocks, ext.n_nodes), []).append(j)
+    for idxs in groups.values():
+        TT = np.stack([exts[j].TT for j in idxs])           # (D, L-1, N, N)
+        mask = np.stack([exts[j].mask for j in idxs])
+        iT = np.stack([exts[j].init_T for j in idxs])       # (D, N)
+        imask = np.stack([exts[j].init_mask for j in idxs])
+        d = deltas[idxs][:, None, None, None]
+
+        steep = _quant(gamma * TT / d, quantize)
+        steep = np.where(mask, steep, np.inf)
+        steep = np.where(steep <= gamma, steep, np.inf)
+
+        init_depth = _quant(gamma * iT / d[..., 0, 0], quantize)
+        init_depth = np.where(imask, init_depth, np.inf)
+        init_depth = np.where(init_depth <= gamma, init_depth, np.inf)
+
+        for pos, j in enumerate(idxs):
+            out[j] = FeasibleGraph(ext=exts[j], gamma=gamma, lam=lam_,
+                                   quantize=quantize,
+                                   delta_eff=float(deltas[j]),
+                                   steep=steep[pos], init_depth=init_depth[pos])
+    return out

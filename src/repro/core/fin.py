@@ -1,24 +1,31 @@
 """FIN solver (Alg. 1): feasible-graph construction + min-cost traversal.
 
 The traversal is a layered dynamic program over states (node, depth): exact
-minimum-energy path in the feasible graph.  The DP is expressed as a chain of
-tropical (min,+) matrix-vector products over the flattened state space
-s = node * (gamma+1) + depth (one product per DNN block transition), with
-argmin parents recorded for exact path reconstruction.  Backends (see
-``bellman_ford.py`` for the dispatch):
+minimum-energy path in the feasible graph.  The feasible graph is *banded*
+in depth — an edge only connects depth g to g + steep(n, n') — so the DP
+runs natively over the compact (N, G+1) distance grid as a shift-by-steep
+gather + min over source nodes: O(N^2 G) per layer instead of the
+O(N^2 G^2) dense (S, S) flattened-state relaxation.  Backends (see
+``bellman_ford.py`` for the engines):
 
   ``python``   the original triple-nested loop DP — kept verbatim as the
                bit-for-bit oracle for the vectorized backends;
-  ``minplus``  vectorized numpy relaxation (default; alias ``numpy``);
-  ``jnp``      jitted dense relaxation (float32) for large instances;
-  ``pallas``   the ``minplus`` argmin TPU kernel (kernels/minplus).
+  ``minplus``  banded numpy relaxation (default; alias ``banded``) —
+               bit-exact float64, lazy argmin parents;
+  ``dense``    the dense flattened-state numpy relaxation over (S, S)
+               matrices (alias ``numpy``) — kept for equivalence testing
+               and as the k-best engine;
+  ``jnp``      jitted banded relaxation (float32) for large instances;
+  ``pallas``   the banded ``minplus`` TPU kernel (kernels/minplus).
 
 One DP pass yields the best configuration for *every* candidate final exit
 (the DP prefix costs at each exit block), so accuracy filtering (3c) is a
-post-pass.  ``solve_many`` stacks per-scenario transition tensors into one
-(B, L, S, S) relaxation so whole scenario sweeps (apps x delta targets x
+post-pass.  ``solve_many`` stacks per-scenario banded tensors into one
+(B, L, N, N) relaxation so whole scenario sweeps (apps x delta targets x
 uplink settings; the Fig. 5-7 grids, multi-app placement) run as a single
-batched call instead of a Python loop over ``solve_fin``.
+batched call instead of a Python loop over ``solve_fin`` — extended and
+feasible graphs are likewise built in batched array ops
+(``build_extended_graphs`` / ``build_feasible_graphs``).
 
 Quantization undershoot ("floor" mode, see feasible_graph.py) is handled by
 an exact post-check of the selected configuration and, if the true latency
@@ -27,32 +34,56 @@ at most ``max_tighten`` rounds.
 """
 from __future__ import annotations
 
+import os
 import time
 from dataclasses import dataclass
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from .bellman_ford import (batched_layered_relax_argmin,
+from .bellman_ford import (batched_banded_relax_argmin,
+                           batched_banded_relax_min,
                            batched_layered_relax_kbest,
-                           batched_layered_relax_min, layered_relax)
+                           batched_layered_relax_min, banded_parent_np,
+                           layered_relax)
 from .dnn_profile import DNNProfile
-from .extended_graph import ExtendedGraph, build_extended_graph
-from .feasible_graph import (FeasibleGraph, batch_layer_tensors,
-                             build_feasible_graph)
+from .extended_graph import (ExtendedGraph, build_extended_graph,
+                             build_extended_graphs)
+from .feasible_graph import (FeasibleGraph, batch_banded_tensors,
+                             batch_layer_tensors, build_feasible_graph,
+                             build_feasible_graphs)
 from .problem import AppRequirements, Config, ConfigEval, Solution, evaluate_config
 from .system_model import Network
 
 #: solver backend -> relaxation engine ("python" stays the legacy oracle).
+#: ``banded`` engines relax the compact (N, G+1) grid; ``numpy`` is the dense
+#: flattened-state (S, S) path, kept for equivalence testing.
 DP_BACKENDS: Dict[str, str] = {
-    "minplus": "numpy",
+    "minplus": "banded",
+    "banded": "banded",
     "numpy": "numpy",
+    "dense": "numpy",
     "jnp": "jnp",
     "pallas": "pallas",
 }
 
-#: per-chunk budget for the batched relaxation's (D, S, S) candidate tensor.
-_RELAX_CHUNK_BYTES = 4 << 20
+#: default per-chunk budget for the batched relaxation's candidate tensor
+#: ((D, N, N, G+1) banded / (D, S, S) dense); override with the
+#: REPRO_RELAX_CHUNK_BYTES environment variable (see docs/ARCHITECTURE.md).
+_RELAX_CHUNK_BYTES_DEFAULT = 4 << 20
+
+
+def _relax_chunk_bytes() -> int:
+    """Cache-residency budget (bytes) for one relaxation chunk's candidate
+    tensor.  Beyond ~L2/L3 size the broadcast turns memory-bound and batched
+    throughput collapses; the chunk count is derived from this budget and
+    the per-scenario candidate size (compact banded or dense)."""
+    raw = os.environ.get("REPRO_RELAX_CHUNK_BYTES", "")
+    try:
+        val = int(raw)
+    except ValueError:
+        val = 0
+    return val if val > 0 else _RELAX_CHUNK_BYTES_DEFAULT
 
 
 def _dist_tol(backend: str) -> float:
@@ -112,6 +143,65 @@ class _FlatDP:
         # order; dist[i, t] was computed as exactly this column's min
         s = int(np.argmin(self.hist[i - 1] + self.Ws[i - 1, :, t]))
         return s // (self.G + 1), s % (self.G + 1), 0
+
+
+class _BandedDP:
+    """Banded DP result with lazily recovered parents (K=1).
+
+    ``hist`` is the compact (L, N, G+1) distance grid of the banded numpy
+    engine; a parent is recomputed on demand with one O(N) candidate scan
+    over source nodes per backtracked step (``banded_parent_np``) — the
+    banded analogue of :class:`_FlatDP`, with the same first-occurrence tie
+    order as the dense flat-state argmin (states are node-major and each
+    source node contributes at most one candidate depth per target).
+    """
+    __slots__ = ("hist", "E", "steep", "lo", "dist")
+
+    def __init__(self, hist: np.ndarray, E: np.ndarray, steep: np.ndarray,
+                 lo: Optional[int]):
+        self.hist = hist               # (L, N, G+1)
+        self.E = E                     # (L-1, N, N)
+        self.steep = steep             # (L-1, N, N)
+        self.lo = lo
+        self.dist = hist[..., None]    # (L, N, G+1, 1) _DPResult-compatible
+
+    def parent(self, i: int, n: int, g: int, k: int) -> Tuple[int, int, int]:
+        pn, pg = banded_parent_np(self.hist[i - 1], self.E[i - 1],
+                                  self.steep[i - 1], n, g, self.lo)
+        return pn, pg, 0
+
+
+class _BandedArgDP:
+    """Banded DP result with stored argmin-source-node parents (jnp/pallas).
+
+    ``par_n[i-1, n, g]`` is the argmin source node of state (n, g) at block
+    i; the parent depth is implied by the band: g - steep[i-1, pn, n].
+    """
+    __slots__ = ("hist", "par_n", "steep", "dist")
+
+    def __init__(self, hist: np.ndarray, par_n: np.ndarray, steep: np.ndarray):
+        self.hist = hist               # (L, N, G+1)
+        self.par_n = par_n             # (L-1, N, G+1)
+        self.steep = steep             # (L-1, N, N)
+        self.dist = hist[..., None]
+
+    def parent(self, i: int, n: int, g: int, k: int) -> Tuple[int, int, int]:
+        pn = int(self.par_n[i - 1, n, g])
+        assert pn >= 0
+        return pn, g - int(self.steep[i - 1, pn, n]), 0
+
+
+def _banded_dp_single(fg: FeasibleGraph, engine: str) -> "_DPState":
+    """One scenario through a banded engine (no (S, S) materialization)."""
+    E, steep = fg.banded_tensors()
+    init = fg.init_grid()
+    lo = fg.depth_window_lo
+    if engine == "banded":
+        hist = batched_banded_relax_min(init[None], E[None], steep[None], lo)
+        return _BandedDP(hist[0], E, steep, lo)
+    hist, par = batched_banded_relax_argmin(init[None], E[None], steep[None],
+                                            lo, backend=engine)
+    return _BandedArgDP(hist[0], par[0], steep)
 
 
 def _run_dp(fg: FeasibleGraph, n_best: int = 1) -> _DPResult:
@@ -195,11 +285,11 @@ def _run_dp_batch(fgs: Sequence[FeasibleGraph], n_best: int = 1,
     """Batched relaxation for a list of feasible graphs.
 
     Same-shape scenarios (e.g. a delta sweep over one app) are grouped: each
-    group's transition tensors are built in one vectorized scatter and
-    relaxed in one (D, L-1, S, S) batched (min,+) chain — no padding buffers
-    and no cross-shape copies, so mixed-size batches cost exactly the sum of
-    their homogeneous groups.  Distances match per-scenario solves
-    bit-for-bit on the numpy engine.
+    group's banded tensors are stacked and relaxed in one (D, L-1, N, N)
+    batched banded chain (dense engines scatter (D, L-1, S, S) instead) — no
+    padding buffers and no cross-shape copies, so mixed-size batches cost
+    exactly the sum of their homogeneous groups.  Distances match
+    per-scenario solves bit-for-bit on the float64 numpy engines.
     """
     if backend == "python":
         return [_run_dp(fg, n_best=n_best) for fg in fgs]
@@ -209,8 +299,8 @@ def _run_dp_batch(fgs: Sequence[FeasibleGraph], n_best: int = 1,
                          f"(expected python or one of {sorted(DP_BACKENDS)})")
     K = max(1, n_best)
     if K > 1 or engine == "pallas":
-        # k-best is numpy-only; per-scenario W defeats shared-W kernel
-        # batching for pallas — both fall back to a per-scenario pass.
+        # k-best is dense-numpy-only; the pallas kernel launches once per
+        # (scenario, layer) — both fall back to a per-scenario pass.
         return [_run_dp_single(fg, n_best=n_best, backend=backend)
                 for fg in fgs]
 
@@ -219,26 +309,39 @@ def _run_dp_batch(fgs: Sequence[FeasibleGraph], n_best: int = 1,
         groups.setdefault((fg.ext.n_blocks, fg.ext.n_nodes, fg.gamma, fg.lam),
                           []).append(j)
     out: List[Optional["_DPState"]] = [None] * len(fgs)
-    for (_, N, G, _), idxs in groups.items():
+    banded = engine in ("banded", "jnp")
+    for (L, N, G, lam), idxs in groups.items():
         S = N * (G + 1)
-        # keep the relaxation's (D, S, S) candidate tensor cache-resident:
-        # beyond ~L2/L3 size the broadcast turns memory-bound and batched
-        # throughput collapses, so large groups run as resident chunks
-        chunk = max(1, _RELAX_CHUNK_BYTES // (S * S * 8))
-        for lo in range(0, len(idxs), chunk):
-            part = idxs[lo:lo + chunk]
-            gWs, ginit = batch_layer_tensors([fgs[j] for j in part])
-            if engine == "numpy":
-                hist = batched_layered_relax_min(ginit, gWs)
-                for pos, j in enumerate(part):
-                    out[j] = _FlatDP(hist[pos], gWs[pos], N, G)
+        window = G - lam if lam < G else None
+        # keep the relaxation's working set cache-resident: beyond ~L2/L3
+        # size the broadcast turns memory-bound and batched throughput
+        # collapses, so large groups run as resident chunks.  The banded
+        # per-scenario set is the compact (N, N, G+1) f64 candidate plus
+        # the all-layer (L-1, N, N, G+1) int32 gather indices — still
+        # (gamma+1)x smaller than the dense (S, S) candidate per layer.
+        cand_bytes = (N * N * (G + 1) * (8 + max(L - 1, 1) * 4) if banded
+                      else S * S * 8)
+        chunk = max(1, _relax_chunk_bytes() // cand_bytes)
+        for start in range(0, len(idxs), chunk):
+            part = idxs[start:start + chunk]
+            if banded:
+                gE, gst, ginit = batch_banded_tensors(
+                    [fgs[j] for j in part])
+                if engine == "banded":
+                    hist = batched_banded_relax_min(ginit, gE, gst, window)
+                    for pos, j in enumerate(part):
+                        out[j] = _BandedDP(hist[pos], gE[pos], gst[pos],
+                                           window)
+                else:
+                    hist, par = batched_banded_relax_argmin(
+                        ginit, gE, gst, window, backend=engine)
+                    for pos, j in enumerate(part):
+                        out[j] = _BandedArgDP(hist[pos], par[pos], gst[pos])
                 continue
-            hist, par = batched_layered_relax_argmin(ginit, gWs,
-                                                     backend=engine)
+            gWs, ginit = batch_layer_tensors([fgs[j] for j in part])
+            hist = batched_layered_relax_min(ginit, gWs)
             for pos, j in enumerate(part):
-                out[j] = _dp_from_flat(
-                    hist[pos][..., None], par[pos][..., None],
-                    np.where(par[pos][..., None] >= 0, 0, -1), N, G)
+                out[j] = _FlatDP(hist[pos], gWs[pos], N, G)
     return out
 
 
@@ -254,17 +357,14 @@ def _run_dp_single(fg: FeasibleGraph, n_best: int = 1,
     ext = fg.ext
     N, G = ext.n_nodes, fg.gamma
     K = max(1, n_best)
+    if K == 1 and engine in ("banded", "jnp", "pallas"):
+        return _banded_dp_single(fg, engine)
     Ws = fg.layer_matrices()
     init = fg.init_vector()
     if K == 1:
-        if engine == "numpy":
-            hist = batched_layered_relax_min(init[None], Ws[None])
-            return _FlatDP(hist[0], Ws, N, G)
-        hist, par = batched_layered_relax_argmin(init[None], Ws[None],
-                                                 backend=engine)
-        return _dp_from_flat(hist[0][..., None], par[0][..., None],
-                             np.where(par[0][..., None] >= 0, 0, -1), N, G)
-    # k-best keeps the K cheapest slots per state (numpy relaxation).
+        hist = batched_layered_relax_min(init[None], Ws[None])
+        return _FlatDP(hist[0], Ws, N, G)
+    # k-best keeps the K cheapest slots per state (dense numpy relaxation).
     hist, ps, pk = batched_layered_relax_kbest(init[None], Ws[None], K)
     return _dp_from_flat(hist[0], ps[0], pk[0], N, G)
 
@@ -480,16 +580,11 @@ def solve_many(profiles: Union[DNNProfile, Sequence[DNNProfile]],
     profs, nets, reqs = _broadcast_scenarios(profiles, networks, requirements)
     B = len(profs)
 
-    # extended graphs depend on (network, profile, req.sigma) only — dedupe.
-    ext_cache: Dict[Tuple[int, int, float], ExtendedGraph] = {}
-    exts: List[ExtendedGraph] = []
-    for nw, pf, rq in zip(nets, profs, reqs):
-        key = (id(nw), id(pf), rq.sigma)
-        ext = ext_cache.get(key)
-        if ext is None:
-            ext = build_extended_graph(nw, pf, rq)
-            ext_cache[key] = ext
-        exts.append(ext)
+    # batched stage-1 construction: unique (network, profile, sigma)
+    # scenarios are stacked per profile group and built in one vectorized
+    # pass (a 1000-user population is a handful of array ops, not 1000
+    # per-scenario builds); duplicates share the same ExtendedGraph object.
+    exts = build_extended_graphs(nets, profs, reqs)
 
     admissible: List[List[int]] = [
         [k for k in range(pf.n_exits)
@@ -509,9 +604,12 @@ def solve_many(profiles: Union[DNNProfile, Sequence[DNNProfile]],
                               bound_energy=bound,
                               dist_tol=_dist_tol(backend))
 
-    def _fg(b: int, qmode: str, d_eff: float) -> FeasibleGraph:
-        return build_feasible_graph(exts[b], gamma, lam=lam, quantize=qmode,
-                                    delta_eff=d_eff)
+    def _fgs(bs: List[int], qmode: str, d_effs: List[float]
+             ) -> List[FeasibleGraph]:
+        # batched stage-2 construction: one vectorized quantization per
+        # same-shape group instead of a per-scenario Python loop
+        return build_feasible_graphs([exts[b] for b in bs], gamma, lam=lam,
+                                     quantize=qmode, delta_effs=d_effs)
 
     active = [b for b in range(B) if admissible[b]]
     delta_eff = [rq.delta for rq in reqs]
@@ -520,12 +618,12 @@ def solve_many(profiles: Union[DNNProfile, Sequence[DNNProfile]],
     for round_ in range(max_tighten + 1):
         if not pending:
             break
-        fgs = [_fg(b, quantize, delta_eff[b]) for b in pending]
+        fgs = _fgs(pending, quantize, [delta_eff[b] for b in pending])
         if round_ == 0 and quantize != "ceil":
             # the ceil rescue pass never depends on the tighten loop (it runs
             # at the un-tightened delta), so its DPs ride in the same batched
-            # relaxation as round 0 — one (2B, L-1, S, S) group per shape.
-            fgs += [_fg(b, "ceil", reqs[b].delta) for b in active]
+            # relaxation as round 0 — one (2B, L-1, N, N) group per shape.
+            fgs += _fgs(active, "ceil", [reqs[b].delta for b in active])
         dps = _run_dp_batch(fgs, n_best=n_best, backend=backend)
         if round_ == 0 and quantize != "ceil":
             ceil_dps = dict(zip(active, dps[len(pending):]))
@@ -577,11 +675,20 @@ def fin_all_exit_costs(network: Network, profile: DNNProfile,
                        lam: Optional[int] = None, quantize: str = "floor",
                        backend: str = "numpy") -> np.ndarray:
     """Graph-cost (not exact-eval) per exit — used by scaling benchmarks to
-    exercise the numpy / jnp / pallas (min,+) backends on large instances."""
+    exercise the relaxation backends on large instances.  ``banded`` relaxes
+    the compact (N, G+1) grid directly; ``numpy`` / ``jnp`` / ``pallas``
+    scatter the dense (L-1, S, S) matrices first (the PR-1 path, kept for
+    the banded-vs-dense comparison)."""
     ext = build_extended_graph(network, profile, req)
     fg = build_feasible_graph(ext, gamma, lam=lam, quantize=quantize)
-    Ws = fg.layer_matrices()
-    dist = layered_relax(fg.init_vector(), Ws, backend=backend)
+    if backend == "banded":
+        E, steep = fg.banded_tensors()
+        hist = batched_banded_relax_min(fg.init_grid()[None], E[None],
+                                        steep[None], fg.depth_window_lo)
+        dist = hist[0].reshape(hist.shape[1], -1)        # (L, N*(G+1))
+    else:
+        Ws = fg.layer_matrices()
+        dist = layered_relax(fg.init_vector(), Ws, backend=backend)
     out = np.full(profile.n_exits, np.inf)
     for k, e in enumerate(profile.exits):
         out[k] = dist[e.block].min()

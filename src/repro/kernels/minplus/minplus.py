@@ -147,3 +147,91 @@ def minplus_argmin_pallas(dist: jnp.ndarray, W: jnp.ndarray, *, bb: int = 8,
     out = jnp.where(unreached, jnp.inf, out)
     arg = jnp.where(unreached, -1, arg)
     return out[:B, :T], arg[:B, :T]
+
+
+# ---------------------------------------------------------------------------
+# depth-banded variant: compact (node, depth) states, no (S, S) tensors
+# ---------------------------------------------------------------------------
+
+def _banded_minplus_kernel(lo, dist_ref, e_ref, st_ref, out_ref, arg_ref):
+    """One banded layer step for a block of target nodes.
+
+    dist_ref: [N, Gp] previous-layer distances; e_ref/st_ref: [N, bm] the
+    energy / integer-steepness columns of the target block; out/arg: [bm, Gp].
+    The shift-by-steep is a lane gather of the source rows; the min/argmin
+    over source nodes runs on the VPU.  ``lo`` (static) is the lambda
+    window bound, or None when inactive.
+    """
+    d = dist_ref[...]                                    # [N, Gp]
+    e = e_ref[...]                                       # [N, bm]
+    st = st_ref[...]                                     # [N, bm]
+    N, Gp = d.shape
+    bm = e.shape[1]
+    g = jax.lax.broadcasted_iota(jnp.int32, (N, bm, Gp), 2)
+    gsrc = g - st[:, :, None]
+    ok = gsrc >= 0
+    if lo is not None:
+        ok &= (g >= lo) | (st[:, :, None] == 0)
+    gat = jnp.take_along_axis(
+        jnp.broadcast_to(d[:, None, :], (N, bm, Gp)),
+        jnp.clip(gsrc, 0, Gp - 1), axis=2)
+    cand = jnp.where(ok, gat + e[:, :, None], BIG)       # [N, bm, Gp]
+    out_ref[...] = jnp.min(cand, axis=0)
+    arg_ref[...] = jnp.argmin(cand, axis=0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("lo", "bm", "interpret"))
+def banded_minplus_pallas(dist: jnp.ndarray, E: jnp.ndarray, st: jnp.ndarray,
+                          *, lo=None, bm: int = 8, interpret: bool = True):
+    """One banded relaxation layer over the compact (node, depth) grid.
+
+    dist: [N, G+1] float; E: [N, N] float (inf = pruned edge); st: [N, N]
+    int32 steepness (ignored where E is inf).  Returns (out [N, G+1], argmin
+    source node [N, G+1] int32, -1 unreachable):
+
+        out[m, g] = min_n dist[n, g - st[n, m]] + E[n, m]
+
+    The depth axis (G+1 lanes) and node axes (sublanes) are padded to tile
+    multiples; each grid step handles one block of ``bm`` target nodes with
+    the full source grid resident in VMEM — O(N^2 G) work where the dense
+    ``minplus_pallas`` on scattered (S, S) matrices pays O(N^2 G^2).
+    """
+    N, Gp1 = dist.shape
+    dist = jnp.where(jnp.isfinite(dist), dist, BIG).astype(jnp.float32)
+    E = jnp.where(jnp.isfinite(E), E, BIG).astype(jnp.float32)
+    st = st.astype(jnp.int32)
+
+    def pad_to(x, m, axis, value):
+        r = (-x.shape[axis]) % m
+        if r == 0:
+            return x
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, r)
+        return jnp.pad(x, widths, constant_values=value)
+
+    # pad depths to the 128-lane tile and nodes to sublane multiples; padded
+    # source rows carry BIG distances / BIG energies so they never win a min
+    dist_p = pad_to(pad_to(dist, 128, 1, BIG), 8, 0, BIG)
+    Np, Gp = dist_p.shape
+    E_p = pad_to(pad_to(E, 8, 0, BIG), bm, 1, BIG)
+    st_p = pad_to(pad_to(st, 8, 0, 0), bm, 1, 0)
+    Mp = E_p.shape[1]
+
+    out, arg = pl.pallas_call(
+        functools.partial(_banded_minplus_kernel, lo),
+        grid=(Mp // bm,),
+        in_specs=[
+            pl.BlockSpec((Np, Gp), lambda j: (0, 0)),
+            pl.BlockSpec((Np, bm), lambda j: (0, j)),
+            pl.BlockSpec((Np, bm), lambda j: (0, j)),
+        ],
+        out_specs=(pl.BlockSpec((bm, Gp), lambda j: (j, 0)),
+                   pl.BlockSpec((bm, Gp), lambda j: (j, 0))),
+        out_shape=(jax.ShapeDtypeStruct((Mp, Gp), jnp.float32),
+                   jax.ShapeDtypeStruct((Mp, Gp), jnp.int32)),
+        interpret=interpret,
+    )(dist_p, E_p, st_p)
+    unreached = out >= BIG
+    out = jnp.where(unreached, jnp.inf, out)
+    arg = jnp.where(unreached, -1, arg)
+    return out[:N, :Gp1], arg[:N, :Gp1]

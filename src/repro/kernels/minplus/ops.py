@@ -8,7 +8,8 @@ from typing import Tuple
 
 import jax.numpy as jnp
 
-from .minplus import minplus_argmin_pallas, minplus_pallas
+from .minplus import (banded_minplus_pallas, minplus_argmin_pallas,
+                      minplus_pallas)
 
 
 def minplus_vecmat(dist: jnp.ndarray, W: jnp.ndarray, *,
@@ -34,3 +35,14 @@ def minplus_vecmat_argmin(dist: jnp.ndarray, W: jnp.ndarray, *,
     """dist: [B, S]; W: [S, T] -> (out [B, T], argmin_s [B, T] int32, -1
     where t is unreachable).  Parent-recovery variant for the FIN DP."""
     return minplus_argmin_pallas(dist, W, interpret=interpret)
+
+
+def banded_minplus_argmin(dist: jnp.ndarray, E: jnp.ndarray, st: jnp.ndarray,
+                          *, lo=None, interpret: bool = True
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depth-banded relaxation layer over the compact (node, depth) grid.
+
+    dist: [N, G+1]; E: [N, N] (inf = pruned); st: [N, N] int steepness ->
+    (out [N, G+1], argmin source node [N, G+1] int32, -1 unreachable).
+    O(N^2 G) work/memory vs the O(N^2 G^2) scattered ``minplus_vecmat``."""
+    return banded_minplus_pallas(dist, E, st, lo=lo, interpret=interpret)

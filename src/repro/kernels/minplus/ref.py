@@ -1,4 +1,6 @@
 """Pure-jnp oracle for the minplus kernel."""
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -20,4 +22,29 @@ def minplus_argmin_ref(dist: jnp.ndarray, W: jnp.ndarray):
     cand = dist[:, :, None] + W[None, :, :]
     out = jnp.min(cand, axis=1)
     arg = jnp.argmin(cand, axis=1).astype(jnp.int32)
+    return out, jnp.where(jnp.isfinite(out), arg, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("lo",))
+def banded_minplus_ref(dist: jnp.ndarray, E: jnp.ndarray, st: jnp.ndarray,
+                       lo=None):
+    """Oracle for the depth-banded kernel.
+
+    dist: [N, G+1]; E: [N, N] (inf = pruned); st: [N, N] int steepness.
+    out[m, g] = min_n dist[n, g - st[n, m]] + E[n, m] over admissible
+    sources (g - st >= 0, lambda window).  Returns (out [N, G+1],
+    argmin source node [N, G+1] int32, -1 where unreachable).
+    """
+    N, Gp1 = dist.shape
+    g = jnp.arange(Gp1)
+    gsrc = g[None, None, :] - st[:, :, None]             # (N, M, G+1)
+    ok = gsrc >= 0
+    if lo is not None:
+        ok &= (g[None, None, :] >= lo) | (st[:, :, None] == 0)
+    gat = jnp.take_along_axis(
+        jnp.broadcast_to(dist[:, None, :], gsrc.shape),
+        jnp.clip(gsrc, 0, Gp1 - 1), axis=2)
+    cand = jnp.where(ok, gat + E[:, :, None], jnp.inf)
+    out = jnp.min(cand, axis=0)
+    arg = jnp.argmin(cand, axis=0).astype(jnp.int32)
     return out, jnp.where(jnp.isfinite(out), arg, -1)

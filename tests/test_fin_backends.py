@@ -9,10 +9,16 @@ loop of per-scenario ``solve_fin`` calls.
 import numpy as np
 import pytest
 
-from repro.core import (AppRequirements, paper_profile, solve_fin, solve_many,
-                        synthetic_profile)
-from repro.core.bellman_ford import (batched_layered_relax_argmin,
+from repro.core import (AppRequirements, build_extended_graph,
+                        build_extended_graphs, build_feasible_graph,
+                        build_feasible_graphs, paper_profile, solve_fin,
+                        solve_many, synthetic_profile, user_network,
+                        user_networks)
+from repro.core.bellman_ford import (batched_banded_relax_argmin,
+                                     batched_banded_relax_min,
+                                     batched_layered_relax_argmin,
                                      batched_layered_relax_kbest,
+                                     batched_layered_relax_min,
                                      layered_relax, layered_relax_argmin)
 from repro.core.scenarios import paper_scenario, sweep_scenarios
 
@@ -34,7 +40,7 @@ def _same(a, b):
             and a.energy == b.energy)
 
 
-@pytest.mark.parametrize("backend", ["minplus", "jnp"])
+@pytest.mark.parametrize("backend", ["minplus", "dense", "jnp"])
 @pytest.mark.parametrize("app", APPS)
 def test_vectorized_backend_matches_python_oracle(scenario, app, backend):
     prof = paper_profile(app)
@@ -132,6 +138,137 @@ def test_solve_many_backend_jnp(scenario):
     batched = solve_many(ps, ns, rs, backend="jnp")
     for pf, nw, rq, sol in zip(ps, ns, rs, batched):
         assert _same(solve_fin(nw, pf, rq, backend="python"), sol)
+
+
+# ---------------------------------------------------------------------------
+# banded representation
+# ---------------------------------------------------------------------------
+
+def _paper_fgs(scenario, gamma=10, lam=None):
+    prof = paper_profile("h2")
+    ext = build_extended_graph(scenario, prof,
+                               AppRequirements(alpha=0.8, delta=5e-3))
+    return build_feasible_graph(ext, gamma, lam=lam)
+
+
+@pytest.mark.parametrize("lam", [None, 4])
+def test_banded_relax_bitexact_vs_dense(scenario, lam):
+    """Banded distances equal the dense flattened-state relaxation bit for
+    bit (same float64 adds over the same candidate sets)."""
+    fg = _paper_fgs(scenario, lam=lam)
+    E, st = fg.banded_tensors()
+    hb = batched_banded_relax_min(fg.init_grid()[None], E[None], st[None],
+                                  fg.depth_window_lo)
+    hd = batched_layered_relax_min(fg.init_vector()[None],
+                                   fg.layer_matrices()[None])
+    np.testing.assert_array_equal(hb[0].reshape(hb.shape[1], -1), hd[0])
+
+
+def test_banded_lazy_parent_matches_dense(scenario):
+    """_BandedDP's O(N) lazy parent scan reproduces _FlatDP's O(S) flat
+    column argmin (same first-occurrence tie order) on every finite state."""
+    from repro.core.fin import _BandedDP, _FlatDP
+
+    fg = _paper_fgs(scenario)
+    N, G = fg.ext.n_nodes, fg.gamma
+    E, st = fg.banded_tensors()
+    hb = batched_banded_relax_min(fg.init_grid()[None], E[None], st[None],
+                                  fg.depth_window_lo)
+    Ws = fg.layer_matrices()
+    hd = batched_layered_relax_min(fg.init_vector()[None], Ws[None])
+    banded = _BandedDP(hb[0], E, st, fg.depth_window_lo)
+    flat = _FlatDP(hd[0], Ws, N, G)
+    L = hb.shape[1]
+    for i in range(1, L):
+        for n in range(N):
+            for g in range(G + 1):
+                if np.isfinite(hb[0, i, n, g]):
+                    assert banded.parent(i, n, g, 0) == flat.parent(i, n, g, 0)
+
+
+def test_banded_argmin_backends_match_numpy(scenario):
+    """jnp / pallas banded argmin parents agree with the exact numpy
+    distances (f32 tolerance) and reconstruct them through the band."""
+    fg = _paper_fgs(scenario)
+    E, st = fg.banded_tensors()
+    init = fg.init_grid()
+    hb = batched_banded_relax_min(init[None], E[None], st[None],
+                                  fg.depth_window_lo)
+    for backend in ("jnp", "pallas"):
+        h, par = batched_banded_relax_argmin(init[None], E[None], st[None],
+                                             fg.depth_window_lo,
+                                             backend=backend)
+        m = np.isfinite(hb[0])
+        assert (np.isfinite(h[0]) == m).all()
+        np.testing.assert_allclose(h[0][m], hb[0][m], rtol=1e-6)
+        L = h.shape[1]
+        for i in range(1, L):
+            for n in range(fg.ext.n_nodes):
+                for g in range(fg.gamma + 1):
+                    p = par[0, i - 1, n, g]
+                    if np.isfinite(h[0, i, n, g]):
+                        gs = g - int(st[i - 1, p, n])
+                        assert p >= 0 and gs >= 0
+                        np.testing.assert_allclose(
+                            h[0, i, n, g],
+                            h[0, i - 1, p, gs] + E[i - 1, p, n], rtol=1e-6)
+                    else:
+                        assert p == -1
+
+
+def test_solve_many_backend_dense_equals_banded(scenario):
+    ps, ns, rs = sweep_scenarios(apps=("h2", "h6"), deltas_ms=(2.0, 8.0))
+    banded = solve_many(ps, ns, rs, backend="minplus")
+    dense = solve_many(ps, ns, rs, backend="dense")
+    for b, d in zip(banded, dense):
+        assert _same(b, d)
+
+
+# ---------------------------------------------------------------------------
+# batched graph construction
+# ---------------------------------------------------------------------------
+
+def test_batched_extended_graphs_match_per_scenario():
+    ps, ns, rs = sweep_scenarios(deltas_ms=(2.0, 5.0),
+                                 uplinks_bps=(1e9, 0.5e9))
+    exts = build_extended_graphs(ns, ps, rs)
+    # duplicates (same network/profile/sigma) share one object
+    assert len({id(e) for e in exts}) < len(exts)
+    for pf, nw, rq, eb in zip(ps, ns, rs, exts):
+        ea = build_extended_graph(nw, pf, rq)
+        for f in ("C", "T", "E", "TT", "mask", "init_T", "init_E",
+                  "init_mask"):
+            np.testing.assert_array_equal(getattr(ea, f), getattr(eb, f)), f
+
+
+def test_batched_feasible_graphs_match_per_scenario():
+    ps, ns, rs = sweep_scenarios(apps=("h2", "h6"), deltas_ms=(2.0, 8.0))
+    exts = build_extended_graphs(ns, ps, rs)
+    for quantize in ("floor", "ceil"):
+        fgs = build_feasible_graphs(exts, 10, quantize=quantize)
+        for ext, fgb in zip(exts, fgs):
+            fga = build_feasible_graph(ext, 10, quantize=quantize)
+            np.testing.assert_array_equal(fga.steep, fgb.steep)
+            np.testing.assert_array_equal(fga.init_depth, fgb.init_depth)
+    # per-scenario delta_eff override (the tighten loop's path)
+    fgs = build_feasible_graphs(exts[:2], 10, delta_effs=[1e-3, 3e-3])
+    for fg, d in zip(fgs, (1e-3, 3e-3)):
+        ref = build_feasible_graph(fg.ext, 10, delta_eff=d)
+        np.testing.assert_array_equal(ref.steep, fg.steep)
+
+
+def test_user_networks_batched_matches_single():
+    rng = np.random.default_rng(0)
+    qs = rng.uniform(0.3, 1.0, 5)
+    batched = user_networks(qs, 0.005)
+    for q, nb in zip(qs, batched):
+        na = user_network(np.random.default_rng(1), 0.005,
+                          uplink_quality=float(q))
+        np.testing.assert_array_equal(na.bandwidth, nb.bandwidth)
+        np.testing.assert_array_equal(na.compute, nb.compute)
+    # identical qualities share one Network object (identity-keyed caches)
+    twins = user_networks(np.array([0.5, 0.7, 0.5]), 0.005)
+    assert twins[0] is twins[2] and twins[0] is not twins[1]
 
 
 # ---------------------------------------------------------------------------

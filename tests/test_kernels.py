@@ -8,10 +8,10 @@ from repro.kernels.decode_attn.ops import decode_attn
 from repro.kernels.decode_attn.ref import decode_attn_ref
 from repro.kernels.ee_gate.ops import ee_gate
 from repro.kernels.ee_gate.ref import ee_gate_ref
-from repro.kernels.minplus.ops import (minplus_matmat, minplus_vecmat,
-                                       minplus_vecmat_argmin)
-from repro.kernels.minplus.ref import (minplus_argmin_ref, minplus_matmat_ref,
-                                       minplus_ref)
+from repro.kernels.minplus.ops import (banded_minplus_argmin, minplus_matmat,
+                                       minplus_vecmat, minplus_vecmat_argmin)
+from repro.kernels.minplus.ref import (banded_minplus_ref, minplus_argmin_ref,
+                                       minplus_matmat_ref, minplus_ref)
 
 
 # ---------------------------------------------------------------------------
@@ -88,6 +88,56 @@ def test_minplus_matmat_is_tropical_matmul():
     l, r = np.asarray(left), np.asarray(right)
     m = np.isfinite(l)
     np.testing.assert_allclose(l[m], r[m], rtol=1e-5)
+
+
+@pytest.mark.parametrize("N,G", [(4, 3), (16, 10), (23, 25), (8, 130)])
+@pytest.mark.parametrize("lo", [None, 5])
+def test_banded_minplus_sweep(N, G, lo):
+    """Banded kernel vs its jnp oracle across shapes and lambda windows."""
+    rng = np.random.default_rng(N * 100 + G)
+    dist = rng.uniform(0, 10, (N, G + 1)).astype(np.float32)
+    dist[rng.uniform(size=dist.shape) < 0.4] = np.inf
+    E = rng.uniform(0, 5, (N, N)).astype(np.float32)
+    E[rng.uniform(size=E.shape) < 0.3] = np.inf
+    st = rng.integers(0, G + 1, (N, N)).astype(np.int32)
+    args = (jnp.asarray(dist), jnp.asarray(E), jnp.asarray(st))
+    got, arg = banded_minplus_argmin(*args, lo=lo)
+    want, arg_r = banded_minplus_ref(*args, lo=lo)
+    got, arg = np.asarray(got), np.asarray(arg)
+    want, arg_r = np.asarray(want), np.asarray(arg_r)
+    finite = np.isfinite(want)
+    assert (np.isfinite(got) == finite).all()
+    np.testing.assert_allclose(got[finite], want[finite], rtol=1e-6)
+    assert (arg[~finite] == -1).all()
+    np.testing.assert_array_equal(arg, arg_r)
+
+
+def test_banded_minplus_equals_scattered_dense():
+    """The banded kernel on (E, steep) equals the dense kernel on the
+    scattered (S, S) matrix of the same feasible-graph layer."""
+    from repro.core import (AppRequirements, build_extended_graph,
+                            build_feasible_graph, paper_profile)
+    from repro.core.scenarios import paper_scenario
+
+    nw = paper_scenario()
+    prof = paper_profile("h2")
+    ext = build_extended_graph(nw, prof, AppRequirements(0.8, 5e-3))
+    fg = build_feasible_graph(ext, gamma=10)
+    N, G = ext.n_nodes, fg.gamma
+    E, st = fg.banded_tensors()
+    dist = fg.init_grid()
+    W = fg.layer_matrices()[0]
+    sti = np.where(np.isfinite(st[0]), st[0], 0).astype(np.int32)
+    got, _ = banded_minplus_argmin(
+        jnp.asarray(dist, jnp.float32),
+        jnp.asarray(np.where(np.isfinite(st[0]), E[0], np.inf), jnp.float32),
+        jnp.asarray(sti))
+    want = np.asarray(minplus_vecmat(
+        jnp.asarray(dist.reshape(1, -1), jnp.float32),
+        jnp.asarray(W, jnp.float32))).reshape(N, G + 1)
+    m = np.isfinite(want)
+    assert (np.isfinite(np.asarray(got)) == m).all()
+    np.testing.assert_allclose(np.asarray(got)[m], want[m], rtol=1e-6)
 
 
 def test_minplus_backs_fin_dp():

@@ -62,3 +62,24 @@ def test_deterministic_given_seed():
     for app in APPS:
         assert a.stats[app]["fin"].energy_total == \
             pytest.approx(b.stats[app]["fin"].energy_total)
+
+
+def test_uplink_buckets_cache_mcp_solutions():
+    """Bucketed uplink draws make user networks identical within a bucket:
+    the MCP loop must serve repeats from its per-bucket cache without
+    changing the experiment's qualitative claims."""
+    res = run_multiapp(24, seed=3, uplink_buckets=4)
+    hits = sum(res.stats[app]["mcp"].solve_cache_hits for app in APPS)
+    # 24 users over 4 buckets -> at least 20 cached solves per app
+    assert hits >= len(APPS) * 20
+    for app in APPS:
+        assert res.stats[app]["fin"].solve_cache_hits == 0  # batched path
+        g = res.energy_gain(app)
+        assert np.isfinite(g) and g <= 0.75
+        assert (res.stats[app]["fin"].failure_prob
+                <= res.stats[app]["mcp"].failure_prob + 1e-9)
+
+
+def test_no_buckets_means_no_cache_hits():
+    res = run_multiapp(6, seed=0)
+    assert all(res.stats[app]["mcp"].solve_cache_hits == 0 for app in APPS)

@@ -9,7 +9,9 @@ from hypothesis import strategies as st
 from repro.core import (AppRequirements, Network, build_extended_graph,
                         build_feasible_graph, evaluate_config, make_network,
                         solve_fin, solve_mcp, solve_opt, synthetic_profile)
-from repro.core.bellman_ford import (bellman_ford_np, layered_relax,
+from repro.core.bellman_ford import (batched_banded_relax_min,
+                                     batched_layered_relax_min,
+                                     bellman_ford_np, layered_relax,
                                      minplus_vecmat_np)
 
 SETTINGS = settings(max_examples=25, deadline=None,
@@ -127,6 +129,62 @@ def test_layered_relax_backends_agree(seed, S, L):
     mask = np.isfinite(d_np)
     assert (np.isfinite(d_jnp) == mask).all()
     np.testing.assert_allclose(d_np[mask], d_jnp[mask], rtol=1e-6)
+
+
+@given(seed=st.integers(0, 10_000), n_blocks=st.integers(2, 6),
+       gamma=st.sampled_from([3, 10, 25]),
+       quantize=st.sampled_from(["ceil", "floor", "round"]))
+@SETTINGS
+def test_banded_dense_python_dp_equivalence(seed, n_blocks, gamma, quantize):
+    """The PR-2 invariant: banded, dense, and python-oracle DPs agree on
+    random networks — identical distances (bit-exact, float64), identical
+    argmin backtrack paths, and identical selected configurations — across
+    every quantize mode and the paper's gamma range."""
+    from repro.core.fin import _BandedDP, _FlatDP, _backtrack, _run_dp
+
+    rng = np.random.default_rng(seed)
+    prof = synthetic_profile(n_blocks, min(n_blocks, int(rng.integers(1, 4))),
+                             seed=seed)
+    nw = _random_network(seed + 3, n_extra=int(rng.integers(0, 3)))
+    req = AppRequirements(alpha=float(rng.uniform(0, 0.8)),
+                          delta=float(rng.uniform(1e-3, 30e-3)))
+
+    # distance level: banded == dense bit for bit, both == python oracle
+    ext = build_extended_graph(nw, prof, req)
+    fg = build_feasible_graph(ext, gamma, quantize=quantize)
+    N, G = ext.n_nodes, gamma
+    E, st_ = fg.banded_tensors()
+    hb = batched_banded_relax_min(fg.init_grid()[None], E[None], st_[None],
+                                  fg.depth_window_lo)[0]
+    Ws = fg.layer_matrices()
+    hd = batched_layered_relax_min(fg.init_vector()[None], Ws[None])[0]
+    np.testing.assert_array_equal(hb.reshape(hb.shape[0], -1), hd)
+    oracle_dp = _run_dp(fg)
+    np.testing.assert_array_equal(hb, oracle_dp.dist[..., 0])
+
+    # argmin-path level: every finite end state backtracks identically
+    banded = _BandedDP(hb, E, st_, fg.depth_window_lo)
+    flat = _FlatDP(hd, Ws, N, G)
+    L = hb.shape[0]
+    ends = np.argwhere(np.isfinite(hb[L - 1]))
+    for n, g in ends[:8]:
+        pb = _backtrack(banded, L - 1, int(n), int(g), 0)
+        pd = _backtrack(flat, L - 1, int(n), int(g), 0)
+        po = _backtrack(oracle_dp, L - 1, int(n), int(g), 0)
+        assert pb == pd == po
+
+    # solver level: selected configs identical across the three backends
+    sols = {b: solve_fin(nw, prof, req, gamma=gamma, quantize=quantize,
+                         backend=b)
+            for b in ("python", "minplus", "dense")}
+    ref = sols["python"]
+    for b in ("minplus", "dense"):
+        s = sols[b]
+        assert s.found == ref.found, b
+        if ref.found:
+            assert s.config.placement == ref.config.placement, b
+            assert s.config.final_exit == ref.config.final_exit, b
+            assert s.energy == ref.energy, b
 
 
 @given(seed=st.integers(0, 10_000))
