@@ -1,0 +1,189 @@
+"""Online churn benchmark: warm plan-IR re-solves vs cold pipeline rebuilds.
+
+Three measurement families, all over the paper's six-app user population on
+the multi-helper evaluation network:
+
+  ``channel_*``   channel-only deltas: every tick redraws each user's uplink
+                  (AR(1) Gauss-Markov fading, plus a uniform-redraw worst
+                  case) and EVERY user re-solves.  Warm = batched
+                  ``update_uplinks`` + ``solve_plans`` over persistent
+                  plans; cold = ``solve_fin`` per (user, tick), i.e. the
+                  pre-plan-IR pipeline rebuild.  Configurations are
+                  asserted bit-exact between the two at every tick
+                  (``agree`` counts scenarios).  The paper-facing number is
+                  ``speedup`` (cold/warm wall-clock per re-solve).
+  ``failure``     node failure/recovery: warm ``mask_node`` + re-solve vs a
+                  cold solve on the reduced network.
+  ``churn_e2e``   end-to-end orchestrator throughput with hysteresis,
+                  mobility and failures (user-ticks/s, resolve rate,
+                  migration accounting).
+
+Timing protocol: warm and cold passes are interleaved and best-of-N, like
+``benchmarks/common.py``'s batched-solver protocol, so scheduler noise hits
+both paths alike.  Cold passes receive pre-mutated ``Network`` objects for
+free — only the solve is timed.
+"""
+from __future__ import annotations
+
+import time
+from typing import Iterable, List
+
+import numpy as np
+
+from repro.core import (AppRequirements, ChurnOrchestrator, Network, Plan,
+                        churn_trace, paper_profile, population_plans,
+                        solve_fin, solve_plans, update_uplinks)
+from repro.core.multiapp import PAPER_MULTIAPP_REQS
+from repro.core.scenarios import paper_scenario
+
+from .common import Row, kv, smoke
+
+APPS = ("h1", "h2", "h3", "h4", "h5", "h6")
+
+
+def _same(a, b) -> bool:
+    if a.found != b.found:
+        return False
+    if not a.found:
+        return True
+    return (a.config.placement == b.config.placement
+            and a.config.final_exit == b.config.final_exit
+            and a.energy == b.energy)
+
+
+def _population(users_per_app: int, n_extra_edge: int) -> List[Plan]:
+    nw = paper_scenario(n_extra_edge=n_extra_edge)
+    plans: List[Plan] = []
+    for app in APPS:
+        prof = paper_profile(app)
+        req = PAPER_MULTIAPP_REQS[app]
+        plans.extend(Plan(nw, prof, req) for _ in range(users_per_app))
+    solve_plans(plans)
+    return plans
+
+
+def _channel_row(name: str, *, users_per_app: int, ticks: int, trials: int,
+                 sigma, n_extra_edge: int = 2, rho: float = 0.95) -> Row:
+    """Warm vs cold on channel-only deltas; bit-exact agreement asserted."""
+    plans = _population(users_per_app, n_extra_edge)
+    U = len(plans)
+    rng = np.random.default_rng(11)
+    qst = np.full(U, 0.65)
+
+    def draws() -> np.ndarray:
+        out = np.empty((ticks, U))
+        for t in range(ticks):
+            if sigma is None:
+                qst[:] = rng.uniform(0.3, 1.0, U)
+            else:
+                qst[:] = np.clip(0.65 + rho * (qst - 0.65)
+                                 + rng.normal(0, sigma, U), 0.3, 1.0)
+            out[t] = qst
+        return out
+
+    t_warm = t_cold = float("inf")
+    agree = 0
+    relaxes0 = sum(p.stats.dp_relaxes for p in plans)
+    hits0 = sum(p.stats.dp_cache_hits for p in plans)
+    for _ in range(trials):
+        Q = draws()
+        t0 = time.perf_counter()
+        for t in range(ticks):
+            update_uplinks(plans, Q[t] * 1e9)
+            warm_sols = solve_plans(plans)
+        t_warm = min(t_warm, (time.perf_counter() - t0) / (ticks * U))
+        # cold: solve_fin on pre-mutated copies of the final-tick networks
+        nets = [(Network(nodes=p.network.nodes,
+                         bandwidth=p.network.bandwidth.copy(),
+                         compute=p.network.compute.copy(), source_node=0),
+                 p.profile, p.req) for p in plans]
+        t0 = time.perf_counter()
+        cold_sols = [solve_fin(n, pf, rq) for n, pf, rq in nets]
+        t_cold = min(t_cold, (time.perf_counter() - t0) / U)
+        agree = sum(1 for a, b in zip(warm_sols, cold_sols) if _same(a, b))
+        assert agree == U, f"warm/cold mismatch: {agree}/{U}"
+    relaxes = sum(p.stats.dp_relaxes for p in plans) - relaxes0
+    hits = sum(p.stats.dp_cache_hits for p in plans) - hits0
+    return Row(name, t_warm * 1e6,
+               kv(users=U, ticks=ticks, warm_us=t_warm * 1e6,
+                  cold_us=t_cold * 1e6, speedup=t_cold / t_warm,
+                  agree=agree,
+                  dp_cache_hit_rate=hits / max(1, hits + relaxes)))
+
+
+def _failure_row(*, trials: int) -> Row:
+    """Warm mask_node re-solve vs cold solve on the reduced network."""
+    nw = paper_scenario(n_extra_edge=2)
+    prof = paper_profile("h1")
+    req = PAPER_MULTIAPP_REQS["h1"]
+    plan = Plan(nw, prof, req)
+    plan.update_uplink(0.3e9)          # channel regime that uses the cloud
+    plan.solve()
+    victim = next(p for p in plan.solution.config.placement if p != 0)
+    keep = [i for i in range(nw.n_nodes) if i != victim]
+    remap = {new: old for new, old in enumerate(keep)}
+    t_warm = t_cold = float("inf")
+    agree = 0
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        plan.mask_node(victim)
+        warm = plan.solve()
+        t_warm = min(t_warm, time.perf_counter() - t0)
+        plan.unmask_node(victim)
+        plan.solve()
+        red = Network(nodes=[plan.network.nodes[i] for i in keep],
+                      bandwidth=plan.network.bandwidth[
+                          np.ix_(keep, keep)].copy(),
+                      compute=plan.network.compute[keep].copy(),
+                      source_node=0)
+        t0 = time.perf_counter()
+        cold = solve_fin(red, prof, req)
+        t_cold = min(t_cold, time.perf_counter() - t0)
+        agree = int(warm.feasible and cold.feasible
+                    and warm.energy == cold.energy
+                    and warm.config.placement
+                    == [remap[p] for p in cold.config.placement])
+        assert agree == 1
+    return Row("failure_mask_vs_reduced", t_warm * 1e6,
+               kv(warm_us=t_warm * 1e6, cold_us=t_cold * 1e6,
+                  speedup=t_cold / t_warm, agree=agree))
+
+
+def _e2e_row(*, users_per_app: int, ticks: int) -> Row:
+    """End-to-end orchestrator throughput with hysteresis + failures."""
+    plans = population_plans(users_per_app * len(APPS), n_extra_edge=2)
+    orch = ChurnOrchestrator(plans, hysteresis=0.05)
+    U = len(plans)
+    trace = churn_trace(U, ticks, seed=5, q_mean=0.5, sigma=0.15,
+                        p_fail=0.1, p_recover=0.5, fail_nodes=(4,),
+                        p_move=0.1, n_edge=3)
+    t0 = time.perf_counter()
+    stats = orch.run(trace)
+    dt = time.perf_counter() - t0
+    user_ticks = U * ticks
+    return Row("churn_e2e", dt / user_ticks * 1e6,
+               kv(users=U, ticks=ticks,
+                  user_ticks_per_s=user_ticks / dt,
+                  resolves=int(stats.total("n_resolved")),
+                  held=int(stats.total("n_held")),
+                  resolve_rate=stats.resolve_rate,
+                  migrations=int(stats.total("n_migrations")),
+                  blocks_moved=int(stats.total("blocks_moved")),
+                  migration_bits=stats.total("migration_bits"),
+                  failed=int(stats.total("n_failed"))))
+
+
+def run() -> Iterable[Row]:
+    if smoke():
+        users, ticks, trials = 4, 3, 2
+    else:
+        users, ticks, trials = 16, 6, 4
+    yield _channel_row("channel_ar1_fading", users_per_app=users,
+                       ticks=ticks, trials=trials, sigma=0.05)
+    yield _channel_row("channel_uniform_redraw", users_per_app=users,
+                       ticks=ticks, trials=trials, sigma=None)
+    yield _channel_row("channel_ar1_paper_3node", users_per_app=users,
+                       ticks=ticks, trials=trials, sigma=0.05,
+                       n_extra_edge=0)
+    yield _failure_row(trials=trials)
+    yield _e2e_row(users_per_app=users, ticks=max(4, ticks))

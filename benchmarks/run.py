@@ -14,6 +14,8 @@ CI perf-regression smoke job.  Benches match the paper artifacts:
   fig8      multi-application scenario (gain, tiers, failures, exits)
   table3    DNN block profiles extracted from the JAX models vs paper
   table7    solver execution times (+ large-instance scaling backends)
+  online    warm plan-IR re-solves vs cold rebuilds under churn (+ e2e
+            orchestrator throughput with hysteresis and failures)
   kernels   Pallas kernel vs reference oracle timings (interpret mode)
   roofline  dry-run derived roofline terms per (arch x shape)
 """
@@ -33,6 +35,7 @@ BENCHES = [
     "bench_fig8",
     "bench_table3",
     "bench_table7",
+    "bench_online",
     "bench_kernels",
     "bench_engine",
     "bench_roofline",

@@ -21,9 +21,11 @@ from repro.runtime.serve_engine import SplitServeEngine
 def main() -> int:
     cfg = get("qwen3-4b", reduced=True)
     params = T.init_model(jax.random.PRNGKey(0), cfg)
-    network = paper_scenario()
-    profile = paper_profile("h2")
-    req = AppRequirements(alpha=0.55, delta=8e-3)
+    # a degraded uplink pushes the placement off the mobile tier, so the
+    # mid-run failure below actually re-places (warm, via the plan IR)
+    network = paper_scenario(uplink_bps=0.3e9)
+    profile = paper_profile("h1")
+    req = AppRequirements(alpha=0.55, delta=5e-3)
 
     eng = SplitServeEngine(cfg, params, batch_size=4, cache_len=128,
                            thresholds=[0.6], network=network,
@@ -42,11 +44,17 @@ def main() -> int:
         eng.step()
     victim = max(p for p in eng.placement.placement)
     if victim != network.source_node:
-        print(f"\n!! node {network.nodes[victim].name} fails — re-solving")
+        print(f"\n!! node {network.nodes[victim].name} fails — warm re-solve")
         eng.fail_node(victim)
         print("new placement:",
               [f"l{i+1}@{eng.network.tier_of(n)}" for i, n in
-               enumerate(eng.placement.placement)])
+               enumerate(eng.placement.placement)],
+              f"({eng.stats.blocks_migrated} blocks migrated, "
+              f"{eng.stats.migration_bits/8e6:.2f} MB of cut state)")
+        for _ in range(12):
+            eng.step()
+        print(f"   node {network.nodes[victim].name} recovers")
+        eng.recover_node(victim)
     stats = eng.run(max_steps=500)
 
     print(f"\nsteps            : {stats.steps}")

@@ -20,11 +20,16 @@ from .extended_graph import (ExtendedGraph, build_extended_graph,
 from .feasible_graph import (FeasibleGraph, build_feasible_graph,
                              build_feasible_graphs)
 from .fin import solve_fin, solve_many, fin_all_exit_costs
+from .plan import (Plan, PlanStats, solve_plans, update_uplinks,
+                   migration_delta)
 from .mcp import solve_mcp
 from .optimum import solve_opt
-from .multiapp import (run_multiapp, MultiAppResult, AppStats,
+from .multiapp import (run_multiapp, MultiAppResult, AppStats, PlanCache,
                        PAPER_MULTIAPP_REQS, default_solvers, user_network,
                        user_networks)
+from .scenarios import ChurnEvent, churn_trace
+from .online import (ChurnOrchestrator, ChurnStats, TickReport,
+                     population_plans)
 
 __all__ = [
     "NodeSpec", "Network", "make_node", "make_network", "PAPER_TIERS",
@@ -34,8 +39,11 @@ __all__ = [
     "build_extended_graph", "build_extended_graphs", "to_networkx",
     "FeasibleGraph", "build_feasible_graph", "build_feasible_graphs",
     "solve_fin", "solve_many", "fin_all_exit_costs",
+    "Plan", "PlanStats", "solve_plans", "update_uplinks", "migration_delta",
     "solve_mcp",
     "solve_opt", "run_multiapp", "MultiAppResult", "AppStats",
     "PAPER_MULTIAPP_REQS", "default_solvers", "user_network",
-    "user_networks",
+    "user_networks", "PlanCache",
+    "ChurnEvent", "churn_trace", "ChurnOrchestrator", "ChurnStats",
+    "TickReport", "population_plans",
 ]

@@ -312,7 +312,8 @@ def _banded_gather_idx(steep: np.ndarray, Gp1: int,
 
 def batched_banded_relax_min(init: np.ndarray, E: np.ndarray,
                              steep: np.ndarray,
-                             lo: Optional[int] = None) -> np.ndarray:
+                             lo: Optional[int] = None,
+                             *, idx: Optional[np.ndarray] = None) -> np.ndarray:
     """Banded layered relaxation, distances only (numpy, float64 exact).
 
     init: (B, N, G+1); E/steep: (B, L, N, N).  Returns hist
@@ -320,14 +321,21 @@ def batched_banded_relax_min(init: np.ndarray, E: np.ndarray,
     ``batched_layered_relax_min`` on the scattered (S, S) matrices — the
     banded candidate set per target state is exactly the finite entries of
     the dense column, computed with the same float64 adds.
+
+    ``idx`` optionally supplies the (B, L, N, N, G+1) gather-index tensor
+    (``_banded_gather_idx(steep, G+1, lo)``) precomputed by the caller — the
+    incremental ``Plan`` layer maintains it across deltas (only mutated
+    rows/cols are recomputed), turning the per-solve index build into a
+    no-op on the warm path.  When given, ``steep`` is not read.
     """
     B, N, Gp1 = init.shape
     L = E.shape[1]
     dist = np.asarray(init, dtype=np.float64)
     if L == 0:
         return dist[:, None]
-    # all layers' gather indices in one vectorized pass (int32, O(L N^2 G))
-    idx = _banded_gather_idx(steep, Gp1, lo)             # (B, L, N, N, G+1)
+    if idx is None:
+        # all layers' gather indices in one vectorized pass (O(L N^2 G))
+        idx = _banded_gather_idx(steep, Gp1, lo)         # (B, L, N, N, G+1)
     pad = np.empty((B, N, Gp1 + 1))                      # dist + inf column
     pad[:, :, Gp1] = np.inf
     b_i = np.arange(B)[:, None, None, None]
@@ -340,6 +348,49 @@ def batched_banded_relax_min(init: np.ndarray, E: np.ndarray,
         dist = cand.min(axis=1)                          # (B, N, G+1)
         hist.append(dist)
     return np.stack(hist, axis=1)
+
+
+def batched_banded_relax_minarg(init: np.ndarray, E: np.ndarray,
+                                steep: np.ndarray,
+                                lo: Optional[int] = None,
+                                *, idx: Optional[np.ndarray] = None
+                                ) -> Tuple[np.ndarray, np.ndarray]:
+    """Banded relaxation with stored argmin parents (numpy, float64 exact).
+
+    Same contract as :func:`batched_banded_relax_min` (distances are
+    bit-identical — the min is read back through the argmin), plus par_n
+    (B, L, N, G+1) int64: the argmin *source node* of each state, -1 where
+    unreachable, with the same first-occurrence tie order as
+    ``banded_parent_np`` / the dense flat-state column argmin.  This is the
+    engine of the incremental ``Plan`` layer: a warm plan backtracks its DP
+    grid repeatedly across churn ticks, so paying one vectorized argmin per
+    relaxation beats re-deriving parents with per-step candidate scans.
+    ``idx`` as in ``batched_banded_relax_min``.
+    """
+    B, N, Gp1 = init.shape
+    L = E.shape[1]
+    dist = np.asarray(init, dtype=np.float64)
+    if L == 0:
+        return dist[:, None], np.zeros((B, 0, N, Gp1), dtype=np.int64)
+    if idx is None:
+        idx = _banded_gather_idx(steep, Gp1, lo)
+    pad = np.empty((B, N, Gp1 + 1))
+    pad[:, :, Gp1] = np.inf
+    b_i = np.arange(B)[:, None, None, None]
+    n_i = np.arange(N)[None, :, None, None]
+    hist = [dist]
+    pars = []
+    for l in range(L):
+        pad[:, :, :Gp1] = dist
+        cand = pad[b_i, n_i, idx[:, l]]                  # (B, N, N, G+1)
+        cand += E[:, l, :, :, None]
+        arg = np.argmin(cand, axis=1)                    # (B, N, G+1)
+        # min == cand[argmin] exactly (no NaNs in the tropical semiring),
+        # and one fused reduction beats a take_along_axis gather
+        dist = cand.min(axis=1)
+        pars.append(np.where(np.isfinite(dist), arg, -1))
+        hist.append(dist)
+    return np.stack(hist, axis=1), np.stack(pars, axis=1)
 
 
 def banded_parent_np(dist_prev: np.ndarray, E_l: np.ndarray, st_l: np.ndarray,

@@ -60,6 +60,7 @@ class DNNProfile:
         # as immutable after construction.
         self._phi_cache: Dict[int, np.ndarray] = {}
         self._surv_cache: Dict[Tuple[int, int], float] = {}
+        self._ops_cache: Dict[Tuple[int, int], float] = {}
 
     # -- structure ------------------------------------------------------------
     @property
@@ -130,12 +131,17 @@ class DNNProfile:
 
     # -- per-config aggregate quantities ----------------------------------------
     def block_ops_with_exit(self, block: int, final_exit: int) -> float:
-        """Backbone + exit-head ops executed at ``block`` (exits <= final only)."""
-        ops = self.block_ops[block]
-        k = self.exit_index_at(block)
-        if k is not None and k <= final_exit:
-            ops += self.exits[k].ops
-        return ops
+        """Backbone + exit-head ops executed at ``block`` (exits <= final
+        only).  Memoized — it sits on the exact-evaluation hot path."""
+        key = (block, final_exit)
+        cached = self._ops_cache.get(key)
+        if cached is None:
+            cached = self.block_ops[block]
+            k = self.exit_index_at(block)
+            if k is not None and k <= final_exit:
+                cached += self.exits[k].ops
+            self._ops_cache[key] = cached
+        return cached
 
     def accuracy_of(self, final_exit: int) -> float:
         """Config inference quality a(pi): accuracy of the deepest deployed exit."""

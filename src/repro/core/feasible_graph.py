@@ -28,15 +28,29 @@ import numpy as np
 from .extended_graph import ExtendedGraph
 
 
-def _quant(x: np.ndarray, mode: str) -> np.ndarray:
+def _quant_raw(x: np.ndarray, mode: str,
+               out: Optional[np.ndarray] = None) -> np.ndarray:
+    """Eq. (4) quantizer WITHOUT the non-finite guard — for callers that
+    fold the guard into a combined admissibility mask (the incremental
+    ``Plan`` layer's slice requantizers).  ``out`` writes into a
+    preallocated buffer (same float ops, no temporaries)."""
     if mode == "ceil":
-        q = np.ceil(x - 1e-12)
-    elif mode == "floor":
-        q = np.floor(x + 1e-12)
-    elif mode == "round":
-        q = np.round(x)
-    else:
-        raise ValueError(f"unknown quantize mode {mode!r}")
+        if out is None:
+            return np.ceil(x - 1e-12)
+        np.subtract(x, 1e-12, out=out)
+        return np.ceil(out, out=out)
+    if mode == "floor":
+        if out is None:
+            return np.floor(x + 1e-12)
+        np.add(x, 1e-12, out=out)
+        return np.floor(out, out=out)
+    if mode == "round":
+        return np.round(x, 0, out)
+    raise ValueError(f"unknown quantize mode {mode!r}")
+
+
+def _quant(x: np.ndarray, mode: str) -> np.ndarray:
+    q = _quant_raw(x, mode)
     q = np.where(np.isfinite(x), q, np.inf)
     return q
 

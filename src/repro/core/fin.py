@@ -54,6 +54,7 @@ from .feasible_graph import (FeasibleGraph, batch_banded_tensors,
                              build_feasible_graphs)
 from .problem import AppRequirements, Config, ConfigEval, Solution, evaluate_config
 from .system_model import Network
+from .tolerances import dist_tol
 
 #: solver backend -> relaxation engine ("python" stays the legacy oracle).
 #: ``banded`` engines relax the compact (N, G+1) grid; ``numpy`` is the dense
@@ -77,23 +78,32 @@ def _relax_chunk_bytes() -> int:
     """Cache-residency budget (bytes) for one relaxation chunk's candidate
     tensor.  Beyond ~L2/L3 size the broadcast turns memory-bound and batched
     throughput collapses; the chunk count is derived from this budget and
-    the per-scenario candidate size (compact banded or dense)."""
+    the per-scenario candidate size (compact banded or dense).
+
+    A set-but-invalid REPRO_RELAX_CHUNK_BYTES raises immediately (an unset
+    or empty variable means the default): a typo'd budget silently falling
+    back would only surface as an inexplicable perf cliff deep inside the
+    chunked relaxation.
+    """
     raw = os.environ.get("REPRO_RELAX_CHUNK_BYTES", "")
+    if not raw:
+        return _RELAX_CHUNK_BYTES_DEFAULT
     try:
         val = int(raw)
     except ValueError:
-        val = 0
-    return val if val > 0 else _RELAX_CHUNK_BYTES_DEFAULT
+        raise ValueError(
+            f"REPRO_RELAX_CHUNK_BYTES must be a positive integer (bytes), "
+            f"got {raw!r}") from None
+    if val <= 0:
+        raise ValueError(
+            f"REPRO_RELAX_CHUNK_BYTES must be a positive integer (bytes), "
+            f"got {raw!r}")
+    return val
 
 
 def _dist_tol(backend: str) -> float:
-    """Relative error of a backend's DP distances, for the exit prune guard.
-
-    The jnp and pallas engines relax in float32 (~1e-7 relative rounding)
-    even though their histories are returned as float64 arrays; numpy/
-    minplus are exact float64.
-    """
-    return 1e-5 if DP_BACKENDS.get(backend) in ("jnp", "pallas") else 1e-9
+    """Exit-prune guard for a user-facing backend name (see tolerances.py)."""
+    return dist_tol(DP_BACKENDS.get(backend))
 
 
 @dataclass
@@ -129,7 +139,7 @@ class _FlatDP:
     a (L, N, G+1, 1) reshaped view of the distance history, interface-
     compatible with :class:`_DPResult`.
     """
-    __slots__ = ("hist", "Ws", "G", "dist")
+    __slots__ = ("hist", "Ws", "G", "dist", "_dmin")
 
     def __init__(self, hist: np.ndarray, Ws: np.ndarray, N: int, G: int):
         self.hist = hist               # (L, S)
@@ -155,7 +165,7 @@ class _BandedDP:
     order as the dense flat-state argmin (states are node-major and each
     source node contributes at most one candidate depth per target).
     """
-    __slots__ = ("hist", "E", "steep", "lo", "dist")
+    __slots__ = ("hist", "E", "steep", "lo", "dist", "_dmin")
 
     def __init__(self, hist: np.ndarray, E: np.ndarray, steep: np.ndarray,
                  lo: Optional[int]):
@@ -177,7 +187,7 @@ class _BandedArgDP:
     ``par_n[i-1, n, g]`` is the argmin source node of state (n, g) at block
     i; the parent depth is implied by the band: g - steep[i-1, pn, n].
     """
-    __slots__ = ("hist", "par_n", "steep", "dist")
+    __slots__ = ("hist", "par_n", "steep", "dist", "_dmin")
 
     def __init__(self, hist: np.ndarray, par_n: np.ndarray, steep: np.ndarray):
         self.hist = hist               # (L, N, G+1)
@@ -369,6 +379,27 @@ def _run_dp_single(fg: FeasibleGraph, n_best: int = 1,
     return _dp_from_flat(hist[0], ps[0], pk[0], N, G)
 
 
+def _exit_dmin(dp, block: int) -> float:
+    """Memoized min DP distance at a block (the exit-prune bound).
+
+    Cached per DP grid: the incremental ``Plan`` layer re-scans the SAME
+    grid across churn ticks whenever only the true bandwidth moved (the
+    quantized tensors are piecewise-constant in the channel), so the
+    per-exit minima are computed once per relaxation, not once per scan.
+    """
+    cache = getattr(dp, "_dmin", None)
+    if cache is None:
+        cache = {}
+        try:
+            dp._dmin = cache
+        except AttributeError:      # foreign DP object without the slot
+            return float(dp.dist[block].min())
+    v = cache.get(block)
+    if v is None:
+        v = cache[block] = float(dp.dist[block].min())
+    return v
+
+
 def _backtrack(dp, block: int, node: int, depth: int,
                rank: int) -> List[int]:
     place = [node]
@@ -414,11 +445,22 @@ def _iter_configs_at_exit(dp: "_DPState", profile: DNNProfile, k: int
     """
     block = profile.exits[k].block
     d = dp.dist[block]                      # (N, G+1, K)
+    # fast path: the cheapest state first, without sorting — np.argmin and a
+    # stable ascending argsort share the first-occurrence-of-min tie order,
+    # so consuming only one candidate (the overwhelmingly common case: the
+    # min-energy config is exactly feasible) skips the argsort entirely
+    j0 = int(np.argmin(d))
+    v0 = float(d.ravel()[j0])
+    if not np.isfinite(v0):
+        return
+    n0, g0, r0 = np.unravel_index(j0, d.shape)
+    yield (Config(placement=_backtrack(dp, block, int(n0), int(g0), int(r0)),
+                  final_exit=k), v0)
     order = np.argsort(d, axis=None, kind="stable")
     vals = d.ravel()[order]
     n_finite = int(np.searchsorted(vals, np.inf))
     ns_, gs_, rs_ = np.unravel_index(order[:n_finite], d.shape)
-    for j in range(n_finite):
+    for j in range(1, n_finite):            # order[0] == j0, already yielded
         cfg = Config(placement=_backtrack(dp, block, int(ns_[j]), int(gs_[j]),
                                           int(rs_[j])),
                      final_exit=k)
@@ -431,6 +473,7 @@ def _best_feasible(network: Network, profile: DNNProfile,
                    check_aggregate_load: bool,
                    oracle: bool = False,
                    bound_energy: Optional[float] = None,
+                   bound: Optional[Tuple[Config, ConfigEval]] = None,
                    dist_tol: float = 1e-9
                    ) -> Optional[Tuple[Config, ConfigEval]]:
     """Exact (3a)-(3e) post-pass: cheapest feasible config over all exits.
@@ -446,20 +489,32 @@ def _best_feasible(network: Network, profile: DNNProfile,
     Callers must widen ``dist_tol`` to the engine's distance error (the
     float32 jnp/pallas relaxations carry ~1e-7 relative error even though
     their histories are stored as float64).
+
+    ``bound`` optionally carries the bounding pass's (config, eval) pair —
+    when a scanned candidate IS that configuration, its (deterministic)
+    evaluation is reused instead of recomputed: the ceil rescue pass
+    usually lands on exactly the main pass's selection.
     """
+    if bound is not None and bound_energy is None:
+        bound_energy = bound[1].energy
     found: Optional[Tuple[Config, ConfigEval]] = None
     for k in admissible_exits:
         if not oracle:
             best_e = found[1].energy if found is not None else bound_energy
             if best_e is not None:
-                dmin = float(dp.dist[profile.exits[k].block].min())
-                if dmin > best_e * (1 + dist_tol):
+                if _exit_dmin(dp, profile.exits[k].block) \
+                        > best_e * (1 + dist_tol):
                     continue
         configs = (_configs_at_exit(dp, profile, k) if oracle
                    else _iter_configs_at_exit(dp, profile, k))
         for cfg, _graph_e in configs:
-            ev = evaluate_config(network, profile, req, cfg,
-                                 check_aggregate_load=check_aggregate_load)
+            if (bound is not None and cfg.final_exit == bound[0].final_exit
+                    and cfg.placement == bound[0].placement):
+                ev = bound[1]
+            else:
+                ev = evaluate_config(
+                    network, profile, req, cfg,
+                    check_aggregate_load=check_aggregate_load)
             if ev.feasible:
                 if found is None or ev.energy < found[1].energy:
                     found = (cfg, ev)
@@ -491,7 +546,7 @@ def solve_fin(network: Network, profile: DNNProfile, req: AppRequirements,
                         meta={"reason": "no exit meets alpha (3c)"})
 
     def _solve_once(q: str, d_eff: float,
-                    bound: Optional[float] = None
+                    bound: Optional[Tuple[Config, ConfigEval]] = None
                     ) -> Optional[Tuple[Config, ConfigEval]]:
         fg = build_feasible_graph(ext, gamma, lam=lam, quantize=q,
                                   delta_eff=d_eff)
@@ -499,7 +554,7 @@ def solve_fin(network: Network, profile: DNNProfile, req: AppRequirements,
         return _best_feasible(network, profile, req, dp, admissible_exits,
                               check_aggregate_load,
                               oracle=(backend == "python"),
-                              bound_energy=bound,
+                              bound=bound,
                               dist_tol=_dist_tol(backend))
 
     delta_eff = req.delta
@@ -517,8 +572,7 @@ def solve_fin(network: Network, profile: DNNProfile, req: AppRequirements,
         # conservative pass: ceil quantization is feasible-by-construction and
         # can rescue state-collision misses of the optimistic quantizer.  The
         # floor-pass energy bounds the scan (vectorized backends only).
-        alt = _solve_once("ceil", req.delta,
-                          best[1].energy if best is not None else None)
+        alt = _solve_once("ceil", req.delta, best)
         if alt is not None and (best is None or alt[1].energy < best[1].energy):
             best = alt
             meta["used_ceil_pass"] = True
@@ -597,11 +651,12 @@ def solve_many(profiles: Union[DNNProfile, Sequence[DNNProfile]],
 
     oracle = backend == "python"
 
-    def _scan(b: int, dp: "_DPState", bound: Optional[float] = None
+    def _scan(b: int, dp: "_DPState",
+              bound: Optional[Tuple[Config, ConfigEval]] = None
               ) -> Optional[Tuple]:
         return _best_feasible(nets[b], profs[b], reqs[b], dp, admissible[b],
                               check_aggregate_load, oracle=oracle,
-                              bound_energy=bound,
+                              bound=bound,
                               dist_tol=_dist_tol(backend))
 
     def _fgs(bs: List[int], qmode: str, d_effs: List[float]
@@ -640,8 +695,7 @@ def solve_many(profiles: Union[DNNProfile, Sequence[DNNProfile]],
     for b in active:
         if quantize == "ceil":
             break
-        f = _scan(b, ceil_dps[b],
-                  None if best[b] is None else best[b][1].energy)
+        f = _scan(b, ceil_dps[b], best[b])
         if f is not None and (best[b] is None
                               or f[1].energy < best[b][1].energy):
             best[b] = f

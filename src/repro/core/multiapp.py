@@ -15,13 +15,14 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .dnn_profile import DNNProfile, all_paper_apps
 from .fin import solve_fin, solve_many
 from .mcp import solve_mcp
+from .plan import Plan, solve_plans
 from .problem import AppRequirements, Solution
 from .system_model import Network, make_network
 
@@ -76,6 +77,59 @@ class MultiAppResult:
 
 
 SolverFn = Callable[[Network, DNNProfile, AppRequirements], Solution]
+
+
+class PlanCache:
+    """Persistent per-(app, uplink-bucket, slice) :class:`Plan` cache.
+
+    With bucketed uplink draws, every user in a bucket sees an *identical*
+    network — so the natural cache entry is not a solution but the built
+    pipeline state itself.  The first time a bucket is seen, a plan is
+    constructed and solved (new buckets of one call batch through
+    ``solve_plans``); afterwards — including across *separate*
+    ``run_multiapp`` calls, which is where a plain per-call solution cache
+    resets — its incumbent is served directly, and the plan is ready for
+    warm deltas (slice re-negotiation, failures) without any rebuild.
+    ``gamma``/``backend`` must match the FIN solver entry they shadow
+    (``default_solvers``' defaults by default).
+    """
+
+    def __init__(self, *, gamma: int = 10, backend: str = "minplus"):
+        self.gamma = gamma
+        self.backend = backend
+        self._plans: Dict[tuple, Plan] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def solve_users(self, app: str, profile: DNNProfile,
+                    req: AppRequirements, qualities: np.ndarray,
+                    per_user_slice: float) -> Tuple[List[Solution], int]:
+        """Solutions for a population of bucketed uplink draws.
+
+        Returns (per-user solutions, number of fresh solves issued) — the
+        difference is what the cache absorbed.
+        """
+        uniq = sorted(set(float(q) for q in qualities))
+        fresh: List[Plan] = []
+        for q in uniq:
+            key = (app, q, per_user_slice)
+            if key not in self._plans:
+                nw = user_networks(np.array([q]), per_user_slice)[0]
+                plan = Plan(nw, profile, req, gamma=self.gamma,
+                            backend=self.backend)
+                self._plans[key] = plan
+                fresh.append(plan)
+        if fresh:
+            solve_plans(fresh)             # one batched warm relaxation
+        self.misses += len(fresh)
+        n_users = len(qualities)
+        self.hits += n_users - len(fresh)
+        sols = [self._plans[(app, float(q), per_user_slice)].solution
+                for q in qualities]
+        return sols, len(fresh)
 
 
 def default_solvers(gamma: int = 10,
@@ -158,6 +212,7 @@ def run_multiapp(n_users: int,
                  slice_frac: float = EDGE_CLOUD_SLICE,
                  divide_slice_by_users: bool = False,
                  uplink_buckets: Optional[int] = None,
+                 plan_cache: Optional[PlanCache] = None,
                  seed: int = 0) -> MultiAppResult:
     """Fig. 8 experiment.  ``divide_slice_by_users=False`` follows the paper's
     ' 0.5% ... for each of the applications' inference execution' (a constant
@@ -172,6 +227,13 @@ def run_multiapp(n_users: int,
     counts the skipped solves) and the batched FIN path dedups its
     extended graphs per bucket.  ``None`` (default) keeps the continuous
     per-user channel draws of the paper — results are unchanged.
+
+    ``plan_cache`` (with ``uplink_buckets``) upgrades the FIN path's bucket
+    handling from per-call extended-graph dedup to a *persistent*
+    :class:`PlanCache`: each bucket's built pipeline state survives across
+    ``run_multiapp`` calls (a growing-population sweep re-solves nothing for
+    buckets it has already seen) and stays warm for online deltas.
+    Results are identical to the default batched path.
     """
     apps = apps if apps is not None else PAPER_MULTIAPP_REQS
     profiles = profiles if profiles is not None else all_paper_apps()
@@ -197,7 +259,13 @@ def run_multiapp(n_users: int,
             st = stats[app][name]
             batch = getattr(solver, "solve_batch", None)
             t0 = time.perf_counter()
-            if batch is not None:
+            if batch is not None and plan_cache is not None and uplink_buckets:
+                # persistent plan IR per bucket: only never-seen buckets
+                # solve (batched); everything else reuses incumbents
+                sols, fresh = plan_cache.solve_users(app, profile, req,
+                                                     qualities, per_user)
+                st.solve_cache_hits += len(networks) - fresh
+            elif batch is not None:
                 # one batched relaxation over the whole user population
                 sols = batch(networks, profile, req)
             else:

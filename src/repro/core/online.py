@@ -1,0 +1,271 @@
+"""Event-driven churn orchestrator over the persistent plan IR.
+
+The paper's multi-tiered setting is dynamic: per-user uplink quality fades,
+users roam between edge helpers, infrastructure nodes fail and recover, and
+per-app slices get re-negotiated — all while inference is being served.
+This module steps a population of :class:`repro.core.plan.Plan` objects
+through such churn:
+
+  * events (``scenarios.ChurnEvent``) apply as typed plan deltas — channel
+    draws and re-associations through the BATCHED packed requantizer
+    (``plan.update_uplinks``), failures/recoveries as row/col masks, slice
+    changes as compute rescales;
+  * *hysteresis*: a dirty user re-places only when its incumbent
+    configuration became infeasible (exact (3a)-(3e) re-check against the
+    updated network, dead-node aware) or its exact cost degraded past
+    ``(1 + hysteresis)`` times the cost it had when last solved — small
+    fades ride on the incumbent for free;
+  * the users that do re-place solve as ONE grouped batched relaxation per
+    tick (``solve_plans``), warm: no graph construction, cached gather
+    indices, DP grids reused outright when the quantized tensors did not
+    move;
+  * migration accounting: every placement change is charged the moved
+    blocks and their migration bits (``plan.migration_delta``).
+
+``hysteresis=0`` with ``always_resolve=True`` degenerates to per-tick
+optimal re-planning whose configurations are bit-exact vs cold per-user
+``solve_fin`` calls — the mode the equivalence tests and the warm-vs-cold
+benchmark drive.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from .dnn_profile import DNNProfile
+from .plan import Plan, migration_delta, solve_plans, update_uplinks
+from .problem import AppRequirements
+from .scenarios import (MOBILE_UPLINK_BPS, ChurnEvent, churn_trace,
+                        paper_scenario)
+from .system_model import Network
+
+__all__ = ["ChurnEvent", "churn_trace", "TickReport", "ChurnStats",
+           "ChurnOrchestrator", "population_plans"]
+
+
+@dataclass
+class TickReport:
+    """What one orchestrator tick did."""
+
+    tick: int
+    n_events: int = 0
+    n_uplink_updates: int = 0
+    n_quant_changed: int = 0     # uplink updates that moved a DP input
+    n_dirty: int = 0             # users touched by an event
+    n_resolved: int = 0          # warm re-solves issued
+    n_held: int = 0              # hysteresis kept the incumbent
+    n_failed: int = 0            # users with no feasible placement
+    n_migrations: int = 0        # re-solves that changed the placement
+    blocks_moved: int = 0
+    migration_bits: float = 0.0
+    energy: float = 0.0          # sum of current per-user config energies
+
+
+@dataclass
+class ChurnStats:
+    """Aggregate over a churn run."""
+
+    ticks: List[TickReport] = field(default_factory=list)
+
+    def total(self, attr: str) -> float:
+        return sum(getattr(t, attr) for t in self.ticks)
+
+    @property
+    def n_ticks(self) -> int:
+        return len(self.ticks)
+
+    @property
+    def resolve_rate(self) -> float:
+        """Re-solves per dirty user — what hysteresis saves."""
+        dirty = self.total("n_dirty")
+        return self.total("n_resolved") / dirty if dirty else 0.0
+
+
+class ChurnOrchestrator:
+    """Steps a user population's plans through churn events.
+
+    ``plans`` is one plan per user (see :func:`population_plans`).  All
+    plans must share a network shape; the uplink model scales each user's
+    source-node links by the drawn quality — the attached edge helper gets
+    the full channel, detached helpers ``detach_frac`` of it (mobility),
+    the cloud path the full channel (it rides the attached helper's
+    backhaul in the paper topology).
+    """
+
+    def __init__(self, plans: Sequence[Plan], *, hysteresis: float = 0.05,
+                 uplink_bps: float = MOBILE_UPLINK_BPS,
+                 detach_frac: float = 0.25,
+                 always_resolve: bool = False):
+        self.plans = list(plans)
+        self.hysteresis = hysteresis
+        self.uplink_bps = uplink_bps
+        self.detach_frac = detach_frac
+        self.always_resolve = always_resolve
+        U = len(self.plans)
+        self.quality = np.ones(U)
+        nw = self.plans[0].network
+        self._edge_nodes = [n for n, spec in enumerate(nw.nodes)
+                            if spec.tier == "edge"
+                            and n != nw.source_node]
+        self.attached = np.zeros(U, dtype=np.int64)   # edge-slot per user
+        self._ref_energy = np.full(U, np.inf)          # energy at last solve
+        self._cur_energy = np.full(U, np.inf)
+        self._tick = 0
+        # cold-start placement for plans that were not solved yet
+        fresh = [p for p in self.plans if p.solution is None]
+        if fresh:
+            solve_plans(fresh)
+        for u, p in enumerate(self.plans):
+            if p.solution is not None and p.solution.feasible:
+                self._ref_energy[u] = p.solution.energy
+                self._cur_energy[u] = p.solution.energy
+
+    # ------------------------------------------------------------------ API
+    def run(self, trace: Iterable[Sequence[ChurnEvent]]) -> ChurnStats:
+        stats = ChurnStats()
+        for events in trace:
+            stats.ticks.append(self.step(events))
+        return stats
+
+    def step(self, events: Sequence[ChurnEvent]) -> TickReport:
+        rep = TickReport(tick=self._tick, n_events=len(events))
+        self._tick += 1
+        U = len(self.plans)
+
+        uplink_users: set = set()
+        dirty = set()
+        for ev in events:
+            if ev.kind == "uplink":
+                if ev.user is None:
+                    raise ValueError("uplink events are per-user "
+                                     "(ChurnEvent.user must be an int)")
+                self.quality[ev.user] = ev.value
+                uplink_users.add(ev.user)
+                dirty.add(ev.user)
+            elif ev.kind == "attach":
+                if ev.user is None:
+                    raise ValueError("attach events are per-user "
+                                     "(ChurnEvent.user must be an int)")
+                slot = int(ev.value) % max(1, len(self._edge_nodes))
+                if self.attached[ev.user] != slot:
+                    self.attached[ev.user] = slot
+                    uplink_users.add(ev.user)
+                    dirty.add(ev.user)
+            elif ev.kind in ("fail", "recover"):
+                targets = range(U) if ev.user is None else [ev.user]
+                for u in targets:
+                    if ev.kind == "fail":
+                        self.plans[u].mask_node(int(ev.value))
+                    else:
+                        self.plans[u].unmask_node(int(ev.value))
+                    dirty.add(u)
+            elif ev.kind == "slice":
+                targets = range(U) if ev.user is None else [ev.user]
+                for u in targets:
+                    self.plans[u].update_slice(ev.value)
+                    dirty.add(u)
+            else:
+                raise ValueError(f"unknown churn event kind {ev.kind!r}")
+
+        # channel + mobility funnel through one batched packed requantize
+        if uplink_users:
+            uplink_users = sorted(uplink_users)
+            vecs = np.stack([self._uplink_vector(u) for u in uplink_users])
+            changed = update_uplinks([self.plans[u] for u in uplink_users],
+                                     vecs)
+            rep.n_uplink_updates = len(uplink_users)
+            rep.n_quant_changed = int(np.count_nonzero(changed))
+
+        # hysteresis gate: exact incumbent re-check against the new state
+        rep.n_dirty = len(dirty)
+        resolve: List[int] = []
+        for u in sorted(dirty):
+            p = self.plans[u]
+            inc = p.solution
+            if inc is None or not inc.found:
+                resolve.append(u)
+                continue
+            ev_ = p.evaluate(inc.config)
+            if (self.always_resolve or not ev_.feasible
+                    or ev_.energy > self._ref_energy[u]
+                    * (1.0 + self.hysteresis)):
+                resolve.append(u)
+            else:
+                rep.n_held += 1
+                self._cur_energy[u] = ev_.energy
+
+        # batched warm re-solve of the users that actually re-place
+        if resolve:
+            old = [self.plans[u].solution for u in resolve]
+            sols = solve_plans([self.plans[u] for u in resolve])
+            rep.n_resolved = len(resolve)
+            for u, prev, sol in zip(resolve, old, sols):
+                if not sol.feasible:
+                    rep.n_failed += 1
+                    self._cur_energy[u] = np.inf
+                    self._ref_energy[u] = np.inf
+                    continue
+                self._ref_energy[u] = sol.energy
+                self._cur_energy[u] = sol.energy
+                prev_cfg = prev.config if prev is not None else None
+                moved, bits = migration_delta(self.plans[u].profile,
+                                              prev_cfg, sol.config)
+                if moved:
+                    rep.n_migrations += 1
+                    rep.blocks_moved += moved
+                    rep.migration_bits += bits
+
+        fin = np.isfinite(self._cur_energy)
+        rep.energy = float(self._cur_energy[fin].sum())
+        return rep
+
+    # ------------------------------------------------------------- internals
+    def _uplink_vector(self, u: int) -> np.ndarray:
+        """Per-target source-link bandwidths for user ``u``'s current
+        (quality, attachment) state."""
+        p = self.plans[u]
+        nw = p.network
+        src = nw.source_node
+        q = float(self.quality[u])
+        vec = np.empty(nw.n_nodes)
+        att = (self._edge_nodes[int(self.attached[u])
+                                % len(self._edge_nodes)]
+               if self._edge_nodes else -1)
+        for n, spec in enumerate(nw.nodes):
+            if n == src:
+                vec[n] = np.inf
+            elif spec.tier == "edge" and self._edge_nodes and n != att:
+                vec[n] = self.uplink_bps * q * self.detach_frac
+            else:
+                vec[n] = self.uplink_bps * q
+        return vec
+
+
+def population_plans(n_users: int, *,
+                     apps: Optional[Dict[str, AppRequirements]] = None,
+                     profiles: Optional[Dict[str, DNNProfile]] = None,
+                     network: Optional[Network] = None,
+                     n_extra_edge: int = 0, gamma: int = 10,
+                     backend: str = "minplus",
+                     **plan_kwargs) -> List[Plan]:
+    """One plan per user, apps assigned round-robin over the paper's h1-h6.
+
+    Every plan snapshots the shared base network (``paper_scenario`` with
+    ``n_extra_edge`` helpers by default) — per-user channel state then
+    lives inside each plan and is driven by the orchestrator.
+    """
+    from .dnn_profile import all_paper_apps
+    from .multiapp import PAPER_MULTIAPP_REQS
+    apps = apps if apps is not None else PAPER_MULTIAPP_REQS
+    profiles = profiles if profiles is not None else all_paper_apps()
+    nw = network if network is not None \
+        else paper_scenario(n_extra_edge=n_extra_edge)
+    names = list(apps)
+    plans = []
+    for u in range(n_users):
+        app = names[u % len(names)]
+        plans.append(Plan(nw, profiles[app], apps[app], gamma=gamma,
+                          backend=backend, **plan_kwargs))
+    return plans

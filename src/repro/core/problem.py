@@ -79,12 +79,16 @@ def evaluate_config(network: Network, profile: DNNProfile,
     assert len(place) == last_block + 1, \
         f"placement covers blocks 0..{len(place)-1} but final exit is on {last_block}"
 
-    bw = network.bandwidth
-    comp = network.compute
-    p_act = network.power_active
-    e_tx, e_rx = network.e_tx, network.e_rx
+    # Pure-Python scalar arithmetic on the hot path: every candidate
+    # configuration of every solver post-pass lands here, and per-element
+    # numpy scalar ops (plus the array-building Network accessors) cost ~3x
+    # the identical IEEE-double Python ops.  Values are bit-identical.
+    bw = network.bandwidth.tolist()
+    comp = network.compute.tolist()
+    nodes = network.nodes
     src = network.source_node
     sigma = req.sigma
+    inf = float("inf")
 
     violations: List[str] = []
     latency = 0.0
@@ -93,12 +97,13 @@ def evaluate_config(network: Network, profile: DNNProfile,
 
     # --- input transfer: source -> host of block 0 ---------------------------
     if place[0] != src:
-        b_in = bw[src, place[0]]
+        b_in = bw[src][place[0]]
         if b_in <= 0:
             violations.append(f"no link source->{place[0]}")
-            b_in = np.inf
+            b_in = inf
         latency += profile.input_bits / b_in
-        energy_comm += (e_tx[src] + e_rx[place[0]]) * profile.input_bits
+        energy_comm += (nodes[src].e_tx + nodes[place[0]].e_rx) \
+            * profile.input_bits
         if sigma * profile.input_bits > b_in:
             violations.append("(3e) input link overloaded")
 
@@ -110,10 +115,10 @@ def evaluate_config(network: Network, profile: DNNProfile,
         c = comp[n]
         if c <= 0:
             violations.append(f"(3d) node {n} has no compute slice")
-            c = np.inf
+            c = inf
         t_comp = ops / c
         latency += t_comp
-        energy_comp += surv_in * p_act[n] * t_comp
+        energy_comp += surv_in * nodes[n].power_active * t_comp
         if sigma * surv_in * ops > c:
             violations.append(f"(3d) compute overload on node {n} block {i}")
 
@@ -121,19 +126,19 @@ def evaluate_config(network: Network, profile: DNNProfile,
             n2 = place[i + 1]
             d = profile.cut_bits[i]
             surv_out = profile.survival_after_block(i, k)
-            b = bw[n, n2]
+            b = bw[n][n2]
             if n != n2:
                 if b <= 0:
                     violations.append(f"no link {n}->{n2}")
-                    b = np.inf
+                    b = inf
                 latency += d / b
-                energy_comm += surv_out * (e_tx[n] + e_rx[n2]) * d
+                energy_comm += surv_out * (nodes[n].e_tx + nodes[n2].e_rx) * d
                 if sigma * surv_out * d > b:
                     violations.append(f"(3e) link {n}->{n2} overloaded cut {i}")
 
     # --- aggregate per-node load (multi-app orchestrator mode) ----------------
     if check_aggregate_load:
-        load = np.zeros(network.n_nodes)
+        load = [0.0] * network.n_nodes
         for i in range(last_block + 1):
             load[place[i]] += (sigma * profile.survival_entering_block(i, k)
                                * profile.block_ops_with_exit(i, k))

@@ -1,0 +1,36 @@
+"""Shared numeric tolerances of the FIN solver stack.
+
+One home for the distance-error model of the DP backends, so the solver's
+exit-prune guard (``fin._best_feasible``) and the equivalence tests compare
+against the *same* constants instead of re-declaring them inline:
+
+  * the float64 numpy engines (``minplus``/``banded``/``dense``) relax with
+    exact float64 adds — their distances carry no engine error beyond the
+    ~1e-16 rounding of the shared candidate sums (guard: DIST_RTOL_EXACT);
+  * the jnp and pallas engines relax in float32 (~1e-7 relative rounding per
+    add) even though their histories are returned as float64 arrays — the
+    prune guard must widen to DIST_RTOL_F32, and elementwise comparisons of
+    their distance grids against the float64 oracle use RELAX_RTOL_F32.
+"""
+from __future__ import annotations
+
+#: relative slack of the exit-prune guard for exact float64 engines.
+DIST_RTOL_EXACT = 1e-9
+
+#: relative slack of the exit-prune guard for float32 relaxation engines
+#: (wider than RELAX_RTOL_F32: the guard bounds a *sum* of rounded adds).
+DIST_RTOL_F32 = 1e-5
+
+#: elementwise rtol when comparing float32-engine distances to the float64
+#: oracle (tests and in-bench agreement assertions).
+RELAX_RTOL_F32 = 1e-6
+
+#: relaxation engines that accumulate in float32.
+F32_ENGINES = ("jnp", "pallas")
+
+
+def dist_tol(engine: str | None) -> float:
+    """Exit-prune guard for a relaxation *engine* (not backend alias): the
+    relative error of its DP distances.  ``fin.DP_BACKENDS`` maps user-facing
+    backend names to engines."""
+    return DIST_RTOL_F32 if engine in F32_ENGINES else DIST_RTOL_EXACT

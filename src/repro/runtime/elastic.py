@@ -4,10 +4,12 @@ On a real fleet, losing a host shrinks the usable device set.  This module
 picks the best replacement mesh (largest chip count whose (data, model)
 factorization keeps every sharded dimension divisible), and emits a re-shard
 plan: which axes change and the collective cost of the migration.  Together
-with checkpoint/restart (runtime/checkpoint.py) and FIN re-placement
-(core/system_model.without_node), this is the framework's elasticity story
-(DESIGN.md Sec. 5): train state is restored from the latest checkpoint under
-the new mesh's shardings — resharding happens at load time for free.
+with checkpoint/restart (runtime/checkpoint.py) and warm FIN re-placement
+(:func:`fin_failover`, over the persistent ``core.Plan`` IR), this is the
+framework's elasticity story (DESIGN.md Sec. 5): train state is restored
+from the latest checkpoint under the new mesh's shardings — resharding
+happens at load time for free — and the serving placement re-solves as a
+node-mask delta instead of a pipeline rebuild.
 """
 from __future__ import annotations
 
@@ -16,6 +18,8 @@ from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
 from repro.configs.base import ArchConfig
+from repro.core.plan import Plan, migration_delta
+from repro.core.problem import Config, Solution
 
 
 @dataclass(frozen=True)
@@ -89,3 +93,45 @@ def plan_rescale(cfg: ArchConfig, old: MeshPlan, chips_available: int,
         moved = param_bytes * min(1.0, frac)
     return ReshardPlan(old=old, new=new, moved_bytes=moved,
                        batch_ok=global_batch % (new.data * new.pods) == 0)
+
+
+# ---------------------------------------------------------------------------
+# FIN placement failover over the persistent plan IR
+# ---------------------------------------------------------------------------
+
+@dataclass
+class FinFailover:
+    """Outcome of a warm FIN re-placement after a node event."""
+
+    solution: Solution
+    old_config: Optional[Config]
+    new_config: Optional[Config]
+    blocks_moved: int
+    migration_bits: float
+
+    @property
+    def feasible(self) -> bool:
+        return self.solution.feasible
+
+
+def fin_failover(plan: Plan, failed_node: int,
+                 *, recover: bool = False) -> FinFailover:
+    """Re-place after a node failure (or recovery) as a warm plan delta.
+
+    Masks (or unmasks) ``failed_node`` on the plan and issues a warm
+    re-solve — the cached extended-graph tensors, quantized banded tensors
+    and gather indices are reused, only row/col infinity masks change.  The
+    result is bit-exact vs a cold ``solve_fin`` on the reduced network;
+    the report carries the migration cost of moving the re-hosted blocks'
+    state, the placement analogue of :class:`ReshardPlan`.
+    """
+    old = plan.solution.config if plan.solution is not None else None
+    if recover:
+        plan.unmask_node(failed_node)
+    else:
+        plan.mask_node(failed_node)
+    sol = plan.solve()
+    new = sol.config if sol.feasible else None
+    moved, bits = migration_delta(plan.profile, old, new)
+    return FinFailover(solution=sol, old_config=old, new_config=new,
+                       blocks_moved=moved, migration_bits=bits)

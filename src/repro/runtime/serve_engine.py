@@ -14,8 +14,11 @@ per-sample early exits are realized as *scheduling*:
   * per-token *tier accounting*: with a FIN placement (blocks -> tiers),
     the engine charges each token only the blocks up to its exit, yielding
     the measured energy the paper's objective (3a) predicts;
-  * fault tolerance: ``fail_node`` re-solves FIN on the reduced network and
-    the engine continues under the new placement (Sec. V elasticity).
+  * fault tolerance: the placement lives in a persistent ``core.Plan`` —
+    ``fail_node`` masks the dead node and issues a *warm* re-solve (no
+    graph reconstruction; bit-exact vs a cold solve on the reduced
+    network), ``recover_node`` unmasks and re-solves; node indices stay
+    stable across failures (Sec. V elasticity).
 """
 from __future__ import annotations
 
@@ -28,8 +31,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core import (AppRequirements, Config, DNNProfile, Network,
-                        evaluate_config, solve_fin)
+from repro.core import (AppRequirements, Config, DNNProfile, Network, Plan,
+                        evaluate_config, migration_delta)
 from repro.kernels.ee_gate.ops import ee_gate
 from repro.models import transformer as T
 
@@ -52,7 +55,9 @@ class EngineStats:
     blocks_executed: int = 0          # tier-charged block executions
     blocks_saved: int = 0             # skipped by early exits
     energy_j: float = 0.0             # placement-model energy (Eq. 2 units)
-    replacements: int = 0             # FIN re-solves after failures
+    replacements: int = 0             # FIN re-solves after failures/recovery
+    blocks_migrated: int = 0          # blocks re-hosted by re-placements
+    migration_bits: float = 0.0       # state bits moved by re-placements
 
     @property
     def measured_phi(self) -> Dict[int, float]:
@@ -92,16 +97,20 @@ class SplitServeEngine:
         self.stats = EngineStats()
         self.pos = 0
         self._slot_len = np.zeros(batch_size, np.int32)
-        # placement integration
-        self.network = network
+        # placement integration: a persistent Plan owns the built pipeline
+        # state, so failure/recovery re-solves are warm deltas
         self.profile = profile
         self.app_req = req
         self.gamma = gamma
+        self.plan: Optional[Plan] = None
         self.placement: Optional[Config] = None
+        self.network = network
         if network is not None and profile is not None and req is not None:
-            sol = solve_fin(network, profile, req, gamma=gamma)
+            self.plan = Plan(network, profile, req, gamma=gamma)
+            sol = self.plan.solve()
             assert sol.feasible, "no feasible FIN placement"
             self.placement = sol.config
+            self.network = self.plan.network   # live view of current state
 
     # ------------------------------------------------------------------ API
     def submit(self, prompt: Sequence[int], max_new_tokens: int) -> Request:
@@ -111,15 +120,32 @@ class SplitServeEngine:
         return r
 
     def fail_node(self, node_idx: int) -> None:
-        """Node failure: re-solve the placement on the reduced network."""
-        assert self.network is not None
-        self.network = self.network.without_node(node_idx)
-        sol = solve_fin(self.network, self.profile, self.app_req,
-                        gamma=self.gamma)
+        """Node failure: mask the node in the plan and warm re-solve.
+
+        The plan keeps its node indexing (the placement simply avoids the
+        dead node), so tier accounting and any in-flight references stay
+        valid; the re-solve reuses the cached pipeline state and is
+        bit-exact vs a cold solve on the reduced network."""
+        assert self.plan is not None
+        self.plan.mask_node(node_idx)
+        self._replace()
+
+    def recover_node(self, node_idx: int) -> None:
+        """Node recovery: unmask and warm re-solve (may migrate back)."""
+        assert self.plan is not None
+        self.plan.unmask_node(node_idx)
+        self._replace()
+
+    def _replace(self) -> None:
+        old = self.placement
+        sol = self.plan.solve()
         if not sol.feasible:
             raise RuntimeError("no feasible placement after failure")
         self.placement = sol.config
         self.stats.replacements += 1
+        moved, bits = migration_delta(self.profile, old, sol.config)
+        self.stats.blocks_migrated += moved
+        self.stats.migration_bits += bits
 
     def run(self, *, max_steps: int = 10_000) -> EngineStats:
         while (any(self.slots) or self.queue) and self.stats.steps < max_steps:

@@ -16,11 +16,13 @@ from repro.core import (AppRequirements, build_extended_graph,
                         user_networks)
 from repro.core.bellman_ford import (batched_banded_relax_argmin,
                                      batched_banded_relax_min,
+                                     batched_banded_relax_minarg,
                                      batched_layered_relax_argmin,
                                      batched_layered_relax_kbest,
                                      batched_layered_relax_min,
                                      layered_relax, layered_relax_argmin)
 from repro.core.scenarios import paper_scenario, sweep_scenarios
+from repro.core.tolerances import RELAX_RTOL_F32
 
 APPS = ("h1", "h2", "h3", "h4", "h5", "h6")
 
@@ -200,7 +202,7 @@ def test_banded_argmin_backends_match_numpy(scenario):
                                              backend=backend)
         m = np.isfinite(hb[0])
         assert (np.isfinite(h[0]) == m).all()
-        np.testing.assert_allclose(h[0][m], hb[0][m], rtol=1e-6)
+        np.testing.assert_allclose(h[0][m], hb[0][m], rtol=RELAX_RTOL_F32)
         L = h.shape[1]
         for i in range(1, L):
             for n in range(fg.ext.n_nodes):
@@ -211,7 +213,8 @@ def test_banded_argmin_backends_match_numpy(scenario):
                         assert p >= 0 and gs >= 0
                         np.testing.assert_allclose(
                             h[0, i, n, g],
-                            h[0, i - 1, p, gs] + E[i - 1, p, n], rtol=1e-6)
+                            h[0, i - 1, p, gs] + E[i - 1, p, n],
+                            rtol=RELAX_RTOL_F32)
                     else:
                         assert p == -1
 
@@ -288,7 +291,7 @@ def test_batched_relax_argmin_matches_single():
         d = layered_relax(init[b], Ws[b], backend="numpy")
         np.testing.assert_array_equal(hist[b], d)
         m = np.isfinite(d)
-        np.testing.assert_allclose(hist_j[b][m], d[m], rtol=1e-6)
+        np.testing.assert_allclose(hist_j[b][m], d[m], rtol=RELAX_RTOL_F32)
         np.testing.assert_array_equal(par_j[b], par[b])
         # parents reconstruct the distances exactly
         for l in range(1, L + 1):
@@ -321,3 +324,63 @@ def test_layered_relax_argmin_single_wrapper():
     hist, par = layered_relax_argmin(init, Ws, backend="numpy")
     assert hist.shape == (L + 1, S) and par.shape == (L, S)
     np.testing.assert_array_equal(hist, layered_relax(init, Ws, "numpy"))
+
+
+def test_banded_minarg_matches_min_and_lazy_parents(scenario):
+    """The argmin-storing float64 banded engine (the Plan IR's warm DP):
+    distances bit-equal to the min-only engine, parents identical to the
+    lazy ``banded_parent_np`` recovery on every reachable state."""
+    from repro.core.bellman_ford import banded_parent_np
+
+    fg = _paper_fgs(scenario)
+    E, st = fg.banded_tensors()
+    init = fg.init_grid()
+    lo = fg.depth_window_lo
+    hist_min = batched_banded_relax_min(init[None], E[None], st[None], lo)
+    hist, par = batched_banded_relax_minarg(init[None], E[None], st[None], lo)
+    np.testing.assert_array_equal(hist, hist_min)
+    L = hist.shape[1]
+    for i in range(1, L):
+        for n in range(fg.ext.n_nodes):
+            for g in range(fg.gamma + 1):
+                if np.isfinite(hist[0, i, n, g]):
+                    pn, pg = banded_parent_np(hist[0, i - 1], E[i - 1],
+                                              st[i - 1], n, g, lo)
+                    assert par[0, i - 1, n, g] == pn
+                    assert g - int(st[i - 1, pn, n]) == pg
+                else:
+                    assert par[0, i - 1, n, g] == -1
+
+
+# ---------------------------------------------------------------------------
+# REPRO_RELAX_CHUNK_BYTES parsing
+# ---------------------------------------------------------------------------
+
+def test_relax_chunk_bytes_env_validation(monkeypatch):
+    """A set-but-invalid chunk budget must raise a clear error instead of
+    silently falling back (and later failing inexplicably deep inside the
+    chunked relaxation); unset/empty means the default."""
+    from repro.core.fin import _RELAX_CHUNK_BYTES_DEFAULT, _relax_chunk_bytes
+
+    monkeypatch.delenv("REPRO_RELAX_CHUNK_BYTES", raising=False)
+    assert _relax_chunk_bytes() == _RELAX_CHUNK_BYTES_DEFAULT
+    monkeypatch.setenv("REPRO_RELAX_CHUNK_BYTES", "")
+    assert _relax_chunk_bytes() == _RELAX_CHUNK_BYTES_DEFAULT
+    monkeypatch.setenv("REPRO_RELAX_CHUNK_BYTES", "65536")
+    assert _relax_chunk_bytes() == 65536
+    for bad in ("abc", "4MB", "1.5e6"):        # non-integer
+        monkeypatch.setenv("REPRO_RELAX_CHUNK_BYTES", bad)
+        with pytest.raises(ValueError, match="REPRO_RELAX_CHUNK_BYTES"):
+            _relax_chunk_bytes()
+    for bad in ("0", "-4194304"):              # non-positive
+        monkeypatch.setenv("REPRO_RELAX_CHUNK_BYTES", bad)
+        with pytest.raises(ValueError, match="positive"):
+            _relax_chunk_bytes()
+
+
+def test_relax_chunk_bytes_invalid_surfaces_from_solver(monkeypatch, scenario):
+    """The error must surface at the solver entry, not as a deep crash."""
+    monkeypatch.setenv("REPRO_RELAX_CHUNK_BYTES", "bogus")
+    prof = paper_profile("h2")
+    with pytest.raises(ValueError, match="REPRO_RELAX_CHUNK_BYTES"):
+        solve_many([prof] * 3, scenario, AppRequirements(0.8, 5e-3))

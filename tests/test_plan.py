@@ -1,0 +1,350 @@
+"""Plan IR: delta re-solves must be bit-exact vs cold ``solve_fin``.
+
+The defining invariant of the incremental layer: after ANY sequence of
+typed deltas (uplink draws, node failures/recoveries, slice rescales), a
+warm ``Plan.solve()`` returns exactly the configuration and energy that a
+cold ``solve_fin`` computes on the mutated scenario — across quantizers,
+backends and the batched population paths.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (AppRequirements, Network, Plan, build_extended_graph,
+                        build_feasible_graph, migration_delta, paper_profile,
+                        solve_fin, solve_plans, synthetic_profile,
+                        update_uplinks)
+from repro.core.multiapp import PAPER_MULTIAPP_REQS
+from repro.core.scenarios import paper_scenario
+
+APPS = ("h1", "h2", "h3", "h4", "h5", "h6")
+
+
+def _same(a, b):
+    if a.found != b.found:
+        return False
+    if not a.found:
+        return True
+    return (a.config.placement == b.config.placement
+            and a.config.final_exit == b.config.final_exit
+            and a.energy == b.energy)
+
+
+def _assert_cold_equal(plan, msg=""):
+    cold = solve_fin(plan.network, plan.profile, plan.req, gamma=plan.gamma,
+                     quantize=plan.quantize, backend=plan.backend)
+    assert _same(plan.solve(), cold), msg
+
+
+@pytest.fixture(scope="module")
+def network():
+    return paper_scenario(n_extra_edge=2)
+
+
+# ---------------------------------------------------------------------------
+# delta-sequence bit-exactness
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("app", APPS)
+def test_uplink_deltas_bitexact(network, app):
+    """AR(1) fades + hard jumps: warm solve == cold solve every step."""
+    prof = paper_profile(app)
+    req = PAPER_MULTIAPP_REQS[app]
+    plan = Plan(network, prof, req)
+    assert _same(plan.solve(), solve_fin(network, prof, req))
+    rng = np.random.default_rng(7)
+    q = 0.6
+    for t in range(20):
+        if t % 5 == 2:
+            q = float(rng.uniform(0.3, 1.0))        # hard jump
+        else:
+            q = float(np.clip(0.65 + 0.95 * (q - 0.65)
+                              + rng.normal(0, 0.04), 0.3, 1.0))
+        plan.update_uplink(q * 1e9)
+        _assert_cold_equal(plan, (app, t))
+
+
+def test_mixed_delta_sequence_bitexact(network):
+    """Interleaved uplink / slice / mask / unmask deltas stay exact."""
+    prof = paper_profile("h1")
+    req = PAPER_MULTIAPP_REQS["h1"]
+    plan = Plan(network, prof, req)
+    plan.solve()
+    rng = np.random.default_rng(3)
+    for t in range(24):
+        kind = t % 4
+        if kind == 0:
+            plan.update_uplink(float(rng.uniform(0.3, 1.0)) * 1e9)
+        elif kind == 1:
+            plan.update_slice(float(rng.uniform(0.4, 1.0)))
+        elif kind == 2:
+            plan.mask_node(int(rng.integers(1, network.n_nodes)))
+        else:
+            for n in list(plan.masked_nodes):
+                plan.unmask_node(n)
+        if not plan.masked_nodes:
+            _assert_cold_equal(plan, t)
+
+
+def test_per_target_uplink_vector(network):
+    """Mobility form: per-target (N,) uplink vectors are exact too."""
+    prof = paper_profile("h1")
+    req = PAPER_MULTIAPP_REQS["h1"]
+    plan = Plan(network, prof, req)
+    rng = np.random.default_rng(11)
+    for t in range(8):
+        vec = rng.uniform(0.2, 1.0, network.n_nodes) * 1e9
+        plan.update_uplink(vec)
+        _assert_cold_equal(plan, t)
+
+
+def test_masked_solve_equals_reduced_network(network):
+    """mask_node == cold solve on the node-removed network (modulo the
+    index remap) — energies bit-equal, placements remapped-equal."""
+    prof = paper_profile("h1")
+    req = PAPER_MULTIAPP_REQS["h1"]
+    plan = Plan(network, prof, req)
+    plan.update_uplink(0.3e9)          # regime that places off-mobile
+    for victim in (1, 4):
+        plan.mask_node(victim)
+        warm = plan.solve()
+        keep = [i for i in range(network.n_nodes) if i != victim]
+        remap = {new: old for new, old in enumerate(keep)}
+        red = Network(nodes=[plan.network.nodes[i] for i in keep],
+                      bandwidth=plan.network.bandwidth[
+                          np.ix_(keep, keep)].copy(),
+                      compute=plan.network.compute[keep].copy(),
+                      source_node=0)
+        cold = solve_fin(red, prof, req)
+        assert warm.found == cold.found
+        if warm.found:
+            assert warm.energy == cold.energy
+            assert warm.config.placement == \
+                [remap[p] for p in cold.config.placement]
+            assert victim not in warm.config.placement
+        plan.unmask_node(victim)
+    _assert_cold_equal(plan, "after recovery")
+
+
+def test_mask_source_raises(network):
+    plan = Plan(network, paper_profile("h2"), PAPER_MULTIAPP_REQS["h2"])
+    with pytest.raises(ValueError, match="source"):
+        plan.mask_node(network.source_node)
+
+
+def test_unknown_backend_raises(network):
+    with pytest.raises(ValueError, match="backend"):
+        Plan(network, paper_profile("h2"), PAPER_MULTIAPP_REQS["h2"],
+             backend="cuda")
+
+
+# ---------------------------------------------------------------------------
+# tensor-level equivalence (the slice updates reproduce the builders)
+# ---------------------------------------------------------------------------
+
+def test_ext_tensors_equal_fresh_build_after_deltas(network):
+    prof = paper_profile("h2")
+    req = PAPER_MULTIAPP_REQS["h2"]
+    plan = Plan(network, prof, req)
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        plan.update_uplink(float(rng.uniform(0.3, 1.0)) * 1e9)
+    plan.update_slice(0.7)
+    plan.update_uplink(0.45e9)
+    fresh = build_extended_graph(plan.network, prof, req)
+    for f in ("C", "T", "E", "TT", "mask", "init_T", "init_E", "init_mask"):
+        np.testing.assert_array_equal(getattr(plan.ext, f),
+                                      getattr(fresh, f)), f
+
+
+@pytest.mark.parametrize("quantize", ["floor", "ceil", "round"])
+def test_quant_tensors_equal_fresh_build(network, quantize):
+    """The incrementally maintained steep/init tensors equal a fresh
+    stage-2 build for every quantizer mode."""
+    prof = paper_profile("h1")
+    req = PAPER_MULTIAPP_REQS["h1"]
+    plan = Plan(network, prof, req, quantize=quantize)
+    rng = np.random.default_rng(2)
+    for _ in range(6):
+        plan.update_uplink(float(rng.uniform(0.3, 1.0)) * 1e9)
+    for mi, mode in enumerate(plan._modes):
+        fg = build_feasible_graph(plan.ext, plan.gamma, quantize=mode)
+        np.testing.assert_array_equal(plan._steep[mi], fg.steep)
+        np.testing.assert_array_equal(plan._init_depth[mi], fg.init_depth)
+
+
+# ---------------------------------------------------------------------------
+# DP-grid cache (quantization makes tensors piecewise-constant in channel)
+# ---------------------------------------------------------------------------
+
+def test_in_cell_fades_reuse_dp_grids(network):
+    """Tiny fades that stay inside the quantization cell must not re-relax
+    — and must still return the exact cold solution (the post-pass reads
+    the true bandwidth)."""
+    prof = paper_profile("h6")         # tiny cuts: quant state is constant
+    req = AppRequirements(alpha=0.93, delta=5e-3)
+    plan = Plan(network, prof, req)
+    plan.solve()
+    v0 = plan._quant_version
+    relaxes0 = plan.stats.dp_relaxes
+    rng = np.random.default_rng(5)
+    for _ in range(10):
+        plan.update_uplink(float(0.65 + rng.normal(0, 0.01)) * 1e9)
+        _assert_cold_equal(plan)
+    assert plan._quant_version == v0, "h6 quant state moved unexpectedly"
+    assert plan.stats.dp_relaxes == relaxes0, "DP re-relaxed without need"
+    assert plan.stats.dp_cache_hits >= 10
+
+
+# ---------------------------------------------------------------------------
+# batched population paths
+# ---------------------------------------------------------------------------
+
+def test_update_uplinks_equals_per_plan_updates(network):
+    plans_a = [Plan(network, paper_profile(a), PAPER_MULTIAPP_REQS[a])
+               for a in APPS]
+    plans_b = [Plan(network, paper_profile(a), PAPER_MULTIAPP_REQS[a])
+               for a in APPS]
+    rng = np.random.default_rng(9)
+    for t in range(6):
+        qs = rng.uniform(0.3, 1.0, len(APPS)) * 1e9
+        changed = update_uplinks(plans_a, qs)
+        for p, q in zip(plans_b, qs):
+            p.update_uplink(q)
+        for pa, pb, ch in zip(plans_a, plans_b, changed):
+            np.testing.assert_array_equal(pa._steep, pb._steep)
+            np.testing.assert_array_equal(pa._idx, pb._idx)
+            np.testing.assert_array_equal(pa._init_depth, pb._init_depth)
+            np.testing.assert_array_equal(pa._grid, pb._grid)
+            np.testing.assert_array_equal(pa.network.bandwidth,
+                                          pb.network.bandwidth)
+            assert (pa._quant_version > 0) == (pb._quant_version > 0) \
+                or pa._quant_version == pb._quant_version
+
+
+def test_solve_plans_equals_solve_fin(network):
+    plans = [Plan(network, paper_profile(a), PAPER_MULTIAPP_REQS[a])
+             for a in APPS for _ in range(3)]
+    rng = np.random.default_rng(4)
+    update_uplinks(plans, rng.uniform(0.3, 1.0, len(plans)) * 1e9)
+    sols = solve_plans(plans)
+    for p, s in zip(plans, sols):
+        assert _same(s, solve_fin(p.network, p.profile, p.req))
+        assert p.solution is s
+
+
+def test_solve_plans_mixed_params_and_masks(network):
+    """Different gammas/quantizers in one call group correctly, masked
+    plans ride along."""
+    prof = paper_profile("h1")
+    req = PAPER_MULTIAPP_REQS["h1"]
+    plans = [Plan(network, prof, req, gamma=10),
+             Plan(network, prof, req, gamma=25),
+             Plan(network, prof, req, quantize="ceil"),
+             Plan(network, prof, req)]
+    plans[3].update_uplink(0.3e9)
+    plans[3].mask_node(4)
+    sols = solve_plans(plans)
+    for p, s in zip(plans[:3], sols[:3]):
+        assert _same(s, solve_fin(p.network, p.profile, p.req,
+                                  gamma=p.gamma, quantize=p.quantize))
+    assert sols[3].found
+    assert 4 not in sols[3].config.placement
+
+
+# ---------------------------------------------------------------------------
+# non-warm backends route through the same cached tensors
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["dense", "python"])
+def test_plan_backend_equivalence(network, backend):
+    prof = paper_profile("h2")
+    req = PAPER_MULTIAPP_REQS["h2"]
+    plan = Plan(network, prof, req, backend=backend)
+    rng = np.random.default_rng(1)
+    for t in range(4):
+        plan.update_uplink(float(rng.uniform(0.3, 1.0)) * 1e9)
+        cold = solve_fin(plan.network, prof, req, backend=backend)
+        assert _same(plan.solve(), cold), t
+
+
+def test_plan_kbest_mode(network):
+    prof = paper_profile("h2")
+    req = AppRequirements(alpha=0.80, delta=4e-3)
+    plan = Plan(network, prof, req, gamma=3, n_best=4)
+    plan.update_uplink(0.5e9)
+    cold = solve_fin(plan.network, prof, req, gamma=3, n_best=4)
+    assert _same(plan.solve(), cold)
+
+
+# ---------------------------------------------------------------------------
+# randomized sweep (hypothesis when available, seeded loop otherwise)
+# ---------------------------------------------------------------------------
+
+def _random_delta_run(seed: int, quantize: str, gamma: int) -> None:
+    rng = np.random.default_rng(seed)
+    n_blocks = int(rng.integers(2, 6))
+    prof = synthetic_profile(n_blocks, min(n_blocks, int(rng.integers(1, 4))),
+                             seed=seed)
+    nw = paper_scenario(n_extra_edge=int(rng.integers(0, 3)))
+    alpha = float(rng.uniform(0.0, max(e.accuracy for e in prof.exits)))
+    req = AppRequirements(alpha=alpha, delta=float(rng.uniform(1e-3, 20e-3)))
+    plan = Plan(nw, prof, req, gamma=gamma, quantize=quantize)
+    for t in range(6):
+        r = rng.random()
+        if r < 0.6:
+            plan.update_uplink(float(rng.uniform(0.1, 1.2)) * 1e9)
+        elif r < 0.8:
+            plan.update_slice(float(rng.uniform(0.3, 1.0)))
+        else:
+            n = int(rng.integers(1, nw.n_nodes))
+            if plan.masked_nodes:
+                plan.unmask_node(plan.masked_nodes[0])
+            else:
+                plan.mask_node(n)
+        if not plan.masked_nodes:
+            cold = solve_fin(plan.network, prof, req, gamma=gamma,
+                             quantize=quantize)
+            assert _same(plan.solve(), cold), (seed, t)
+
+
+@pytest.mark.parametrize("quantize", ["floor", "ceil", "round"])
+@pytest.mark.parametrize("gamma", [3, 10, 25])
+def test_random_delta_sequences_bitexact(quantize, gamma):
+    for seed in range(4):
+        _random_delta_run(1000 * gamma + seed, quantize, gamma)
+
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    @given(seed=st.integers(0, 10_000),
+           quantize=st.sampled_from(["floor", "ceil", "round"]),
+           gamma=st.sampled_from([3, 10, 25]))
+    @settings(max_examples=20, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    def test_property_plan_deltas_bitexact(seed, quantize, gamma):
+        """Property form of the delta-sequence invariant (AC: property-
+        tested across uplink/failure/slice deltas and quantizers)."""
+        _random_delta_run(seed, quantize, gamma)
+except ImportError:          # pragma: no cover - hypothesis optional
+    pass
+
+
+# ---------------------------------------------------------------------------
+# migration accounting
+# ---------------------------------------------------------------------------
+
+def test_migration_delta():
+    prof = paper_profile("h2")
+    from repro.core import Config
+    a = Config(placement=[0, 0, 1, 1, 2], final_exit=2)
+    b = Config(placement=[0, 1, 1, 1, 2], final_exit=2)
+    moved, bits = migration_delta(prof, a, b)
+    assert moved == 1 and bits == prof.cut_bits[1]
+    assert migration_delta(prof, a, a) == (0, 0.0)
+    assert migration_delta(prof, None, b) == (0, 0.0)
+    # exit change: blocks present in only one config count as moved
+    c = Config(placement=[0], final_exit=0)
+    moved, _ = migration_delta(prof, a, c)
+    assert moved == 4

@@ -13,6 +13,7 @@ from repro.core.bellman_ford import (batched_banded_relax_min,
                                      batched_layered_relax_min,
                                      bellman_ford_np, layered_relax,
                                      minplus_vecmat_np)
+from repro.core.tolerances import RELAX_RTOL_F32
 
 SETTINGS = settings(max_examples=25, deadline=None,
                     suppress_health_check=[HealthCheck.too_slow])
@@ -128,7 +129,7 @@ def test_layered_relax_backends_agree(seed, S, L):
     d_jnp = layered_relax(init, Ws, backend="jnp")
     mask = np.isfinite(d_np)
     assert (np.isfinite(d_jnp) == mask).all()
-    np.testing.assert_allclose(d_np[mask], d_jnp[mask], rtol=1e-6)
+    np.testing.assert_allclose(d_np[mask], d_jnp[mask], rtol=RELAX_RTOL_F32)
 
 
 @given(seed=st.integers(0, 10_000), n_blocks=st.integers(2, 6),

@@ -93,6 +93,60 @@ def test_failure_triggers_replacement(setup):
     assert stats.tokens_out == 2
 
 
+def test_fail_node_avoids_dead_node_and_matches_cold_solve(setup):
+    """Post-failure placement avoids the dead node, stats keep
+    accumulating across the failure, and the warm re-solve equals a cold
+    solve on the reduced network (energies bit-equal, placements equal
+    modulo the index remap)."""
+    import numpy as np
+
+    from repro.core import Network, solve_fin
+
+    cfg, params = setup
+    nw = paper_scenario(n_extra_edge=1)
+    prof = paper_profile("h2")
+    req = AppRequirements(alpha=0.5, delta=8e-3)
+    eng = SplitServeEngine(cfg, params, batch_size=2, cache_len=64,
+                           thresholds=[0.0], network=nw, profile=prof,
+                           req=req)
+    eng.submit([1, 2], max_new_tokens=3)
+    pre = eng.run(max_steps=40)
+    tokens_before, energy_before = pre.tokens_out, pre.energy_j
+    assert tokens_before > 0 and energy_before > 0
+
+    victim = 1 if 1 != eng.plan.network.source_node else 2
+    eng.fail_node(victim)
+    # placement avoids the dead node; node indexing is unchanged
+    assert victim not in eng.placement.placement
+    assert eng.network.n_nodes == nw.n_nodes
+
+    # warm == cold on the reduced network
+    keep = [i for i in range(nw.n_nodes) if i != victim]
+    remap = {new: old for new, old in enumerate(keep)}
+    full = eng.plan.network
+    red = Network(nodes=[full.nodes[i] for i in keep],
+                  bandwidth=full.bandwidth[np.ix_(keep, keep)].copy(),
+                  compute=full.compute[keep].copy(), source_node=0)
+    cold = solve_fin(red, prof, req)
+    assert cold.feasible
+    warm = eng.plan.solution
+    assert warm.energy == cold.energy
+    assert warm.config.placement == [remap[p] for p in cold.config.placement]
+
+    # serving continues and stats accumulate past the failure
+    eng.submit([1, 2], max_new_tokens=3)
+    post = eng.run(max_steps=40)
+    assert post.tokens_out > tokens_before
+    assert post.energy_j > energy_before
+    assert post.replacements == 1
+
+    # recovery re-solves again (back to the full network's optimum)
+    eng.recover_node(victim)
+    assert post.replacements == 2
+    ref = solve_fin(full, prof, req)
+    assert eng.plan.solution.energy == ref.energy
+
+
 def test_measured_phi_feeds_placement(setup):
     """measured_phi from the gates is a valid phi vector for core.DNNProfile."""
     cfg, params = setup
