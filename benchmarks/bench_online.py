@@ -30,9 +30,10 @@ from typing import Iterable, List
 
 import numpy as np
 
-from repro.core import (AppRequirements, ChurnOrchestrator, Network, Plan,
-                        churn_trace, paper_profile, population_plans,
-                        solve_fin, solve_plans, update_uplinks)
+from repro.core import (AppRequirements, ChurnEvent, ChurnOrchestrator,
+                        Network, Plan, churn_trace, paper_profile,
+                        population_cohorts, population_plans, solve_fin,
+                        solve_plans, update_uplinks)
 from repro.core.multiapp import PAPER_MULTIAPP_REQS
 from repro.core.scenarios import paper_scenario
 
@@ -173,11 +174,175 @@ def _e2e_row(*, users_per_app: int, ticks: int) -> Row:
                   failed=int(stats.total("n_failed"))))
 
 
+def _ar1_draws(users: int, ticks: int, *, seed: int = 5,
+               q_mean: float = 0.65, sigma: float = 0.05) -> List[np.ndarray]:
+    rng = np.random.default_rng(seed)
+    q = np.full(users, q_mean)
+    out = []
+    for _ in range(ticks):
+        q = np.clip(q_mean + 0.95 * (q - q_mean)
+                    + rng.normal(0, sigma, users), 0.3, 1.0)
+        out.append(q.copy())
+    return out
+
+
+def _assert_pop_matches_plans(ob, plans, ctx="") -> None:
+    """Per-user incumbent equality: population arrays vs plan Solutions."""
+    for u, p in enumerate(plans):
+        pop = ob.pops[ob._pop_of[u]]
+        loc = ob._local_of[u]
+        found_a = p.solution is not None and p.solution.feasible
+        assert found_a == bool(pop.inc_found[loc]), (ctx, u)
+        if found_a:
+            nb = len(p.solution.config.placement)
+            assert list(pop._inc_place[loc][:nb]) \
+                == p.solution.config.placement, (ctx, u)
+            assert pop._inc_exit[loc] == p.solution.config.final_exit
+            assert pop._inc_energy[loc] == p.solution.energy
+
+
+def _pop_e2e_row(*, users: int, ticks: int, assert_speedup: bool) -> Row:
+    """Population SoA engine vs the PR-3 per-plan path on the SAME AR(1)
+    channel scenario with hysteresis: identical per-user channel draws
+    drive both orchestrators; every tick's decisions (resolve/held/failed,
+    migrations, total energy) and every final incumbent are asserted
+    bit-exact, and the headline is user-ticks/s population vs per-plan.
+    """
+    draws = _ar1_draws(users, ticks)
+    events = [[ChurnEvent("uplink", u, float(q[u])) for u in range(users)]
+              for q in draws]
+
+    plans = population_plans(users, n_extra_edge=2)
+    oa = ChurnOrchestrator(plans, hysteresis=0.05)
+    t0 = time.perf_counter()
+    ra = [oa.step(evs) for evs in events]
+    dt_plan = time.perf_counter() - t0
+
+    pops = population_cohorts(users, n_extra_edge=2)
+    ob = ChurnOrchestrator(population=pops, hysteresis=0.05)
+    t0 = time.perf_counter()
+    rb = [ob.step_arrays(quality=q) for q in draws]
+    dt_pop = time.perf_counter() - t0
+
+    for t, (x, y) in enumerate(zip(ra, rb)):
+        assert (x.n_dirty == y.n_dirty and x.n_resolved == y.n_resolved
+                and x.n_held == y.n_held and x.n_failed == y.n_failed
+                and x.n_migrations == y.n_migrations
+                and x.blocks_moved == y.blocks_moved
+                and x.energy == y.energy), (t, x, y)
+    _assert_pop_matches_plans(ob, plans, "pop_e2e")
+    speedup = dt_plan / dt_pop
+    if assert_speedup:
+        assert speedup >= 20.0, \
+            f"population path only {speedup:.1f}x over per-plan (need 20x)"
+    user_ticks = users * ticks
+    return Row("pop_churn_ar1_e2e", dt_pop / user_ticks * 1e6,
+               kv(users=users, ticks=ticks,
+                  user_ticks_per_s=user_ticks / dt_pop,
+                  perplan_user_ticks_per_s=user_ticks / dt_plan,
+                  speedup_vs_perplan=speedup,
+                  resolves=sum(r.n_resolved for r in rb),
+                  held=sum(r.n_held for r in rb),
+                  states=sum(p.n_states for p in ob.pops),
+                  agree=users))
+
+
+def _pop_always_resolve_row(*, users: int, ticks: int) -> Row:
+    """Population vs per-plan with hysteresis off: EVERY user re-solves
+    every tick, so this measures the state-deduped relax + shared-candidate
+    exact post-pass against the per-plan warm path, bit-exact per tick."""
+    draws = _ar1_draws(users, ticks)
+    events = [[ChurnEvent("uplink", u, float(q[u])) for u in range(users)]
+              for q in draws]
+    plans = population_plans(users, n_extra_edge=2)
+    oa = ChurnOrchestrator(plans, always_resolve=True)
+    t0 = time.perf_counter()
+    ra = [oa.step(evs) for evs in events]
+    dt_plan = time.perf_counter() - t0
+    ob = ChurnOrchestrator(population=population_cohorts(users,
+                                                         n_extra_edge=2),
+                           always_resolve=True)
+    t0 = time.perf_counter()
+    rb = [ob.step_arrays(quality=q) for q in draws]
+    dt_pop = time.perf_counter() - t0
+    for t, (x, y) in enumerate(zip(ra, rb)):
+        assert x.n_resolved == y.n_resolved and x.energy == y.energy, (t,)
+    _assert_pop_matches_plans(ob, plans, "pop_always")
+    user_ticks = users * ticks
+    return Row("pop_ar1_always_resolve", dt_pop / user_ticks * 1e6,
+               kv(users=users, ticks=ticks,
+                  user_ticks_per_s=user_ticks / dt_pop,
+                  perplan_user_ticks_per_s=user_ticks / dt_plan,
+                  speedup_vs_perplan=dt_plan / dt_pop, agree=users))
+
+
+def _pop_scale_row(name: str, *, users: int, ticks: int) -> Row:
+    """Population-only scale row: AR(1) churn ticks via the array path."""
+    t0 = time.perf_counter()
+    pops = population_cohorts(users, n_extra_edge=2)
+    ob = ChurnOrchestrator(population=pops, hysteresis=0.05)
+    dt_init = time.perf_counter() - t0
+    draws = _ar1_draws(users, ticks)
+    t0 = time.perf_counter()
+    reps = [ob.step_arrays(quality=q) for q in draws]
+    dt = time.perf_counter() - t0
+    user_ticks = users * ticks
+    return Row(name, dt / user_ticks * 1e6,
+               kv(users=users, ticks=ticks,
+                  user_ticks_per_s=user_ticks / dt,
+                  init_s=dt_init,
+                  resolves=sum(r.n_resolved for r in reps),
+                  states=sum(p.n_states for p in ob.pops)))
+
+
+def _pop_mesh_row(*, users: int, ticks: int) -> Row:
+    """Device-mesh backend: chained relaxations sharded over the user axis
+    of the host-device mesh (XLA_FLAGS=--xla_force_host_platform_device_
+    count=K exposes K devices on CPU); config agreement vs the float64
+    numpy engine is recorded per user-tick."""
+    import jax
+
+    draws = _ar1_draws(users, ticks, sigma=0.15, q_mean=0.5)
+    ref = ChurnOrchestrator(
+        population=population_cohorts(users, n_extra_edge=2),
+        hysteresis=0.05)
+    mesh = ChurnOrchestrator(
+        population=population_cohorts(users, n_extra_edge=2,
+                                      backend="mesh"),
+        hysteresis=0.05)
+    agree = total = 0
+    t0 = time.perf_counter()
+    for q in draws:
+        mesh.step_arrays(quality=q)
+    dt = time.perf_counter() - t0
+    for q in draws:
+        ref.step_arrays(quality=q)
+    for pa, pb in zip(ref.pops, mesh.pops):
+        total += pa.U
+        agree += int(np.count_nonzero(
+            (pa.inc_found == pb.inc_found)
+            & ((~pa.inc_found) | (np.all(pa._inc_place == pb._inc_place,
+                                         axis=1)
+                                  & (pa._inc_exit == pb._inc_exit)))))
+    user_ticks = users * ticks
+    return Row("pop_mesh", dt / user_ticks * 1e6,
+               kv(users=users, ticks=ticks,
+                  n_devices=len(jax.devices()),
+                  user_ticks_per_s=user_ticks / dt,
+                  agree=agree, total=total))
+
+
 def run() -> Iterable[Row]:
     if smoke():
         users, ticks, trials = 4, 3, 2
+        pop_users, pop_ticks = 240, 3
+        scales = [("pop_scale_2e3", 2_000, 3)]
     else:
         users, ticks, trials = 16, 6, 4
+        pop_users, pop_ticks = 2400, 6
+        scales = [("pop_scale_1e4", 10_000, 4),
+                  ("pop_scale_1e5", 100_000, 4),
+                  ("pop_scale_1e6", 1_000_000, 3)]
     yield _channel_row("channel_ar1_fading", users_per_app=users,
                        ticks=ticks, trials=trials, sigma=0.05)
     yield _channel_row("channel_uniform_redraw", users_per_app=users,
@@ -187,3 +352,10 @@ def run() -> Iterable[Row]:
                        n_extra_edge=0)
     yield _failure_row(trials=trials)
     yield _e2e_row(users_per_app=users, ticks=max(4, ticks))
+    yield _pop_e2e_row(users=pop_users, ticks=pop_ticks,
+                       assert_speedup=not smoke())
+    yield _pop_always_resolve_row(users=pop_users // 5,
+                                  ticks=pop_ticks)
+    for name, u, t in scales:
+        yield _pop_scale_row(name, users=u, ticks=t)
+    yield _pop_mesh_row(users=48 if smoke() else 96, ticks=pop_ticks)

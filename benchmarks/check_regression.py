@@ -1,0 +1,93 @@
+"""Perf-regression gate: compare fresh bench JSON against a committed
+baseline and fail when a tracked ratio metric regresses too far.
+
+Usage:
+
+    python -m benchmarks.check_regression fresh.json \
+        --baseline BENCH_PR3.json --key speedup --min-ratio 0.8
+
+Rows are matched by ``name`` across every bench section of both documents
+(the ``{"benches": {...}}`` format of ``benchmarks.run --json``); only rows
+present in BOTH and carrying ``--key`` are compared.  A fresh value below
+``min_ratio * baseline`` fails the gate with a per-row report — the CI
+smoke job uses it to catch warm-vs-cold speedup regressions of the plan-IR
+/ population churn path before they land.
+
+Ratio metrics (speedups) are compared rather than absolute wall-clock so
+the gate is robust to machine-speed differences between the baseline host
+and the CI runner; ``--min-ratio 0.8`` == "fail on >20% regression".
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict
+
+
+def _rows(doc: dict) -> Dict[str, dict]:
+    out: Dict[str, dict] = {}
+    for rows in doc.get("benches", {}).values():
+        for row in rows:
+            out[row["name"]] = row
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh", help="fresh benchmarks.run --json output")
+    ap.add_argument("--baseline", required=True,
+                    help="committed baseline JSON (e.g. BENCH_PR3.json)")
+    ap.add_argument("--key", default="speedup",
+                    help="ratio metric to gate on (default: speedup)")
+    ap.add_argument("--min-ratio", type=float, default=0.8,
+                    help="fail when fresh < min_ratio * baseline "
+                         "(default 0.8 == >20%% regression)")
+    ap.add_argument("--rows", default=None,
+                    help="only gate rows whose name contains this "
+                         "substring (e.g. channel_ for the stable "
+                         "warm-vs-cold rows; microbench rows are noisier)")
+    args = ap.parse_args()
+
+    with open(args.fresh) as f:
+        fresh = _rows(json.load(f))
+    with open(args.baseline) as f:
+        base = _rows(json.load(f))
+
+    compared = 0
+    failures = []
+    for name, brow in sorted(base.items()):
+        if args.rows is not None and args.rows not in name:
+            continue
+        if args.key not in brow or name not in fresh:
+            continue
+        frow = fresh[name]
+        if args.key not in frow:
+            failures.append(f"{name}: baseline has {args.key}="
+                            f"{brow[args.key]:.3g} but the fresh run "
+                            f"dropped the metric")
+            continue
+        compared += 1
+        b, f_ = float(brow[args.key]), float(frow[args.key])
+        ratio = f_ / b if b else float("inf")
+        status = "OK " if ratio >= args.min_ratio else "FAIL"
+        print(f"{status} {name}: {args.key} {f_:.3f} vs baseline {b:.3f} "
+              f"(ratio {ratio:.2f}, floor {args.min_ratio:.2f})")
+        if ratio < args.min_ratio:
+            failures.append(f"{name}: {args.key} regressed to {f_:.3f} "
+                            f"from {b:.3f} ({(1 - ratio) * 100:.0f}%)")
+    if not compared:
+        print(f"error: no rows with key {args.key!r} shared between "
+              f"{args.fresh} and {args.baseline}", file=sys.stderr)
+        return 2
+    if failures:
+        print(f"\n{len(failures)} regression(s):", file=sys.stderr)
+        for msg in failures:
+            print(f"  {msg}", file=sys.stderr)
+        return 1
+    print(f"\n{compared} row(s) within budget")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

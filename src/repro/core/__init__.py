@@ -28,8 +28,9 @@ from .multiapp import (run_multiapp, MultiAppResult, AppStats, PlanCache,
                        PAPER_MULTIAPP_REQS, default_solvers, user_network,
                        user_networks)
 from .scenarios import ChurnEvent, churn_trace
+from .population import Population, PopulationStats
 from .online import (ChurnOrchestrator, ChurnStats, TickReport,
-                     population_plans)
+                     population_cohorts, population_plans)
 
 __all__ = [
     "NodeSpec", "Network", "make_node", "make_network", "PAPER_TIERS",
@@ -45,5 +46,6 @@ __all__ = [
     "PAPER_MULTIAPP_REQS", "default_solvers", "user_network",
     "user_networks", "PlanCache",
     "ChurnEvent", "churn_trace", "ChurnOrchestrator", "ChurnStats",
-    "TickReport", "population_plans",
+    "TickReport", "population_plans", "population_cohorts",
+    "Population", "PopulationStats",
 ]

@@ -21,12 +21,67 @@ paper measures; on TPU the relaxation maps naturally onto the VPU with
 from __future__ import annotations
 
 import functools
+import os
 from typing import Optional, Tuple
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# cache-residency chunking (shared by every batched relaxation call site)
+# ---------------------------------------------------------------------------
+
+#: default per-chunk budget for a batched relaxation's candidate tensor
+#: ((D, N, N, G+1) banded / (D, S, S) dense); override with the
+#: REPRO_RELAX_CHUNK_BYTES environment variable (see docs/ARCHITECTURE.md).
+_RELAX_CHUNK_BYTES_DEFAULT = 4 << 20
+
+
+def relax_chunk_bytes() -> int:
+    """Cache-residency budget (bytes) for one relaxation chunk's candidate
+    tensor.  Beyond ~L2/L3 size the broadcast turns memory-bound and batched
+    throughput collapses; the chunk count is derived from this budget and
+    the per-scenario candidate size (compact banded or dense).
+
+    A set-but-invalid REPRO_RELAX_CHUNK_BYTES raises immediately (an unset
+    or empty variable means the default): a typo'd budget silently falling
+    back would only surface as an inexplicable perf cliff deep inside the
+    chunked relaxation.
+    """
+    raw = os.environ.get("REPRO_RELAX_CHUNK_BYTES", "")
+    if not raw:
+        return _RELAX_CHUNK_BYTES_DEFAULT
+    try:
+        val = int(raw)
+    except ValueError:
+        raise ValueError(
+            f"REPRO_RELAX_CHUNK_BYTES must be a positive integer (bytes), "
+            f"got {raw!r}") from None
+    if val <= 0:
+        raise ValueError(
+            f"REPRO_RELAX_CHUNK_BYTES must be a positive integer (bytes), "
+            f"got {raw!r}")
+    return val
+
+
+def relax_chunk_rows(bytes_per_row: int) -> int:
+    """Scenario rows per cache-resident relaxation chunk.
+
+    ``bytes_per_row`` is the size of ONE scenario's live working set inside
+    the batched relaxation (candidate tensor plus whatever per-scenario
+    index/argmin payload rides along).  Always at least 1, so callers never
+    have to special-case a single over-budget scenario.  This is the one
+    home of the ``max(1, budget // row_bytes)`` arithmetic that the solver
+    (``fin._run_dp_batch``), the plan IR (``plan._warm_round0``) and the
+    population engine all share.
+    """
+    if bytes_per_row <= 0:
+        raise ValueError(f"bytes_per_row must be positive, got "
+                         f"{bytes_per_row!r}")
+    return max(1, relax_chunk_bytes() // bytes_per_row)
 
 
 # ---------------------------------------------------------------------------
@@ -476,19 +531,13 @@ def batched_banded_relax_argmin(init: np.ndarray, E: np.ndarray,
         return (np.asarray(hist, np.float64),
                 np.asarray(par).astype(np.int64))
     if backend == "pallas":
-        from repro.kernels.minplus.ops import banded_minplus_argmin
-        hists, pars = [], []
-        for b in range(B):
-            d = jnp.asarray(initf[b])
-            hist = [np.asarray(init[b], np.float64)]
-            par = []
-            for l in range(L):
-                out, arg = banded_minplus_argmin(
-                    d, jnp.asarray(Ef[b, l]), jnp.asarray(sti[b, l]), lo=lo)
-                d = out
-                hist.append(np.asarray(d, np.float64))
-                par.append(np.asarray(arg, np.int64))
-            hists.append(np.stack(hist))
-            pars.append(np.stack(par))
-        return np.stack(hists), np.stack(pars)
+        from repro.kernels.minplus.ops import banded_minplus_chain
+        # one chained launch relaxes the whole (B, L) batch — the distance
+        # grid is carried in VMEM across layers instead of round-tripping
+        # through HBM between per-layer kernel calls
+        h, p = banded_minplus_chain(jnp.asarray(initf), jnp.asarray(Ef),
+                                    jnp.asarray(sti), lo=lo)
+        hist = np.concatenate([np.asarray(init, np.float64)[:, None],
+                               np.asarray(h, np.float64)], axis=1)
+        return hist, np.asarray(p).astype(np.int64)
     raise ValueError(f"unknown banded backend {backend!r}")

@@ -34,18 +34,18 @@ at most ``max_tighten`` rounds.
 """
 from __future__ import annotations
 
-import os
 import time
 from dataclasses import dataclass
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from .bellman_ford import (batched_banded_relax_argmin,
+from .bellman_ford import (_RELAX_CHUNK_BYTES_DEFAULT,
+                           batched_banded_relax_argmin,
                            batched_banded_relax_min,
                            batched_layered_relax_kbest,
                            batched_layered_relax_min, banded_parent_np,
-                           layered_relax)
+                           layered_relax, relax_chunk_bytes, relax_chunk_rows)
 from .dnn_profile import DNNProfile
 from .extended_graph import (ExtendedGraph, build_extended_graph,
                              build_extended_graphs)
@@ -68,37 +68,10 @@ DP_BACKENDS: Dict[str, str] = {
     "pallas": "pallas",
 }
 
-#: default per-chunk budget for the batched relaxation's candidate tensor
-#: ((D, N, N, G+1) banded / (D, S, S) dense); override with the
-#: REPRO_RELAX_CHUNK_BYTES environment variable (see docs/ARCHITECTURE.md).
-_RELAX_CHUNK_BYTES_DEFAULT = 4 << 20
-
-
-def _relax_chunk_bytes() -> int:
-    """Cache-residency budget (bytes) for one relaxation chunk's candidate
-    tensor.  Beyond ~L2/L3 size the broadcast turns memory-bound and batched
-    throughput collapses; the chunk count is derived from this budget and
-    the per-scenario candidate size (compact banded or dense).
-
-    A set-but-invalid REPRO_RELAX_CHUNK_BYTES raises immediately (an unset
-    or empty variable means the default): a typo'd budget silently falling
-    back would only surface as an inexplicable perf cliff deep inside the
-    chunked relaxation.
-    """
-    raw = os.environ.get("REPRO_RELAX_CHUNK_BYTES", "")
-    if not raw:
-        return _RELAX_CHUNK_BYTES_DEFAULT
-    try:
-        val = int(raw)
-    except ValueError:
-        raise ValueError(
-            f"REPRO_RELAX_CHUNK_BYTES must be a positive integer (bytes), "
-            f"got {raw!r}") from None
-    if val <= 0:
-        raise ValueError(
-            f"REPRO_RELAX_CHUNK_BYTES must be a positive integer (bytes), "
-            f"got {raw!r}")
-    return val
+#: chunking budget now lives in ``bellman_ford`` (shared with the plan IR
+#: and the population engine); these aliases keep the historical import
+#: paths (``fin._relax_chunk_bytes``) working.
+_relax_chunk_bytes = relax_chunk_bytes
 
 
 def _dist_tol(backend: str) -> float:
@@ -331,7 +304,7 @@ def _run_dp_batch(fgs: Sequence[FeasibleGraph], n_best: int = 1,
         # (gamma+1)x smaller than the dense (S, S) candidate per layer.
         cand_bytes = (N * N * (G + 1) * (8 + max(L - 1, 1) * 4) if banded
                       else S * S * 8)
-        chunk = max(1, _relax_chunk_bytes() // cand_bytes)
+        chunk = relax_chunk_rows(cand_bytes)
         for start in range(0, len(idxs), chunk):
             part = idxs[start:start + chunk]
             if banded:
@@ -474,7 +447,8 @@ def _best_feasible(network: Network, profile: DNNProfile,
                    oracle: bool = False,
                    bound_energy: Optional[float] = None,
                    bound: Optional[Tuple[Config, ConfigEval]] = None,
-                   dist_tol: float = 1e-9
+                   dist_tol: float = 1e-9,
+                   candidates=None
                    ) -> Optional[Tuple[Config, ConfigEval]]:
     """Exact (3a)-(3e) post-pass: cheapest feasible config over all exits.
 
@@ -494,6 +468,13 @@ def _best_feasible(network: Network, profile: DNNProfile,
     when a scanned candidate IS that configuration, its (deterministic)
     evaluation is reused instead of recomputed: the ceil rescue pass
     usually lands on exactly the main pass's selection.
+
+    ``candidates`` optionally replaces the lazy per-exit candidate
+    iteration: a callable ``k -> iterator of (Config, graph_energy)`` that
+    MUST yield exactly the sequence ``_iter_configs_at_exit(dp, profile,
+    k)`` would.  The population engine passes a per-state cached factory so
+    users sharing a quantized DP state share one backtrack instead of
+    re-deriving identical configurations per user.
     """
     if bound is not None and bound_energy is None:
         bound_energy = bound[1].energy
@@ -505,8 +486,12 @@ def _best_feasible(network: Network, profile: DNNProfile,
                 if _exit_dmin(dp, profile.exits[k].block) \
                         > best_e * (1 + dist_tol):
                     continue
-        configs = (_configs_at_exit(dp, profile, k) if oracle
-                   else _iter_configs_at_exit(dp, profile, k))
+        if oracle:
+            configs = _configs_at_exit(dp, profile, k)
+        elif candidates is not None:
+            configs = candidates(k)
+        else:
+            configs = _iter_configs_at_exit(dp, profile, k)
         for cfg, _graph_e in configs:
             if (bound is not None and cfg.final_exit == bound[0].final_exit
                     and cfg.placement == bound[0].placement):

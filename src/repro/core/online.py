@@ -30,19 +30,20 @@ benchmark drive.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Sequence
+from typing import Dict, Iterable, List, Optional, Sequence, Union
 
 import numpy as np
 
 from .dnn_profile import DNNProfile
 from .plan import Plan, migration_delta, solve_plans, update_uplinks
+from .population import Population
 from .problem import AppRequirements
 from .scenarios import (MOBILE_UPLINK_BPS, ChurnEvent, churn_trace,
                         paper_scenario)
 from .system_model import Network
 
 __all__ = ["ChurnEvent", "churn_trace", "TickReport", "ChurnStats",
-           "ChurnOrchestrator", "population_plans"]
+           "ChurnOrchestrator", "population_plans", "population_cohorts"]
 
 
 @dataclass
@@ -84,25 +85,45 @@ class ChurnStats:
 
 
 class ChurnOrchestrator:
-    """Steps a user population's plans through churn events.
+    """Steps a user population through churn events.
 
-    ``plans`` is one plan per user (see :func:`population_plans`).  All
-    plans must share a network shape; the uplink model scales each user's
-    source-node links by the drawn quality — the attached edge helper gets
-    the full channel, detached helpers ``detach_frac`` of it (mobility),
-    the cloud path the full channel (it rides the attached helper's
-    backhaul in the paper topology).
+    Two population representations:
+
+    ``plans``        one :class:`Plan` per user (see
+                     :func:`population_plans`) — the PR-3 per-plan path;
+    ``population=``  one or more struct-of-arrays :class:`Population`
+                     cohorts (see :func:`population_cohorts`) — whole
+                     ticks run as vectorized array programs with no
+                     per-user Python on the hot path, bit-exact vs the
+                     per-plan path on the float64 backends.
+
+    All users must share a network topology; the uplink model scales each
+    user's source-node links by the drawn quality — the attached edge
+    helper gets the full channel, detached helpers ``detach_frac`` of it
+    (mobility), the cloud path the full channel (it rides the attached
+    helper's backhaul in the paper topology).
     """
 
-    def __init__(self, plans: Sequence[Plan], *, hysteresis: float = 0.05,
+    def __init__(self, plans: Optional[Sequence[Plan]] = None, *,
+                 population: Union[Population, Sequence[Population],
+                                   None] = None,
+                 hysteresis: float = 0.05,
                  uplink_bps: float = MOBILE_UPLINK_BPS,
                  detach_frac: float = 0.25,
                  always_resolve: bool = False):
-        self.plans = list(plans)
+        if (plans is None) == (population is None):
+            raise ValueError("pass exactly one of plans= or population=")
         self.hysteresis = hysteresis
         self.uplink_bps = uplink_bps
         self.detach_frac = detach_frac
         self.always_resolve = always_resolve
+        self._tick = 0
+        self.plans: Optional[List[Plan]] = None
+        self.pops: Optional[List[Population]] = None
+        if population is not None:
+            self._init_population(population)
+            return
+        self.plans = list(plans)
         U = len(self.plans)
         self.quality = np.ones(U)
         nw = self.plans[0].network
@@ -112,7 +133,6 @@ class ChurnOrchestrator:
         self.attached = np.zeros(U, dtype=np.int64)   # edge-slot per user
         self._ref_energy = np.full(U, np.inf)          # energy at last solve
         self._cur_energy = np.full(U, np.inf)
-        self._tick = 0
         # cold-start placement for plans that were not solved yet
         fresh = [p for p in self.plans if p.solution is None]
         if fresh:
@@ -122,6 +142,49 @@ class ChurnOrchestrator:
                 self._ref_energy[u] = p.solution.energy
                 self._cur_energy[u] = p.solution.energy
 
+    def _init_population(self, population) -> None:
+        pops = ([population] if isinstance(population, Population)
+                else list(population))
+        if not pops:
+            raise ValueError("population= needs at least one cohort")
+        self.pops = pops
+        U = sum(p.U for p in pops)
+        self.n_users = U
+        nw = pops[0].network0
+        for p in pops:
+            if p.network0.n_nodes != nw.n_nodes \
+                    or p.network0.source_node != nw.source_node:
+                raise ValueError("population cohorts must share a network "
+                                 "topology")
+        # cohort user ids must partition 0..U-1 (round-robin interleave
+        # from population_cohorts, or any caller-chosen split)
+        self._pop_of = np.full(U, -1, dtype=np.int64)
+        self._local_of = np.full(U, -1, dtype=np.int64)
+        for pi, p in enumerate(pops):
+            gids = p.user_ids
+            if (gids < 0).any() or (gids >= U).any() \
+                    or (self._pop_of[gids] >= 0).any():
+                raise ValueError("cohort user_ids must partition the "
+                                 "global user index range without overlap")
+            self._pop_of[gids] = pi
+            self._local_of[gids] = np.arange(p.U)
+        assert (self._pop_of >= 0).all()
+        self._edge_nodes = [n for n, spec in enumerate(nw.nodes)
+                            if spec.tier == "edge"
+                            and n != nw.source_node]
+        self.quality = np.ones(U)
+        self.attached = np.zeros(U, dtype=np.int64)
+        self._ref_energy = np.full(U, np.inf)
+        self._cur_energy = np.full(U, np.inf)
+        for p in pops:
+            fresh = np.nonzero(~p._solved)[0]
+            if len(fresh):
+                p.solve(fresh, build_solutions=False)
+            found = p.inc_found
+            gl = p.user_ids[found]
+            self._ref_energy[gl] = p._inc_energy[found]
+            self._cur_energy[gl] = p._inc_energy[found]
+
     # ------------------------------------------------------------------ API
     def run(self, trace: Iterable[Sequence[ChurnEvent]]) -> ChurnStats:
         stats = ChurnStats()
@@ -130,6 +193,8 @@ class ChurnOrchestrator:
         return stats
 
     def step(self, events: Sequence[ChurnEvent]) -> TickReport:
+        if self.pops is not None:
+            return self._step_population(events)
         rep = TickReport(tick=self._tick, n_events=len(events))
         self._tick += 1
         U = len(self.plans)
@@ -221,6 +286,217 @@ class ChurnOrchestrator:
         rep.energy = float(self._cur_energy[fin].sum())
         return rep
 
+    # ------------------------------------------------- population-mode ticks
+    def _step_population(self, events: Sequence[ChurnEvent]) -> TickReport:
+        """Event-form tick over the struct-of-arrays cohorts: same event
+        semantics and bit-exact same decisions as the per-plan path, with
+        the funnel / gate / re-solve running as array programs."""
+        rep = TickReport(tick=self._tick, n_events=len(events))
+        self._tick += 1
+        U = self.n_users
+        uplink_mask = np.zeros(U, dtype=bool)
+        dirty_mask = np.zeros(U, dtype=bool)
+        for ev in events:
+            if ev.kind == "uplink":
+                if ev.user is None:
+                    raise ValueError("uplink events are per-user "
+                                     "(ChurnEvent.user must be an int)")
+                self.quality[ev.user] = ev.value
+                uplink_mask[ev.user] = True
+                dirty_mask[ev.user] = True
+            elif ev.kind == "attach":
+                if ev.user is None:
+                    raise ValueError("attach events are per-user "
+                                     "(ChurnEvent.user must be an int)")
+                slot = int(ev.value) % max(1, len(self._edge_nodes))
+                if self.attached[ev.user] != slot:
+                    self.attached[ev.user] = slot
+                    uplink_mask[ev.user] = True
+                    dirty_mask[ev.user] = True
+            elif ev.kind in ("fail", "recover"):
+                node = int(ev.value)
+                if ev.user is None:
+                    for p in self.pops:
+                        (p.mask_node(node) if ev.kind == "fail"
+                         else p.unmask_node(node))
+                    dirty_mask[:] = True
+                else:
+                    p = self.pops[int(self._pop_of[ev.user])]
+                    loc = [int(self._local_of[ev.user])]
+                    (p.mask_node(node, users=loc) if ev.kind == "fail"
+                     else p.unmask_node(node, users=loc))
+                    dirty_mask[ev.user] = True
+            elif ev.kind == "slice":
+                if ev.user is not None:
+                    raise ValueError(
+                        "per-user slice events are not supported in "
+                        "population mode (compute slices are cohort-shared "
+                        "state); model per-user slices as separate cohorts")
+                for p in self.pops:
+                    p.update_slice(ev.value)
+                dirty_mask[:] = True
+            else:
+                raise ValueError(f"unknown churn event kind {ev.kind!r}")
+        self._population_tick(rep, uplink_mask, dirty_mask)
+        return rep
+
+    def step_arrays(self, quality: Optional[np.ndarray] = None,
+                    attach: Optional[np.ndarray] = None) -> TickReport:
+        """Array-form tick (population mode only) — the million-user path.
+
+        ``quality`` is a (U,) per-user channel draw (every user dirty, like
+        a trace tick's one-uplink-event-per-user), ``attach`` an optional
+        (U,) edge-slot vector.  Skips materializing U ``ChurnEvent``
+        objects per tick, and ingests lazily: requantization is deferred
+        to the users that actually re-solve (hysteresis holds most), so
+        ``n_quant_changed`` is not tracked here (reported 0) — every
+        decision, energy and solution is still bit-identical to
+        :meth:`step` with the equivalent per-user uplink events.
+        """
+        if self.pops is None:
+            raise ValueError("step_arrays requires population mode")
+        U = self.n_users
+        rep = TickReport(tick=self._tick, n_events=0)
+        self._tick += 1
+        uplink_mask = np.zeros(U, dtype=bool)
+        dirty_mask = np.zeros(U, dtype=bool)
+        if quality is not None:
+            quality = np.asarray(quality, dtype=np.float64)
+            if quality.shape != (U,):
+                raise ValueError(f"quality must be shape ({U},), got "
+                                 f"{quality.shape}")
+            self.quality[:] = quality
+            uplink_mask[:] = True
+            dirty_mask[:] = True
+            rep.n_events += U
+        if attach is not None:
+            attach = np.asarray(attach, dtype=np.int64)
+            if attach.shape != (U,):
+                raise ValueError(f"attach must be shape ({U},), got "
+                                 f"{attach.shape}")
+            slots = attach % max(1, len(self._edge_nodes))
+            moved = slots != self.attached
+            self.attached[moved] = slots[moved]
+            uplink_mask |= moved
+            dirty_mask |= moved
+            rep.n_events += int(moved.sum())
+        self._population_tick(rep, uplink_mask, dirty_mask, requant=False)
+        return rep
+
+    def _population_tick(self, rep: TickReport, uplink_mask: np.ndarray,
+                         dirty_mask: np.ndarray,
+                         requant: bool = True) -> None:
+        # channel + mobility funnel: one vectorized ingest per cohort
+        up_idx = np.nonzero(uplink_mask)[0]
+        if len(up_idx):
+            vecs = self._uplink_vectors(up_idx)
+            changed_total = 0
+            for pi, p in enumerate(self.pops):
+                pos = np.nonzero(self._pop_of[up_idx] == pi)[0]
+                if not len(pos):
+                    continue
+                loc = self._local_of[up_idx[pos]]
+                changed = p.ingest(vecs[pos], users=loc, requant=requant)
+                if changed is not None:
+                    changed_total += int(np.count_nonzero(changed))
+            rep.n_uplink_updates = len(up_idx)
+            rep.n_quant_changed = changed_total
+
+        # hysteresis gate: vectorized exact incumbent re-check
+        dirty_idx = np.nonzero(dirty_mask)[0]
+        rep.n_dirty = len(dirty_idx)
+        moved_bits = np.zeros(self.n_users)
+        migrated = np.zeros(self.n_users, dtype=bool)
+        for pi, p in enumerate(self.pops):
+            pos = np.nonzero(self._pop_of[dirty_idx] == pi)[0]
+            if not len(pos):
+                continue
+            gl = dirty_idx[pos]
+            loc = self._local_of[gl]
+            if self.always_resolve:
+                # every dirty user re-solves; skip the (unused) incumbent
+                # evaluation — identical decisions, energies overwritten
+                res = np.ones(len(gl), dtype=bool)
+            else:
+                no_inc, feas, energy = p.evaluate_incumbents(loc)
+                thresh = self._ref_energy[gl] * (1.0 + self.hysteresis)
+                res = no_inc | ~feas | (energy > thresh)
+            held = ~res
+            rep.n_held += int(np.count_nonzero(held))
+            if held.any():
+                self._cur_energy[gl[held]] = energy[held]
+            if not res.any():
+                continue
+
+            # batched warm re-solve of this cohort's re-placing users
+            gl_res = gl[res]
+            loc_res = loc[res]
+            old_found = p.inc_found[loc_res].copy()
+            old_place = p._inc_place[loc_res].copy()
+            p.solve(loc_res, build_solutions=False)
+            rep.n_resolved += len(loc_res)
+            new_found = p.inc_found[loc_res]
+            new_place = p._inc_place[loc_res]
+            new_energy = p._inc_energy[loc_res]
+            failed = ~new_found
+            rep.n_failed += int(np.count_nonzero(failed))
+            self._cur_energy[gl_res[failed]] = np.inf
+            self._ref_energy[gl_res[failed]] = np.inf
+            self._cur_energy[gl_res[new_found]] = new_energy[new_found]
+            self._ref_energy[gl_res[new_found]] = new_energy[new_found]
+
+            # migration accounting, vectorized but bit-identical to
+            # migration_delta per user: the -1 padding makes "block present
+            # in only one config" a plain element mismatch, and the bits
+            # accumulate column-by-column in the same order as the scalar
+            # loop (adding 0.0 for unmoved blocks is exact)
+            elig = new_found & old_found
+            if elig.any():
+                diff = old_place[elig] != new_place[elig]      # (R, L)
+                L = p.L
+                cut = p.profile.cut_bits
+                bits = np.zeros(diff.shape[0])
+                for i in range(L):
+                    bits += np.where(diff[:, i],
+                                     float(cut[min(i, L - 1)]), 0.0)
+                moved = diff.sum(axis=1)
+                gl_elig = gl_res[elig]
+                rep.n_migrations += int(np.count_nonzero(moved))
+                rep.blocks_moved += int(moved.sum())
+                migrated[gl_elig] = moved > 0
+                moved_bits[gl_elig] = bits
+        # per-plan parity: migration bits accumulate per user in global
+        # index order (float addition order matters)
+        mb = 0.0
+        for u in np.nonzero(migrated)[0]:
+            mb += float(moved_bits[u])
+        rep.migration_bits = mb
+
+        fin = np.isfinite(self._cur_energy)
+        rep.energy = float(self._cur_energy[fin].sum())
+
+    def _uplink_vectors(self, idx: np.ndarray) -> np.ndarray:
+        """Vectorized ``_uplink_vector`` over many users: (Ud, N) per-target
+        source-link bandwidths, bit-identical per row."""
+        nw = self.pops[0].network0
+        N = nw.n_nodes
+        src = nw.source_node
+        q = self.quality[idx]
+        full = self.uplink_bps * q                       # (Ud,)
+        det = full * self.detach_frac
+        vec = np.broadcast_to(full[:, None], (len(idx), N)).copy()
+        if self._edge_nodes:
+            edge_mask = np.zeros(N, dtype=bool)
+            edge_mask[self._edge_nodes] = True
+            att = np.asarray(self._edge_nodes)[
+                self.attached[idx] % len(self._edge_nodes)]
+            detached = edge_mask[None, :] \
+                & (np.arange(N)[None, :] != att[:, None])
+            vec[detached] = np.broadcast_to(det[:, None],
+                                            (len(idx), N))[detached]
+        vec[:, src] = np.inf
+        return vec
+
     # ------------------------------------------------------------- internals
     def _uplink_vector(self, u: int) -> np.ndarray:
         """Per-target source-link bandwidths for user ``u``'s current
@@ -269,3 +545,34 @@ def population_plans(n_users: int, *,
         plans.append(Plan(nw, profiles[app], apps[app], gamma=gamma,
                           backend=backend, **plan_kwargs))
     return plans
+
+
+def population_cohorts(n_users: int, *,
+                       apps: Optional[Dict[str, AppRequirements]] = None,
+                       profiles: Optional[Dict[str, DNNProfile]] = None,
+                       network: Optional[Network] = None,
+                       n_extra_edge: int = 0, gamma: int = 10,
+                       backend: str = "minplus",
+                       **pop_kwargs) -> List[Population]:
+    """Struct-of-arrays analogue of :func:`population_plans`: one
+    :class:`Population` cohort per app, global user ids assigned round-robin
+    (user ``u`` -> app ``u % n_apps``) so a population-mode orchestrator
+    walks the SAME user->app mapping as the per-plan path — the bit-exact
+    equivalence benches and tests rely on that alignment.
+    """
+    from .dnn_profile import all_paper_apps
+    from .multiapp import PAPER_MULTIAPP_REQS
+    apps = apps if apps is not None else PAPER_MULTIAPP_REQS
+    profiles = profiles if profiles is not None else all_paper_apps()
+    nw = network if network is not None \
+        else paper_scenario(n_extra_edge=n_extra_edge)
+    names = list(apps)
+    pops: List[Population] = []
+    for a, app in enumerate(names):
+        ids = np.arange(a, n_users, len(names), dtype=np.int64)
+        if not len(ids):
+            continue
+        pops.append(Population(nw, profiles[app], apps[app], len(ids),
+                               gamma=gamma, backend=backend, user_ids=ids,
+                               **pop_kwargs))
+    return pops

@@ -54,14 +54,14 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from .bellman_ford import _banded_gather_idx, batched_banded_relax_minarg
+from .bellman_ford import (_banded_gather_idx, batched_banded_relax_minarg,
+                           relax_chunk_rows)
 from .dnn_profile import DNNProfile
 from .extended_graph import (ExtendedGraph, _profile_tensors,
                              build_extended_graph)
 from .feasible_graph import (FeasibleGraph, _quant, _quant_raw,
                              build_feasible_graph)
-from .fin import (DP_BACKENDS, _BandedArgDP, _best_feasible,
-                  _relax_chunk_bytes, _run_dp_batch)
+from .fin import DP_BACKENDS, _BandedArgDP, _best_feasible, _run_dp_batch
 from .problem import (AppRequirements, Config, ConfigEval, Solution,
                       evaluate_config)
 from .system_model import Network
@@ -677,6 +677,47 @@ class Plan:
         self.stats.solves += 1
 
 
+def _validate_population_bps(bps: Union[float, np.ndarray], U: int,
+                             n_nodes: Union[int, Sequence[int]]
+                             ) -> np.ndarray:
+    """Validate a population uplink argument up front.
+
+    Accepts a scalar (all users), a (U,) per-user scalar vector, or a
+    (U, N) per-target matrix, and raises a clear ``ValueError`` for
+    anything else — a malformed shape must not fail deep inside numpy
+    broadcasting (or, worse, be silently reinterpreted: an (N,)-shaped
+    vector handed to a U-user population would otherwise be consumed as
+    per-user scalars whenever U happens to equal N).
+    """
+    arr = np.asarray(bps, dtype=np.float64)
+    if arr.ndim == 0:
+        return arr
+    if arr.ndim > 2:
+        raise ValueError(
+            f"bps must be a scalar, a ({U},) per-user vector or a "
+            f"({U}, N) per-target matrix; got ndim={arr.ndim} "
+            f"shape {arr.shape}")
+    if arr.shape[0] != U:
+        raise ValueError(
+            f"bps leading dimension must equal the population size {U}; "
+            f"got shape {arr.shape}")
+    if arr.ndim == 2:
+        if isinstance(n_nodes, int):
+            if arr.shape[1] != n_nodes:
+                raise ValueError(
+                    f"bps is ({U}, {arr.shape[1]}) but the cohort has "
+                    f"{n_nodes} nodes per user")
+            return arr
+        bad = [(u, n) for u, n in enumerate(n_nodes) if n != arr.shape[1]]
+        if bad:
+            u0, n0 = bad[0]
+            raise ValueError(
+                f"bps is ({U}, {arr.shape[1]}) but user {u0} has "
+                f"{n0} nodes; per-target matrices require every user's "
+                f"node count to match the trailing dimension")
+    return arr
+
+
 def update_uplinks(plans: Sequence[Plan],
                    bps: Union[float, np.ndarray]) -> List[bool]:
     """Batched :meth:`Plan.update_uplink` across a user population.
@@ -691,7 +732,7 @@ def update_uplinks(plans: Sequence[Plan],
     DP-input-changed flags.
     """
     U = len(plans)
-    arr = np.asarray(bps, dtype=np.float64)
+    arr = _validate_population_bps(bps, U, [p.n_nodes for p in plans])
     if arr.ndim == 0:
         arr = np.full(U, float(arr))
     changed_out = [False] * U
@@ -784,7 +825,7 @@ def _warm_round0(plans: Sequence[Plan]) -> List[List[object]]:
                  for j in idxs])
         D, N, Gp1 = grid.shape
         # cache-resident chunks: f64 candidate + i64 argmin per scenario row
-        chunk = max(1, _relax_chunk_bytes() // (N * N * Gp1 * 16))
+        chunk = relax_chunk_rows(N * N * Gp1 * 16)
         hists: List[np.ndarray] = []
         pars: List[np.ndarray] = []
         for start in range(0, D, chunk):

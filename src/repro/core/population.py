@@ -1,0 +1,808 @@
+"""Struct-of-arrays population engine: whole-cohort churn ticks.
+
+``plan.update_uplinks`` / ``plan.solve_plans`` batch the *math* of a churn
+tick but keep the *state* in per-user ``Plan`` objects: every tick pays U
+Python method calls, U small ``np.stack`` re-packings and U ``_apply_qpack``
+scatter loops before any vectorized work starts — which is what caps the
+PR-3 churn loop at ~1e4 user-ticks/s.  :class:`Population` inverts the
+layout: one cohort of same-shape users (one network topology, one DNN
+profile, one requirements triple, one solver parameterization) owns its
+batched state as single contiguous arrays —
+
+  * ``(U, N)`` per-user source-link bandwidth vectors,
+  * ``(U, M, 2L-1, N)`` quantized uplink packs (M quantizer passes),
+  * ``(U, N)`` failure bitmaps,
+  * ``(U, L)`` / ``(U,)`` incumbent placements, exits and energies,
+
+and the per-tick pipeline — channel ingest -> vectorized requantize ->
+in-cell cache check -> chained banded relaxation -> argmin/post-pass —
+runs as whole-array operations with NO per-user Python on the hot path.
+
+The DP layer exploits that quantization makes the relaxation tensors
+piecewise-constant in the channel *across the cohort*, not just across
+ticks: users whose quantized packs (and failure masks) coincide share one
+*cohort state* — one (M, L-1, N, N) steepness stack, one relaxed DP grid,
+one memoized per-exit minimum, one backtracked candidate list.  A tick
+relaxes only the cohort states born this tick (chained float64 banded
+relaxation, cache-residency chunked via ``bellman_ford.relax_chunk_rows``),
+so a million AR(1)-fading users cost a few hundred relaxations, and the
+exact per-user post-pass re-reads the *true* bandwidth through the shared
+candidates (``fin._best_feasible`` with a per-state candidate cache).
+
+Results are bit-exact vs per-user ``Plan.solve()`` (hence vs cold
+``solve_fin``) on the float64 numpy backends: the ingest replicates the
+packed requantizer of ``plan.update_uplinks`` elementwise, states
+materialize through the same scatter formulas as ``Plan._apply_qpack``,
+the relaxation and post-pass are the shared ``bellman_ford`` / ``fin``
+code paths, and the rare no-feasible-path tighten loop falls back to a
+fresh per-user ``Plan`` (whose warm==cold invariant is property-tested).
+``backend="jnp"/"pallas"`` swap in the float32 engines; ``backend="mesh"``
+routes the chained relaxation through the device-mesh execution layer
+(``repro.sharding.population``), sharding the stacked (D, L-1, N, N)
+relaxation over the user axis of a jax mesh.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .bellman_ford import (batched_banded_relax_argmin,
+                           batched_banded_relax_minarg, relax_chunk_rows)
+from .dnn_profile import DNNProfile
+from .feasible_graph import _quant_raw
+from .fin import DP_BACKENDS, _BandedArgDP, _backtrack, _best_feasible
+from .plan import Plan, _validate_population_bps
+from .problem import AppRequirements, Config, ConfigEval, Solution
+from .system_model import Network
+from .tolerances import dist_tol
+
+__all__ = ["Population", "PopulationStats"]
+
+
+@dataclass
+class PopulationStats:
+    """Aggregate engine counters (diagnostics and benches)."""
+
+    ingests: int = 0             # ingest calls
+    uplink_updates: int = 0      # user-slots refreshed by ingest
+    quant_changed: int = 0       # user-slots whose quantized pack moved
+    dp_relaxes: int = 0          # cohort states relaxed
+    dp_cache_hits: int = 0       # user-solves served from an existing state
+    solves: int = 0              # user-solves issued
+    unique_solves: int = 0       # distinct (state, bandwidth) groups solved
+    fallbacks: int = 0           # per-user Plan fallbacks (tighten loop)
+    state_evictions: int = 0     # cache compactions
+
+
+class _CandCache:
+    """Per-(mode, exit) energy-ordered candidate cache of a cohort state."""
+
+    __slots__ = ("items", "order", "exhausted")
+
+    def __init__(self):
+        self.items: List[Tuple[Config, float]] = []
+        self.order = None            # (flat argsort, values, n_finite)
+        self.exhausted = False
+
+
+class _CohortState:
+    """One unique (quantized pack, failure mask) DP state of the cohort.
+
+    Everything hanging off the state is shared by every user currently in
+    it: the masked steepness stack, the init grid, the relaxed DP grids
+    (``dps``), the per-exit distance minima (memoized by ``fin._exit_dmin``
+    on the dp objects) and the backtracked candidate lists.
+    """
+
+    __slots__ = ("stq", "mask", "steep", "grid", "dps", "cand")
+
+    def __init__(self, stq: np.ndarray, mask: np.ndarray,
+                 steep: np.ndarray, grid: np.ndarray):
+        self.stq = stq               # (M, 2L-1, N)
+        self.mask = mask             # (N,) bool
+        self.steep = steep           # (M, L-1, N, N), masks applied
+        self.grid = grid             # (M, N, G+1), masks applied
+        self.dps: Optional[List[_BandedArgDP]] = None
+        self.cand: Dict[Tuple[int, int], _CandCache] = {}
+
+
+class Population:
+    """Struct-of-arrays engine for a cohort of same-shape users.
+
+    One cohort shares (network topology, DNN profile, requirements, solver
+    parameters); per-user state is the source-link bandwidth vector, the
+    quantized uplink pack, the failure bitmap and the incumbent.  Mixed
+    populations (several apps / topologies) are lists of cohorts — see
+    ``online.population_cohorts``.
+
+    ``backend``: ``minplus``/``banded`` (float64 numpy, bit-exact vs
+    ``Plan.solve()``), ``jnp``/``pallas`` (float32 engines), ``mesh``
+    (float32, sharded over the user axis of a jax device mesh).
+    """
+
+    def __init__(self, network: Network, profile: DNNProfile,
+                 req: AppRequirements, n_users: int, *, gamma: int = 10,
+                 lam: Optional[int] = None, quantize: str = "floor",
+                 max_tighten: int = 6, tighten_factor: float = 0.85,
+                 backend: str = "minplus", check_aggregate_load: bool = False,
+                 user_ids: Optional[Sequence[int]] = None,
+                 max_states: int = 65536):
+        if n_users <= 0:
+            raise ValueError(f"n_users must be positive, got {n_users}")
+        if backend != "mesh" and DP_BACKENDS.get(backend) is None:
+            raise ValueError(f"unknown Population backend {backend!r} "
+                             f"(expected mesh or one of "
+                             f"{sorted(DP_BACKENDS)})")
+        if backend in ("numpy", "dense"):
+            raise ValueError("Population requires a banded engine; the "
+                             "dense backends exist for equivalence testing "
+                             "only (use minplus/banded/jnp/pallas/mesh)")
+        if gamma >= np.iinfo(np.int16).max:
+            raise ValueError(f"gamma {gamma} overflows the int16 state "
+                             f"encoding")
+        self.backend = backend
+        #: backend of the rare per-user Plan fallback (same engine family)
+        self._plan_backend = "jnp" if backend == "mesh" else backend
+        self._engine = DP_BACKENDS[self._plan_backend]
+        self._dist_tol = dist_tol(self._engine)
+
+        # the prototype Plan owns every *shared* stage-1/2 tensor: the
+        # pristine extended graph, the packed-requantizer constants and the
+        # base quantized steepness stack that per-user states scatter their
+        # source-node rows/cols into.  Building it through Plan (rather
+        # than duplicating the builders) is what makes population state
+        # equal per-plan state by construction.
+        self._proto = Plan(network, profile, req, gamma=gamma, lam=lam,
+                           quantize=quantize, max_tighten=max_tighten,
+                           tighten_factor=tighten_factor, n_best=1,
+                           backend=self._plan_backend,
+                           check_aggregate_load=check_aggregate_load)
+        self.profile = profile
+        self.req = req
+        self.gamma = gamma
+        self.lam = self._proto.lam
+        self.quantize = quantize
+        self.max_tighten = max_tighten
+        self.tighten_factor = tighten_factor
+        self.check_aggregate_load = check_aggregate_load
+        self.network0 = self._proto.network      # pristine base (live view)
+        self.max_states = max_states
+
+        N = self.network0.n_nodes
+        L = profile.n_blocks
+        self.U = int(n_users)
+        self.N, self.L = N, L
+        self.M = len(self._proto._modes)
+        self.src = self.network0.source_node
+        self.user_ids = (np.arange(self.U, dtype=np.int64)
+                         if user_ids is None
+                         else np.asarray(user_ids, dtype=np.int64))
+        assert len(self.user_ids) == self.U
+
+        # per-user SoA state
+        base_row = self._proto._bw[self.src].copy()
+        base_row[self.src] = np.inf
+        self._bw_vec = np.tile(base_row, (self.U, 1))          # (U, N)
+        self._qpack = np.tile(self._proto._qpack[None],
+                              (self.U, 1, 1, 1))               # (U, M, 2L-1, N)
+        self._masked = np.zeros((self.U, N), dtype=bool)
+        self._stale = np.zeros(self.U, dtype=bool)   # deferred requants
+        self._user_state = np.full(self.U, -1, dtype=np.int64)
+        self._solved = np.zeros(self.U, dtype=bool)
+        self._inc_place = np.full((self.U, L), -1, dtype=np.int32)
+        self._inc_exit = np.full(self.U, -1, dtype=np.int32)
+        self._inc_energy = np.full(self.U, np.inf)
+        self._solutions: List[Optional[Solution]] = [None] * self.U
+
+        # cohort-state table (the cross-user DP dedupe)
+        self._states: List[_CohortState] = []
+        self._state_ids: Dict[bytes, int] = {}
+        self._mesh_relaxer = None
+        self._fallback_plan: Optional[Plan] = None
+        self.stats = PopulationStats()
+        self._assign_states(np.arange(self.U))
+
+    # ------------------------------------------------------------ properties
+    @property
+    def n_users(self) -> int:
+        return self.U
+
+    @property
+    def n_states(self) -> int:
+        return len(self._states)
+
+    @property
+    def depth_window_lo(self) -> Optional[int]:
+        return self.gamma - self.lam if self.lam < self.gamma else None
+
+    @property
+    def masked_nodes(self) -> List[int]:
+        """Nodes masked for EVERY user (the cohort-wide failure set)."""
+        return [int(n) for n in np.nonzero(self._masked.all(axis=0))[0]]
+
+    @property
+    def inc_found(self) -> np.ndarray:
+        """(U,) bool — users whose incumbent is a feasible configuration
+        (``_best_feasible`` only ever returns exactly-feasible configs, so
+        found == feasible, mirroring ``Solution.feasible``)."""
+        return self._inc_exit >= 0
+
+    def solution(self, u: int) -> Optional[Solution]:
+        return self._solutions[u]
+
+    def solutions(self, users: Optional[Sequence[int]] = None
+                  ) -> List[Optional[Solution]]:
+        users = range(self.U) if users is None else users
+        return [self._solutions[int(u)] for u in users]
+
+    # --------------------------------------------------------------- ingest
+    def ingest(self, bps: Union[float, np.ndarray],
+               users: Optional[np.ndarray] = None,
+               requant: bool = True) -> Optional[np.ndarray]:
+        """Per-tick channel ingest: set the selected users' source-link
+        bandwidths and requantize their packs as ONE stacked pipeline.
+
+        ``bps`` is a scalar, a (Us,) per-user scalar or a (Us, N)
+        per-target matrix (``users`` defaults to the whole cohort).
+        Elementwise identical to ``Plan.update_uplink`` per user; returns
+        the (Us,) DP-input-changed flags.  Malformed shapes raise a clear
+        ``ValueError`` up front (see ``plan._validate_population_bps``).
+
+        ``requant=False`` defers the requantization: the bandwidths land
+        now (incumbent re-evaluation reads only the TRUE bandwidth), the
+        packs refresh lazily when a user actually re-solves — under
+        hysteresis almost no one does, so the scale path skips ~all of the
+        quantization work without changing any decision or solution.
+        Returns None in that case (the change flags are not yet known).
+        """
+        users = (np.arange(self.U) if users is None
+                 else np.asarray(users, dtype=np.int64))
+        Us = len(users)
+        arr = _validate_population_bps(bps, Us, self.N)
+        vec = np.empty((Us, self.N))
+        vec[:] = arr if arr.ndim == 2 else \
+            (np.broadcast_to(np.asarray(arr, dtype=np.float64)
+                             .reshape(-1, 1), (Us, self.N)))
+        vec[:, self.src] = np.inf                # self-loop (Sec. II-A)
+        self._bw_vec[users] = vec
+        self.stats.ingests += 1
+        self.stats.uplink_updates += Us
+        if not requant:
+            self._stale[users] = True
+            return None
+        changed = self._requant_users(users, vec)
+        self._stale[users] = False
+        return changed
+
+    def _refresh_states(self, users: np.ndarray) -> None:
+        """Flush deferred requantizations (lazy ingest) for these users."""
+        sel = users[self._stale[users]]
+        if len(sel):
+            self._requant_users(sel, self._bw_vec[sel])
+            self._stale[sel] = False
+
+    def _requant_users(self, users: np.ndarray,
+                       vec: np.ndarray) -> np.ndarray:
+        Us = len(users)
+        G = self.gamma
+        bwm = np.where(vec > 0, vec, np.nan)                   # (Us, N)
+        sc = self._proto._bits_pack[None] / bwm[:, None, :]    # (Us, 2L-1, N)
+        sc += self._proto._C_pack[None]
+        np.multiply(sc, G, out=sc)
+        sc /= self.req.delta
+        valid = np.isfinite(sc)
+        valid &= self._proto._mask_pack[None]
+        valid &= self._proto._load_pack[None] <= vec[:, None, :]
+        # quantize straight into the (Us, M, 2L-1, N) user-major layout —
+        # identical elementwise formulas to plan.update_uplinks, minus its
+        # (M, D, ...) staging buffer and the moveaxis copy
+        stq = np.empty((Us, self.M) + sc.shape[1:])
+        for mi, mode in enumerate(self._proto._modes):
+            q = stq[:, mi]
+            _quant_raw(sc, mode, out=q)
+            ok = q <= G
+            ok &= valid
+            np.copyto(q, np.inf, where=~ok)
+
+        old = self._qpack[users]
+        same = (stq == old).reshape(Us, -1).all(axis=1)
+        changed = ~same
+        if changed.any():
+            ch = users[changed]
+            self._qpack[ch] = stq[changed]
+            self._assign_states(ch)
+        self.stats.quant_changed += int(np.count_nonzero(changed))
+        return changed
+
+    # ------------------------------------------------------------- failures
+    def mask_node(self, n: int, users: Optional[Sequence[int]] = None
+                  ) -> "Population":
+        """Node failure for ``users`` (default: the whole cohort) — same
+        semantics as ``Plan.mask_node`` per user."""
+        if n == self.src:
+            raise ValueError("cannot mask the source-hosting node")
+        sel = (np.arange(self.U) if users is None
+               else np.asarray(users, dtype=np.int64))
+        flip = sel[~self._masked[sel, n]]
+        if len(flip):
+            self._masked[flip, n] = True
+            self._assign_states(flip)
+        return self
+
+    def unmask_node(self, n: int, users: Optional[Sequence[int]] = None
+                    ) -> "Population":
+        sel = (np.arange(self.U) if users is None
+               else np.asarray(users, dtype=np.int64))
+        flip = sel[self._masked[sel, n]]
+        if len(flip):
+            self._masked[flip, n] = False
+            self._assign_states(flip)
+        return self
+
+    def update_slice(self, frac: float) -> "Population":
+        """Cohort-wide compute-slice rescale (``Plan.update_slice`` with
+        ``nodes=None`` for every user).  Per-user slices would break the
+        cohort's shared energy tensors — model those as separate cohorts.
+        """
+        self._proto.update_slice(frac)
+        # the proto rebuilt its packs and base tensors in place or replaced
+        # them; every cached cohort state quantized against the old compute
+        # terms is now stale, and the fallback plan's compute base as well
+        self._states = []
+        self._state_ids = {}
+        self._fallback_plan = None
+        # requantize every user's pack against the new compute terms (the
+        # ingest re-keys the users whose pack moved), then re-key the rest
+        # — their packs kept their values but the state table was cleared
+        self.ingest(self._bw_vec.copy())
+        self._stale[:] = False
+        self._assign_states(np.arange(self.U))
+        return self
+
+    # ------------------------------------------------------- state registry
+    def _assign_states(self, users: np.ndarray) -> None:
+        """(Re)key the given users' (quantized pack, mask) signatures into
+        cohort states, materializing states never seen before."""
+        Us = len(users)
+        if Us == 0:
+            return
+        M, K2, N = self.M, 2 * self.L - 1, self.N
+        enc = np.empty((Us, M * K2 * N + N), dtype=np.int16)
+        q = self._qpack[users].reshape(Us, -1)
+        np.copyto(enc[:, :M * K2 * N], q, casting="unsafe",
+                  where=np.isfinite(q))
+        enc[:, :M * K2 * N][~np.isfinite(q)] = -1
+        enc[:, M * K2 * N:] = self._masked[users]
+        rows = np.ascontiguousarray(enc)
+        v = rows.view(np.dtype((np.void, rows.shape[1] * 2))).ravel()
+        uniq, first, inv = np.unique(v, return_index=True,
+                                     return_inverse=True)
+        sids = np.empty(len(uniq), dtype=np.int64)
+        for i, j in enumerate(first):
+            key = v[j].tobytes()
+            sid = self._state_ids.get(key)
+            if sid is None:
+                u = int(users[j])
+                sid = self._add_state(key, self._qpack[u].copy(),
+                                      self._masked[u].copy())
+            sids[i] = sid
+        self._user_state[users] = sids[inv]
+        if len(self._states) > self.max_states:
+            self._compact_states()
+
+    def _add_state(self, key: bytes, stq: np.ndarray,
+                   mask: np.ndarray) -> int:
+        """Materialize a cohort state: scatter the pack's source-node
+        rows/cols into a copy of the base steepness stack and rebuild the
+        init grid — the exact formulas of ``Plan._apply_qpack``, with
+        ``Plan._quant_state``'s failure masking folded in."""
+        proto = self._proto
+        L, G, src = self.L, self.gamma, self.src
+        steep = proto._steep.copy()                  # (M, L-1, N, N) base
+        steep[:, :, src, :] = stq[:, :L - 1]
+        steep[:, :, :, src] = stq[:, L:]
+        grid = np.full((self.M, self.N, G + 1), np.inf)
+        d = stq[:, L - 1, :]                         # (M, N) init depths
+        mi_i, n_i = np.nonzero(np.isfinite(d) & (d <= G))
+        grid[mi_i, n_i, d[mi_i, n_i].astype(np.int64)] = \
+            proto._ext.init_E[n_i]
+        if mask.any():
+            steep[:, :, mask, :] = np.inf
+            steep[:, :, :, mask] = np.inf
+            grid[:, mask, :] = np.inf
+        sid = len(self._states)
+        self._states.append(_CohortState(stq, mask, steep, grid))
+        self._state_ids[key] = sid
+        return sid
+
+    def _compact_states(self) -> None:
+        """Drop cohort states no user references (bounds cache growth under
+        adversarial churn; referenced states and their DP grids survive)."""
+        live = np.unique(self._user_state)
+        remap = {int(s): i for i, s in enumerate(live)}
+        self._states = [self._states[int(s)] for s in live]
+        self._state_ids = {k: remap[s] for k, s in self._state_ids.items()
+                           if s in remap}
+        self._user_state = np.searchsorted(live, self._user_state)
+        self.stats.state_evictions += 1
+
+    # ------------------------------------------------------------ relaxation
+    def _relax_states(self, sids: Sequence[int]) -> None:
+        """Chained banded relaxation of the given (unrelaxed) cohort states:
+        both quantizer passes of every state ride in ONE batched float64
+        chain (or the f32 jnp / pallas / mesh engines), chunked to the
+        shared cache-residency budget."""
+        states = [self._states[int(s)] for s in sids]
+        if not states:
+            return
+        D, M = len(states), self.M
+        N, Gp1 = self.N, self.gamma + 1
+        steep = np.concatenate([s.steep for s in states])      # (D*M, ...)
+        grid = np.concatenate([s.grid for s in states])
+        E = np.broadcast_to(self._proto._ext.E[None],
+                            (D * M,) + self._proto._ext.E.shape)
+        lo = self.depth_window_lo
+        if self.backend == "mesh":
+            hist, par = self._mesh().relax(grid, E, steep, lo)
+        elif self._engine == "banded":
+            chunk = relax_chunk_rows(N * N * Gp1 * 16)
+            hists, pars = [], []
+            for start in range(0, D * M, chunk):
+                sl = slice(start, start + chunk)
+                h, p = batched_banded_relax_minarg(grid[sl], E[sl],
+                                                   steep[sl], lo)
+                hists.append(h)
+                pars.append(p)
+            hist = np.concatenate(hists) if len(hists) > 1 else hists[0]
+            par = np.concatenate(pars) if len(pars) > 1 else pars[0]
+        else:
+            hist, par = batched_banded_relax_argmin(
+                grid, np.ascontiguousarray(E), steep, lo,
+                backend=self._engine)
+        for i, s in enumerate(states):
+            s.dps = [_BandedArgDP(hist[i * M + mi], par[i * M + mi],
+                                  s.steep[mi]) for mi in range(M)]
+        self.stats.dp_relaxes += D
+
+    def _mesh(self):
+        if self._mesh_relaxer is None:
+            from repro.sharding.population import MeshRelaxer
+            self._mesh_relaxer = MeshRelaxer()
+        return self._mesh_relaxer
+
+    # ------------------------------------------------------------- post-pass
+    def _exit_candidates(self, state: _CohortState, mi: int, k: int):
+        """Lazy energy-ordered candidates at exit ``k`` — the sequence of
+        ``fin._iter_configs_at_exit``, cached on the cohort state so every
+        user sharing the state shares one backtrack."""
+        cache = state.cand.get((mi, k))
+        if cache is None:
+            cache = state.cand[(mi, k)] = _CandCache()
+        i = 0
+        while True:
+            while i < len(cache.items):
+                yield cache.items[i]
+                i += 1
+            if cache.exhausted:
+                return
+            self._extend_candidates(state, mi, k, cache)
+
+    def _extend_candidates(self, state: _CohortState, mi: int, k: int,
+                           cache: _CandCache) -> None:
+        dp = state.dps[mi]
+        block = self.profile.exits[k].block
+        d = dp.dist[block]                        # (N, G+1, 1)
+        if not cache.items:
+            # fast path of _iter_configs_at_exit: cheapest state via argmin
+            j0 = int(np.argmin(d))
+            v0 = float(d.ravel()[j0])
+            if not np.isfinite(v0):
+                cache.exhausted = True
+                return
+            n0, g0, r0 = np.unravel_index(j0, d.shape)
+            cfg = Config(placement=_backtrack(dp, block, int(n0), int(g0),
+                                              int(r0)), final_exit=k)
+            cache.items.append((cfg, v0))
+            return
+        if cache.order is None:
+            order = np.argsort(d, axis=None, kind="stable")
+            vals = d.ravel()[order]
+            cache.order = (order, vals, int(np.searchsorted(vals, np.inf)))
+        order, vals, n_finite = cache.order
+        j = len(cache.items)
+        if j >= n_finite:
+            cache.exhausted = True
+            return
+        n_, g_, r_ = np.unravel_index(int(order[j]), d.shape)
+        cfg = Config(placement=_backtrack(dp, block, int(n_), int(g_),
+                                          int(r_)), final_exit=k)
+        cache.items.append((cfg, float(vals[j])))
+
+    def _scan_state(self, state: _CohortState, mi: int, network: Network,
+                    bound=None):
+        return _best_feasible(
+            network, self.profile, self.req, state.dps[mi],
+            self._proto._admissible, self.check_aggregate_load,
+            oracle=False, bound=bound, dist_tol=self._dist_tol,
+            candidates=lambda k: self._exit_candidates(state, mi, k))
+
+    def _user_network(self, bw_row: np.ndarray) -> Network:
+        bw = self._proto._bw.copy()
+        src = self.src
+        bw[src, :] = bw_row
+        bw[:, src] = bw_row
+        bw[src, src] = np.inf
+        return Network(nodes=list(self.network0.nodes), bandwidth=bw,
+                       compute=self._proto._compute, source_node=src)
+
+    def _fallback_solve(self, bw_row: np.ndarray,
+                        mask: np.ndarray) -> Solution:
+        """Exact rare-path solve (tighten loop / no-feasible round 0): one
+        persistent warm Plan per cohort replays the user's (bandwidth,
+        mask) state and runs the whole ``Plan.solve`` control flow, whose
+        warm==cold invariant is property-tested.  Warm deltas on the kept
+        plan cost microseconds where a fresh Plan build costs milliseconds
+        — and users with no feasible placement hit this path every tick
+        they stay dirty."""
+        plan = self._fallback_plan
+        if plan is None:
+            plan = self._fallback_plan = Plan(
+                self.network0, self.profile, self.req, gamma=self.gamma,
+                lam=self.lam, quantize=self.quantize,
+                max_tighten=self.max_tighten,
+                tighten_factor=self.tighten_factor, n_best=1,
+                backend=self._plan_backend,
+                check_aggregate_load=self.check_aggregate_load)
+        plan.update_uplink(bw_row)
+        have = plan._masked.copy()
+        for n in np.nonzero(mask & ~have)[0]:
+            plan.mask_node(int(n))
+        for n in np.nonzero(have & ~mask)[0]:
+            plan.unmask_node(int(n))
+        self.stats.fallbacks += 1
+        return plan.solve()
+
+    def _solve_one(self, state: _CohortState, bw_row: np.ndarray
+                   ) -> Tuple[Optional[Config], Optional[ConfigEval], dict]:
+        """``Plan.solve``'s control flow against a shared cohort state and
+        one user's true bandwidth (the exact post-pass input)."""
+        meta = {"gamma": self.gamma, "quantize": self.quantize,
+                "tighten_rounds": 0, "backend": self.backend,
+                "warm": True, "population": True}
+        if not self._proto._admissible:
+            return None, None, {**meta, "reason": "no exit meets alpha (3c)"}
+        network = self._user_network(bw_row)
+        best = self._scan_state(state, 0, network)
+        if best is None and self.max_tighten > 0:
+            sol = self._fallback_solve(bw_row, state.mask)
+            return sol.config, sol.eval, sol.meta
+        if self.quantize != "ceil":
+            alt = self._scan_state(state, 1, network, bound=best)
+            if alt is not None and (best is None
+                                    or alt[1].energy < best[1].energy):
+                best = alt
+                meta["used_ceil_pass"] = True
+        if best is None:
+            return None, None, {**meta, "reason": "no feasible path"}
+        cfg, ev = best
+        meta["delta_eff"] = self.req.delta
+        meta["n_feasible_states"] = int(np.isfinite(ev.energy))
+        return cfg, ev, meta
+
+    # ----------------------------------------------------------------- solve
+    def solve(self, users: Optional[np.ndarray] = None,
+              build_solutions: bool = True) -> Optional[List[Solution]]:
+        """Warm re-solve of the given users (default: whole cohort).
+
+        Relaxes exactly the cohort states born since their last relax, then
+        runs the exact post-pass once per unique (state, true-bandwidth)
+        group — users with identical channel state share one solve.
+        Updates the incumbents in place; returns the per-user Solutions
+        when ``build_solutions`` (pass False on million-user ticks to skip
+        materializing U Python objects — the incumbent arrays carry the
+        results either way).
+        """
+        t0 = time.perf_counter()
+        users = (np.arange(self.U) if users is None
+                 else np.asarray(users, dtype=np.int64))
+        Us = len(users)
+        if Us == 0:
+            return [] if build_solutions else None
+        self._refresh_states(users)
+        sids = self._user_state[users]
+        uniq_sids = np.unique(sids)
+        need = [int(s) for s in uniq_sids if self._states[int(s)].dps is None]
+        self._relax_states(need)
+        self.stats.dp_cache_hits += Us - len(need)
+        self.stats.solves += Us
+
+        # unique (state, bandwidth) groups: identical inputs, one solve
+        rows = np.empty((Us, 1 + self.N), dtype=np.float64)
+        rows[:, 0] = sids
+        rows[:, 1:] = self._bw_vec[users]
+        v = np.ascontiguousarray(rows).view(
+            np.dtype((np.void, rows.shape[1] * 8))).ravel()
+        _, first, inv = np.unique(v, return_index=True, return_inverse=True)
+        order = np.argsort(inv, kind="stable")
+        bounds = np.searchsorted(inv[order], np.arange(len(first) + 1))
+        dt_share = (time.perf_counter() - t0) / Us
+
+        for g, j in enumerate(first):
+            u = int(users[j])
+            state = self._states[int(self._user_state[u])]
+            cfg, ev, meta = self._solve_one(state, self._bw_vec[u])
+            members = users[order[bounds[g]:bounds[g + 1]]]
+            self._record_group(members, cfg, ev, meta, dt_share,
+                               build_solutions)
+        self.stats.unique_solves += len(first)
+        return self.solutions(users) if build_solutions else None
+
+    def _record_group(self, members: np.ndarray, cfg: Optional[Config],
+                      ev: Optional[ConfigEval], meta: dict, dt: float,
+                      build_solutions: bool) -> None:
+        self._solved[members] = True
+        if cfg is None:
+            self._inc_place[members] = -1
+            self._inc_exit[members] = -1
+            self._inc_energy[members] = np.inf
+        else:
+            nb = len(cfg.placement)
+            self._inc_place[members, :nb] = cfg.placement
+            self._inc_place[members, nb:] = -1
+            self._inc_exit[members] = cfg.final_exit
+            self._inc_energy[members] = ev.energy
+        sol = Solution(config=cfg, eval=ev, solve_time=dt, solver="fin",
+                       meta=meta) if build_solutions else None
+        for u in members:
+            self._solutions[u] = sol
+
+    # ------------------------------------------------ incumbent re-evaluation
+    def evaluate_incumbents(self, users: np.ndarray
+                            ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Vectorized ``Plan.evaluate(incumbent)`` across users.
+
+        Returns (no_incumbent, feasible, energy) — ``feasible``/``energy``
+        are meaningful where ``~no_incumbent``.  Users are grouped by
+        incumbent configuration; each group evaluates as one vectorized
+        pass whose per-user latency accumulation replays ``evaluate_config``
+        term by term (bit-identical doubles), with the failure-bitmap
+        dead-node check of ``Plan.evaluate`` applied first.
+        """
+        users = np.asarray(users, dtype=np.int64)
+        Us = len(users)
+        feas = np.zeros(Us, dtype=bool)
+        energy = np.full(Us, np.inf)
+        no_inc = ~self._solved[users] | (self._inc_exit[users] < 0)
+        idx = np.nonzero(~no_inc)[0]
+        if len(idx) == 0:
+            return no_inc, feas, energy
+        rows = np.empty((len(idx), 1 + self.L), dtype=np.int32)
+        rows[:, 0] = self._inc_exit[users[idx]]
+        rows[:, 1:] = self._inc_place[users[idx]]
+        v = np.ascontiguousarray(rows).view(
+            np.dtype((np.void, rows.shape[1] * 4))).ravel()
+        _, first, inv = np.unique(v, return_index=True, return_inverse=True)
+        order = np.argsort(inv, kind="stable")
+        bounds = np.searchsorted(inv[order], np.arange(len(first) + 1))
+        for g, j in enumerate(first):
+            k = int(rows[j, 0])
+            nb = self.profile.exits[k].block + 1
+            place = [int(n) for n in rows[j, 1:1 + nb]]
+            members = idx[order[bounds[g]:bounds[g + 1]]]
+            gl = users[members]
+            cfg = Config(placement=place, final_exit=k)
+            e_sc, lat, viol = self._eval_config_users(cfg, self._bw_vec[gl])
+            dead = self._masked[gl][:, place].any(axis=1)
+            f = ~viol
+            f[dead] = False
+            en = np.full(len(gl), e_sc)
+            en[dead] = np.inf
+            feas[members] = f
+            energy[members] = en
+        return no_inc, feas, energy
+
+    def _eval_config_users(self, config: Config, bwv: np.ndarray
+                           ) -> Tuple[float, np.ndarray, np.ndarray]:
+        """Vectorized ``problem.evaluate_config``: one configuration, many
+        users differing only in their source-link bandwidth vector.
+
+        Returns (energy, latency (Us,), violated (Us,)).  Energy has no
+        bandwidth term, so it is a single Python-float accumulation shared
+        by the group; the latency accumulates per user through the SAME
+        ordered sequence of IEEE-double adds as the scalar evaluator, so
+        every per-user result is bit-identical to ``evaluate_config`` on
+        that user's mutated network.
+        """
+        place = config.placement
+        k = config.final_exit
+        last_block = self.profile.exits[k].block
+        assert len(place) == last_block + 1
+        prof = self.profile
+        req = self.req
+        nodes = self.network0.nodes
+        src = self.src
+        sigma = req.sigma
+        base_bw = self._proto._bw
+        comp = self._proto._compute
+        inf = float("inf")
+        Us = len(bwv)
+
+        lat = np.zeros(Us)
+        viol = np.zeros(Us, dtype=bool)
+        energy_comp = 0.0
+        energy_comm = 0.0
+
+        def link(n: int, n2: int):
+            if n == src:
+                return bwv[:, n2]
+            if n2 == src:
+                return bwv[:, n]
+            return float(base_bw[n, n2])
+
+        if place[0] != src:
+            b_in = link(src, place[0])
+            bad = b_in <= 0
+            viol |= bad
+            b_eff = np.where(bad, inf, b_in)
+            lat += prof.input_bits / b_eff
+            energy_comm += (nodes[src].e_tx + nodes[place[0]].e_rx) \
+                * prof.input_bits
+            viol |= sigma * prof.input_bits > b_eff
+
+        for i in range(last_block + 1):
+            n = place[i]
+            ops = prof.block_ops_with_exit(i, k)
+            surv_in = prof.survival_entering_block(i, k)
+            c = float(comp[n])
+            if c <= 0:
+                viol[:] = True
+                c = inf
+            t_comp = ops / c
+            lat += t_comp
+            energy_comp += surv_in * nodes[n].power_active * t_comp
+            if sigma * surv_in * ops > c:
+                viol[:] = True
+
+            if i < last_block:
+                n2 = place[i + 1]
+                if n != n2:
+                    d = float(prof.cut_bits[i])
+                    surv_out = prof.survival_after_block(i, k)
+                    b = link(n, n2)
+                    if isinstance(b, float):
+                        bad_s = b <= 0
+                        if bad_s:
+                            viol[:] = True
+                            b = inf
+                        lat += d / b
+                        energy_comm += surv_out * (nodes[n].e_tx
+                                                   + nodes[n2].e_rx) * d
+                        if sigma * surv_out * d > b:
+                            viol[:] = True
+                    else:
+                        bad = b <= 0
+                        viol |= bad
+                        b_eff = np.where(bad, inf, b)
+                        lat += d / b_eff
+                        energy_comm += surv_out * (nodes[n].e_tx
+                                                   + nodes[n2].e_rx) * d
+                        viol |= sigma * surv_out * d > b_eff
+
+        if self.check_aggregate_load:
+            load = [0.0] * self.N
+            for i in range(last_block + 1):
+                load[place[i]] += (sigma
+                                   * prof.survival_entering_block(i, k)
+                                   * prof.block_ops_with_exit(i, k))
+            for n in range(self.N):
+                if load[n] > float(comp[n]):
+                    viol[:] = True
+
+        accuracy = prof.accuracy_of(k)
+        viol |= lat > req.delta * (1 + 1e-12)
+        if accuracy < req.alpha - 1e-12:
+            viol[:] = True
+        return energy_comp + energy_comm, lat, viol

@@ -180,6 +180,92 @@ def _banded_minplus_kernel(lo, dist_ref, e_ref, st_ref, out_ref, arg_ref):
     arg_ref[...] = jnp.argmin(cand, axis=0).astype(jnp.int32)
 
 
+def _banded_chain_kernel(lo, L, dist_ref, e_ref, st_ref, hist_ref, arg_ref):
+    """Chained banded relaxation: ALL layers of one scenario per launch.
+
+    dist_ref: [1, Np, Gp] the scenario's init grid; e_ref/st_ref:
+    [1, L, Np, Np]; hist/arg: [1, L, Np, Gp].  The distance grid is carried
+    across layers in VMEM (``d`` below) instead of round-tripping through
+    HBM between per-layer launches — the population engine's churn ticks
+    relax thousands of short chains, where the per-launch overhead of the
+    layer-by-layer kernel dominates.  The layer loop is a static unroll
+    (L is a trace-time constant), so every e/st/hist index is static.
+    """
+    d = dist_ref[0]                                      # [Np, Gp]
+    Np, Gp = d.shape
+    g = jax.lax.broadcasted_iota(jnp.int32, (Np, Np, Gp), 2)
+    for l in range(L):
+        e = e_ref[0, l]                                  # [Np(src), Np(tgt)]
+        st = st_ref[0, l]
+        gsrc = g - st[:, :, None]                        # [src, tgt, Gp]
+        ok = gsrc >= 0
+        if lo is not None:
+            ok &= (g >= lo) | (st[:, :, None] == 0)
+        gat = jnp.take_along_axis(
+            jnp.broadcast_to(d[:, None, :], (Np, Np, Gp)),
+            jnp.clip(gsrc, 0, Gp - 1), axis=2)
+        cand = jnp.where(ok, gat + e[:, :, None], BIG)
+        d = jnp.min(cand, axis=0)                        # [tgt, Gp]
+        hist_ref[0, l] = d
+        arg_ref[0, l] = jnp.argmin(cand, axis=0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("lo", "interpret"))
+def banded_minplus_chain_pallas(dist: jnp.ndarray, E: jnp.ndarray,
+                                st: jnp.ndarray, *, lo=None,
+                                interpret: bool = True):
+    """Chained banded relaxation with argmin carry, batched over scenarios.
+
+    dist: [B, N, G+1] init grids; E: [B, L, N, N] (inf = pruned); st:
+    [B, L, N, N] int steepness.  Returns (hist [B, L, N, G+1] float32 —
+    the distance grid AFTER each layer — and argmin source node
+    [B, L, N, G+1] int32, -1 where unreachable).  One kernel launch per
+    scenario relaxes its whole layer chain with the distance grid resident
+    in VMEM (see ``_banded_chain_kernel``); the grid axis is the scenario
+    batch, so a population tick's dirty cohort rides in one pallas_call.
+    """
+    B, N, Gp1 = dist.shape
+    L = E.shape[1]
+    dist = jnp.where(jnp.isfinite(dist), dist, BIG).astype(jnp.float32)
+    E = jnp.where(jnp.isfinite(E), E, BIG).astype(jnp.float32)
+    st = st.astype(jnp.int32)
+
+    def pad_to(x, m, axis, value):
+        r = (-x.shape[axis]) % m
+        if r == 0:
+            return x
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, r)
+        return jnp.pad(x, widths, constant_values=value)
+
+    # lane-pad depths, sublane-pad nodes; padded source rows carry BIG
+    # distances / BIG energies so they never win a min, and padded depth
+    # lanes are never gathered by a real target depth (gsrc = g - st <= g)
+    dist_p = pad_to(pad_to(dist, 128, 2, BIG), 8, 1, BIG)
+    Np, Gp = dist_p.shape[1:]
+    E_p = pad_to(pad_to(E, 8, 2, BIG), 8, 3, BIG)
+    st_p = pad_to(pad_to(st, 8, 2, 0), 8, 3, 0)
+
+    hist, arg = pl.pallas_call(
+        functools.partial(_banded_chain_kernel, lo, L),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, Np, Gp), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, L, Np, Np), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((1, L, Np, Np), lambda b: (b, 0, 0, 0)),
+        ],
+        out_specs=(pl.BlockSpec((1, L, Np, Gp), lambda b: (b, 0, 0, 0)),
+                   pl.BlockSpec((1, L, Np, Gp), lambda b: (b, 0, 0, 0))),
+        out_shape=(jax.ShapeDtypeStruct((B, L, Np, Gp), jnp.float32),
+                   jax.ShapeDtypeStruct((B, L, Np, Gp), jnp.int32)),
+        interpret=interpret,
+    )(dist_p, E_p, st_p)
+    unreached = hist >= BIG
+    hist = jnp.where(unreached, jnp.inf, hist)
+    arg = jnp.where(unreached, -1, arg)
+    return hist[:, :, :N, :Gp1], arg[:, :, :N, :Gp1]
+
+
 @functools.partial(jax.jit, static_argnames=("lo", "bm", "interpret"))
 def banded_minplus_pallas(dist: jnp.ndarray, E: jnp.ndarray, st: jnp.ndarray,
                           *, lo=None, bm: int = 8, interpret: bool = True):

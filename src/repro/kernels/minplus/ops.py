@@ -8,8 +8,8 @@ from typing import Tuple
 
 import jax.numpy as jnp
 
-from .minplus import (banded_minplus_pallas, minplus_argmin_pallas,
-                      minplus_pallas)
+from .minplus import (banded_minplus_chain_pallas, banded_minplus_pallas,
+                      minplus_argmin_pallas, minplus_pallas)
 
 
 def minplus_vecmat(dist: jnp.ndarray, W: jnp.ndarray, *,
@@ -46,3 +46,17 @@ def banded_minplus_argmin(dist: jnp.ndarray, E: jnp.ndarray, st: jnp.ndarray,
     (out [N, G+1], argmin source node [N, G+1] int32, -1 unreachable).
     O(N^2 G) work/memory vs the O(N^2 G^2) scattered ``minplus_vecmat``."""
     return banded_minplus_pallas(dist, E, st, lo=lo, interpret=interpret)
+
+
+def banded_minplus_chain(dist: jnp.ndarray, E: jnp.ndarray, st: jnp.ndarray,
+                         *, lo=None, interpret: bool = True
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chained banded relaxation: a whole (B, L)-layer batch per call.
+
+    dist: [B, N, G+1]; E/st: [B, L, N, N] -> (hist [B, L, N, G+1] — the
+    grid AFTER each layer — and argmin source node [B, L, N, G+1] int32,
+    -1 unreachable).  The distance grid stays in VMEM across the layer
+    chain (one launch per scenario), which is what the FIN population
+    engine drives per churn tick."""
+    return banded_minplus_chain_pallas(dist, E, st, lo=lo,
+                                       interpret=interpret)

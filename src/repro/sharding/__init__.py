@@ -1,6 +1,9 @@
-"""Partition-spec policies for the production mesh."""
+"""Partition-spec policies for the production mesh, plus the population
+device-mesh execution layer (user-axis sharded banded relaxations)."""
+from .population import MeshRelaxer, population_mesh
 from .specs import (batch_shardings, cache_spec, caches_shardings, dp_axes,
                     param_spec, params_shardings, scalar_sharding)
 
 __all__ = ["batch_shardings", "cache_spec", "caches_shardings", "dp_axes",
-           "param_spec", "params_shardings", "scalar_sharding"]
+           "param_spec", "params_shardings", "scalar_sharding",
+           "MeshRelaxer", "population_mesh"]

@@ -1,0 +1,115 @@
+"""Device-mesh execution layer for population-scale banded relaxations.
+
+The population engine's per-tick DP work is a stack of independent banded
+relaxation chains — one (L-1, N, G+1) chain per dirty cohort state (or per
+user when no two users share a quantized state).  That is embarrassingly
+data-parallel over the leading axis, so the mesh layer shards it the same
+way serving-oriented systems shard heavy multi-user traffic: a 1-D jax
+mesh over a ``"users"`` axis, the stacked (D, L-1, N, N) tensors laid out
+``PartitionSpec("users")`` on dim 0, and the jitted relaxation program
+running one shard per device with the distance grid carried on-device
+across the layer scan (nothing round-trips through the host between
+layers).
+
+On this container the mesh is host-platform devices
+(``XLA_FLAGS=--xla_force_host_platform_device_count=4`` before importing
+jax — see the README scaling quickstart); on TPU the same program lands on
+real chips with the banded Pallas kernel as the per-shard engine
+(``interpret=False`` in ``kernels/minplus``).  Like the ``jnp``/``pallas``
+backends, the mesh engine relaxes in float32 — ``Population`` widens its
+exit-prune guard accordingly (``tolerances.DIST_RTOL_F32``); the float64
+numpy fallback (``backend="minplus"``) remains the bit-exact reference.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.bellman_ford import _banded_relax_scan_jnp
+
+__all__ = ["population_mesh", "MeshRelaxer"]
+
+
+def population_mesh(n_devices: Optional[int] = None) -> Mesh:
+    """1-D mesh over the ``"users"`` axis (default: every visible device).
+
+    Start the process with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=K`` to expose K host
+    devices on CPU-only machines.
+    """
+    devs = jax.devices()
+    if n_devices is not None:
+        if n_devices > len(devs):
+            raise ValueError(f"requested {n_devices} devices but only "
+                             f"{len(devs)} are visible (set XLA_FLAGS="
+                             f"--xla_force_host_platform_device_count)")
+        devs = devs[:n_devices]
+    return Mesh(np.asarray(devs), axis_names=("users",))
+
+
+@functools.partial(jax.jit, static_argnames=("lo",))
+def _mesh_relax(init: jnp.ndarray, E: jnp.ndarray, st: jnp.ndarray,
+                lo: Optional[int]):
+    """Jitted chained relaxation: the distance grid is the scan carry, so
+    it lives in device memory across the whole layer chain — the only
+    host<->device transfers are the stacked inputs in and the
+    history/parents out, once per tick."""
+    return _banded_relax_scan_jnp(init, E, st, lo)
+
+
+class MeshRelaxer:
+    """Sharded chained banded relaxation over a ``"users"`` mesh axis.
+
+    ``relax`` has the ``bellman_ford.batched_banded_relax_argmin``
+    contract: init (D, N, G+1), E/steep (D, L, N, N) -> (hist
+    (D, L+1, N, G+1) float64, par (D, L, N, G+1) int64).  D is padded to a
+    device multiple with empty (all-inf) scenarios; each device relaxes
+    its shard independently — there is no cross-shard communication in the
+    banded DP, so scaling is linear until the per-device shard no longer
+    hides dispatch overhead.
+    """
+
+    def __init__(self, mesh: Optional[Mesh] = None):
+        self.mesh = mesh if mesh is not None else population_mesh()
+        self._sharding = NamedSharding(self.mesh, P("users"))
+
+    @property
+    def n_devices(self) -> int:
+        return int(self.mesh.devices.size)
+
+    def relax(self, init: np.ndarray, E: np.ndarray, steep: np.ndarray,
+              lo: Optional[int]) -> Tuple[np.ndarray, np.ndarray]:
+        D, N, Gp1 = init.shape
+        L = E.shape[1]
+        if L == 0:
+            return (np.asarray(init)[:, None].astype(np.float64),
+                    np.zeros((D, 0, N, Gp1), dtype=np.int64))
+        finite = np.isfinite(steep)
+        sti = np.where(finite, steep, 0).astype(np.int32)
+        Ef = np.where(finite, E, np.inf).astype(np.float32)
+        initf = np.asarray(init, np.float32)
+        n = self.n_devices
+        pad = (-D) % n
+        if pad:
+            initf = np.concatenate(
+                [initf, np.full((pad, N, Gp1), np.inf, np.float32)])
+            Ef = np.concatenate(
+                [Ef, np.full((pad, L, N, N), np.inf, np.float32)])
+            sti = np.concatenate([sti, np.zeros((pad, L, N, N), np.int32)])
+        dev = jax.device_put(jnp.asarray(initf), self._sharding)
+        Ed = jax.device_put(jnp.asarray(Ef), self._sharding)
+        sd = jax.device_put(jnp.asarray(sti), self._sharding)
+        hist, par = _mesh_relax(dev, Ed, sd, lo)
+        hist = np.asarray(hist, np.float64)[:D]
+        par = np.asarray(par).astype(np.int64)[:D]
+        # layer-0 history: the exact float64 init (parity with the jnp
+        # engine, whose callers read hist[0] as the untouched init grid)
+        hist[:, 0] = init
+        return hist, par

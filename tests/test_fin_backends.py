@@ -384,3 +384,24 @@ def test_relax_chunk_bytes_invalid_surfaces_from_solver(monkeypatch, scenario):
     prof = paper_profile("h2")
     with pytest.raises(ValueError, match="REPRO_RELAX_CHUNK_BYTES"):
         solve_many([prof] * 3, scenario, AppRequirements(0.8, 5e-3))
+
+
+def test_relax_chunk_rows(monkeypatch):
+    """The shared rows-per-chunk helper (one home for the max(1, budget //
+    row_bytes) arithmetic used by fin, the plan IR and the population
+    engine): floor division against the budget, never below one row, and
+    loud on nonsensical row sizes."""
+    from repro.core.bellman_ford import relax_chunk_rows
+
+    monkeypatch.setenv("REPRO_RELAX_CHUNK_BYTES", "1000")
+    assert relax_chunk_rows(100) == 10
+    assert relax_chunk_rows(1000) == 1
+    assert relax_chunk_rows(999) == 1
+    # a single scenario larger than the whole budget still gets one row
+    assert relax_chunk_rows(10_000) == 1
+    monkeypatch.delenv("REPRO_RELAX_CHUNK_BYTES", raising=False)
+    from repro.core.bellman_ford import _RELAX_CHUNK_BYTES_DEFAULT
+    assert relax_chunk_rows(1) == _RELAX_CHUNK_BYTES_DEFAULT
+    for bad in (0, -8):
+        with pytest.raises(ValueError, match="bytes_per_row"):
+            relax_chunk_rows(bad)

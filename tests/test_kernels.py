@@ -112,6 +112,35 @@ def test_banded_minplus_sweep(N, G, lo):
     np.testing.assert_array_equal(arg, arg_r)
 
 
+@pytest.mark.parametrize("B,L,N,G", [(1, 1, 4, 3), (3, 4, 7, 10),
+                                     (5, 2, 9, 25)])
+@pytest.mark.parametrize("lo", [None, 2])
+def test_banded_minplus_chain_matches_per_layer(B, L, N, G, lo):
+    """The chained argmin-carrying kernel (one launch per scenario, whole
+    layer chain in VMEM) must reproduce the per-layer kernel exactly —
+    same distances, same first-occurrence argmin tie order."""
+    from repro.kernels.minplus.ops import banded_minplus_chain
+
+    rng = np.random.default_rng(B * 1000 + L * 100 + N * 10 + G)
+    dist = rng.uniform(0, 10, (B, N, G + 1)).astype(np.float32)
+    dist[rng.uniform(size=dist.shape) < 0.5] = np.inf
+    E = rng.uniform(0, 5, (B, L, N, N)).astype(np.float32)
+    E[rng.uniform(size=E.shape) < 0.3] = np.inf
+    st = rng.integers(0, G + 1, (B, L, N, N)).astype(np.int32)
+    hist, par = banded_minplus_chain(jnp.asarray(dist), jnp.asarray(E),
+                                     jnp.asarray(st), lo=lo)
+    hist, par = np.asarray(hist), np.asarray(par)
+    for b in range(B):
+        d = jnp.asarray(dist[b])
+        for l in range(L):
+            want, arg = banded_minplus_argmin(d, jnp.asarray(E[b, l]),
+                                              jnp.asarray(st[b, l]), lo=lo)
+            np.testing.assert_array_equal(hist[b, l], np.asarray(want),
+                                          err_msg=f"b={b} l={l}")
+            np.testing.assert_array_equal(par[b, l], np.asarray(arg))
+            d = want
+
+
 def test_banded_minplus_equals_scattered_dense():
     """The banded kernel on (E, steep) equals the dense kernel on the
     scattered (S, S) matrix of the same feasible-graph layer."""

@@ -232,6 +232,34 @@ def test_solve_plans_equals_solve_fin(network):
         assert p.solution is s
 
 
+def test_solve_plans_heterogeneous_population(network):
+    """Mixed n_blocks / n_nodes / quantizer groups in ONE solve_plans call:
+    every shape/parameter group must relax correctly and stay bit-exact vs
+    per-plan Plan.solve() — only homogeneous groups were exercised before.
+    """
+    small = paper_scenario()                 # 3 nodes
+    big = paper_scenario(n_extra_edge=3)     # 6 nodes
+    specs = []
+    for app in APPS:                         # n_blocks 5..7 across apps
+        prof = paper_profile(app)
+        req = PAPER_MULTIAPP_REQS[app]
+        specs.append((small, prof, req, dict()))
+        specs.append((big, prof, req, dict()))
+        specs.append((big, prof, req, dict(quantize="ceil")))
+        specs.append((small, prof, req, dict(gamma=25)))
+    plans = [Plan(nw, prof, req, **kw) for nw, prof, req, kw in specs]
+    twins = [Plan(nw, prof, req, **kw) for nw, prof, req, kw in specs]
+    rng = np.random.default_rng(17)
+    for t in range(3):
+        qs = rng.uniform(0.3, 1.0, len(plans)) * 1e9
+        update_uplinks(plans, qs)
+        sols = solve_plans(plans)
+        for p, q in zip(twins, qs):
+            p.update_uplink(q)
+        for j, (p, s) in enumerate(zip(twins, sols)):
+            assert _same(s, p.solve()), (t, j)
+
+
 def test_solve_plans_mixed_params_and_masks(network):
     """Different gammas/quantizers in one call group correctly, masked
     plans ride along."""
