@@ -247,33 +247,125 @@ def _pop_e2e_row(*, users: int, ticks: int, assert_speedup: bool) -> Row:
                   agree=users))
 
 
-def _pop_always_resolve_row(*, users: int, ticks: int) -> Row:
-    """Population vs per-plan with hysteresis off: EVERY user re-solves
-    every tick, so this measures the state-deduped relax + shared-candidate
-    exact post-pass against the per-plan warm path, bit-exact per tick."""
+def _pop_always_resolve_row(*, users: int, ticks: int, scale_users: int,
+                            assert_speedup: bool) -> Row:
+    """Population always-resolve regime: EVERY user re-solves every tick.
+
+    The PR-5 headline is the vectorized frontier post-pass
+    (``frontier.scan_state_users`` + the shared first-candidate fast
+    tables: all (candidate, user) pairs scored as stacked arrays, one
+    exact evaluation per distinct candidate configuration cohort-wide)
+    against the PR-4 scalar ``_best_feasible``-per-group path.  Two
+    phases: the correctness phase at ``users`` runs per-plan, scalar-pop
+    and vector-pop on identical draws and asserts bit-exactness per tick
+    (``vector_postpass=False`` keeps the PR-4 scalar engine alive as the
+    same-machine oracle); the headline phase at ``scale_users`` measures
+    both population engines — per-user exact post-passes are the scalar
+    path's flat cost, while the vectorized path amortizes per cohort
+    state, which is where the population regime lives.
+    ``speedup_vs_scalar_postpass`` carries the >=3x acceptance floor (the
+    same-run PR-4-implementation baseline; compare ``user_ticks_per_s``
+    against BENCH_PR4.json's committed row for the cross-PR view)."""
+    # correctness phase: per-plan vs scalar-pop vs vector-pop, bit-exact
     draws = _ar1_draws(users, ticks)
     events = [[ChurnEvent("uplink", u, float(q[u])) for u in range(users)]
               for q in draws]
     plans = population_plans(users, n_extra_edge=2)
     oa = ChurnOrchestrator(plans, always_resolve=True)
-    t0 = time.perf_counter()
     ra = [oa.step(evs) for evs in events]
-    dt_plan = time.perf_counter() - t0
+    osc = ChurnOrchestrator(
+        population=population_cohorts(users, n_extra_edge=2,
+                                      vector_postpass=False),
+        always_resolve=True)
+    rs = [osc.step_arrays(quality=q) for q in draws]
     ob = ChurnOrchestrator(population=population_cohorts(users,
                                                          n_extra_edge=2),
                            always_resolve=True)
-    t0 = time.perf_counter()
     rb = [ob.step_arrays(quality=q) for q in draws]
-    dt_pop = time.perf_counter() - t0
-    for t, (x, y) in enumerate(zip(ra, rb)):
+    for t, (x, y, z) in enumerate(zip(ra, rb, rs)):
         assert x.n_resolved == y.n_resolved and x.energy == y.energy, (t,)
+        assert z.n_resolved == y.n_resolved and z.energy == y.energy, (t,)
     _assert_pop_matches_plans(ob, plans, "pop_always")
-    user_ticks = users * ticks
+    _assert_pop_matches_plans(osc, plans, "pop_always_scalar")
+
+    # headline phase: scalar vs vectorized post-pass at population scale
+    draws = _ar1_draws(scale_users, ticks)
+    dt_scalar = dt_pop = float("inf")
+    for _ in range(2):
+        o = ChurnOrchestrator(
+            population=population_cohorts(scale_users, n_extra_edge=2,
+                                          vector_postpass=False),
+            always_resolve=True)
+        t0 = time.perf_counter()
+        rs = [o.step_arrays(quality=q) for q in draws]
+        dt_scalar = min(dt_scalar, time.perf_counter() - t0)
+        o = ChurnOrchestrator(
+            population=population_cohorts(scale_users, n_extra_edge=2),
+            always_resolve=True)
+        t0 = time.perf_counter()
+        rv = [o.step_arrays(quality=q) for q in draws]
+        dt_pop = min(dt_pop, time.perf_counter() - t0)
+        for t, (x, y) in enumerate(zip(rs, rv)):
+            assert x.n_resolved == y.n_resolved and x.energy == y.energy, \
+                (t,)
+    speedup_scalar = dt_scalar / dt_pop
+    if assert_speedup:
+        assert speedup_scalar >= 3.0, \
+            f"vectorized post-pass only {speedup_scalar:.2f}x over the " \
+            f"scalar path (need 3x)"
+    user_ticks = scale_users * ticks
     return Row("pop_ar1_always_resolve", dt_pop / user_ticks * 1e6,
-               kv(users=users, ticks=ticks,
+               kv(users=scale_users, ticks=ticks,
                   user_ticks_per_s=user_ticks / dt_pop,
-                  perplan_user_ticks_per_s=user_ticks / dt_plan,
-                  speedup_vs_perplan=dt_plan / dt_pop, agree=users))
+                  scalar_postpass_user_ticks_per_s=user_ticks / dt_scalar,
+                  speedup_vs_scalar_postpass=speedup_scalar,
+                  agree_users=users, agree_scale_users=scale_users))
+
+
+def _frontier_policy_row(*, users: int, ticks: int,
+                         assert_total: bool) -> Row:
+    """Frontier placement policy vs argmin on the AR(1) churn scenario
+    (fading + mobility + failure/recovery cycles, per-tick re-planning):
+    the argmin policy migrates every user back after every recovery; the
+    frontier policy charges ``migration_weight`` J-per-bit against each
+    Pareto row and keeps the incumbent when the energy delta does not pay
+    for the moved state.  The acceptance check is the combined
+    (energy + migration_weight * migration_bits) total."""
+    w = 1e-8
+    trace = churn_trace(users, ticks, seed=5, q_mean=0.5, sigma=0.15,
+                        p_fail=0.3, p_recover=0.5, fail_nodes=(4,),
+                        p_move=0.1, n_edge=3)
+
+    def run(policy):
+        orch = ChurnOrchestrator(
+            population=population_cohorts(users, n_extra_edge=2),
+            always_resolve=True, placement_policy=policy,
+            migration_weight=w)
+        t0 = time.perf_counter()
+        energy = bits = migrations = 0.0
+        for evs in trace:
+            rep = orch.step(evs)
+            energy += rep.energy
+            bits += rep.migration_bits
+            migrations += rep.n_migrations
+        return energy, bits, migrations, time.perf_counter() - t0
+
+    e_arg, b_arg, m_arg, _ = run("argmin")
+    e_fr, b_fr, m_fr, dt = run("frontier")
+    comb_arg = e_arg + w * b_arg
+    comb_fr = e_fr + w * b_fr
+    if assert_total:
+        assert comb_fr <= comb_arg, (comb_fr, comb_arg)
+        assert b_fr <= b_arg
+    user_ticks = users * ticks
+    return Row("pop_frontier_policy_e2e", dt / user_ticks * 1e6,
+               kv(users=users, ticks=ticks, migration_weight=w,
+                  user_ticks_per_s=user_ticks / dt,
+                  argmin_energy=e_arg, argmin_bits=b_arg,
+                  argmin_migrations=int(m_arg), argmin_combined=comb_arg,
+                  frontier_energy=e_fr, frontier_bits=b_fr,
+                  frontier_migrations=int(m_fr), frontier_combined=comb_fr,
+                  combined_saving=1.0 - comb_fr / comb_arg))
 
 
 def _pop_scale_row(name: str, *, users: int, ticks: int) -> Row:
@@ -355,7 +447,12 @@ def run() -> Iterable[Row]:
     yield _pop_e2e_row(users=pop_users, ticks=pop_ticks,
                        assert_speedup=not smoke())
     yield _pop_always_resolve_row(users=pop_users // 5,
-                                  ticks=pop_ticks)
+                                  ticks=pop_ticks,
+                                  scale_users=pop_users * 2,
+                                  assert_speedup=not smoke())
+    yield _frontier_policy_row(users=24 if smoke() else 48,
+                               ticks=pop_ticks + 4,
+                               assert_total=not smoke())
     for name, u, t in scales:
         yield _pop_scale_row(name, users=u, ticks=t)
     yield _pop_mesh_row(users=48 if smoke() else 96, ticks=pop_ticks)

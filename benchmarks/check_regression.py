@@ -4,10 +4,13 @@ baseline and fail when a tracked ratio metric regresses too far.
 Usage:
 
     python -m benchmarks.check_regression fresh.json \
-        --baseline BENCH_PR3.json --key speedup --min-ratio 0.8
+        [--baseline BENCH_PR4.json] --key speedup --min-ratio 0.8
 
-Rows are matched by ``name`` across every bench section of both documents
-(the ``{"benches": {...}}`` format of ``benchmarks.run --json``); only rows
+``--baseline`` defaults to the newest committed ``BENCH_PR<n>.json`` in
+the repository root (highest ``<n>``), so CI keeps gating against the
+latest committed numbers without a workflow edit per PR.  Rows are
+matched by ``name`` across every bench section of both documents (the
+``{"benches": {...}}`` format of ``benchmarks.run --json``); only rows
 present in BOTH and carrying ``--key`` are compared.  A fresh value below
 ``min_ratio * baseline`` fails the gate with a per-row report — the CI
 smoke job uses it to catch warm-vs-cold speedup regressions of the plan-IR
@@ -21,8 +24,10 @@ from __future__ import annotations
 
 import argparse
 import json
+import re
 import sys
-from typing import Dict
+from pathlib import Path
+from typing import Dict, Optional
 
 
 def _rows(doc: dict) -> Dict[str, dict]:
@@ -33,11 +38,40 @@ def _rows(doc: dict) -> Dict[str, dict]:
     return out
 
 
+def default_baseline() -> Optional[Path]:
+    """Newest committed ``BENCH_PR<n>.json`` (highest n) in the repo root.
+
+    Candidates come from ``git ls-files`` so an uncommitted fresh run
+    dumped at the repo root cannot silently become its own baseline; when
+    git is unavailable (an exported tree) the working-tree glob is the
+    fallback."""
+    import subprocess
+    root = Path(__file__).resolve().parent.parent
+    try:
+        out = subprocess.run(
+            ["git", "ls-files", "BENCH_PR*.json"], cwd=root,
+            capture_output=True, text=True, check=True).stdout
+        names = [n for n in out.splitlines() if n]
+    except (OSError, subprocess.CalledProcessError):
+        names = [p.name for p in root.glob("BENCH_PR*.json")]
+    best: Optional[Path] = None
+    best_n = -1
+    for name in names:
+        m = re.fullmatch(r"BENCH_PR(\d+)\.json", name)
+        if m is None:
+            continue
+        n = int(m.group(1))
+        if n > best_n:
+            best, best_n = root / name, n
+    return best
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("fresh", help="fresh benchmarks.run --json output")
-    ap.add_argument("--baseline", required=True,
-                    help="committed baseline JSON (e.g. BENCH_PR3.json)")
+    ap.add_argument("--baseline", default=None,
+                    help="committed baseline JSON (e.g. BENCH_PR4.json); "
+                         "default: the newest committed BENCH_PR<n>.json")
     ap.add_argument("--key", default="speedup",
                     help="ratio metric to gate on (default: speedup)")
     ap.add_argument("--min-ratio", type=float, default=0.8,
@@ -49,9 +83,26 @@ def main() -> int:
                          "warm-vs-cold rows; microbench rows are noisier)")
     args = ap.parse_args()
 
+    baseline = args.baseline
+    if baseline is None:
+        found = default_baseline()
+        if found is None:
+            print("error: no committed BENCH_*.json baseline found and "
+                  "no --baseline given", file=sys.stderr)
+            return 2
+        baseline = str(found)
+        print(f"baseline: {found.name} (newest committed)")
+    if Path(args.fresh).resolve() == Path(baseline).resolve():
+        # a fresh run saved over the newest BENCH_PR<n>.json would gate
+        # against itself (every ratio exactly 1.0) — refuse loudly
+        print(f"error: fresh output and baseline are the same file "
+              f"({baseline}); write the fresh run outside the repo root "
+              f"or pass --baseline explicitly", file=sys.stderr)
+        return 2
+
     with open(args.fresh) as f:
         fresh = _rows(json.load(f))
-    with open(args.baseline) as f:
+    with open(baseline) as f:
         base = _rows(json.load(f))
 
     compared = 0
@@ -78,7 +129,7 @@ def main() -> int:
                             f"from {b:.3f} ({(1 - ratio) * 100:.0f}%)")
     if not compared:
         print(f"error: no rows with key {args.key!r} shared between "
-              f"{args.fresh} and {args.baseline}", file=sys.stderr)
+              f"{args.fresh} and {baseline}", file=sys.stderr)
         return 2
     if failures:
         print(f"\n{len(failures)} regression(s):", file=sys.stderr)

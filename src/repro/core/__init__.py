@@ -20,6 +20,8 @@ from .extended_graph import (ExtendedGraph, build_extended_graph,
 from .feasible_graph import (FeasibleGraph, build_feasible_graph,
                              build_feasible_graphs)
 from .fin import solve_fin, solve_many, fin_all_exit_costs
+from .frontier import (FrontierRow, ParetoFrontier, brute_force_frontier,
+                       frontier_from_rows, pareto_mask)
 from .plan import (Plan, PlanStats, solve_plans, update_uplinks,
                    migration_delta)
 from .mcp import solve_mcp
@@ -40,6 +42,8 @@ __all__ = [
     "build_extended_graph", "build_extended_graphs", "to_networkx",
     "FeasibleGraph", "build_feasible_graph", "build_feasible_graphs",
     "solve_fin", "solve_many", "fin_all_exit_costs",
+    "FrontierRow", "ParetoFrontier", "brute_force_frontier",
+    "frontier_from_rows", "pareto_mask",
     "Plan", "PlanStats", "solve_plans", "update_uplinks", "migration_delta",
     "solve_mcp",
     "solve_opt", "run_multiapp", "MultiAppResult", "AppStats",

@@ -448,6 +448,99 @@ def batched_banded_relax_minarg(init: np.ndarray, E: np.ndarray,
     return np.stack(hist, axis=1), np.stack(pars, axis=1)
 
 
+def batched_banded_relax_kbest(init: np.ndarray, E: np.ndarray,
+                               steep: np.ndarray, K: int,
+                               lo: Optional[int] = None,
+                               *, idx: Optional[np.ndarray] = None
+                               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Banded k-slot relaxation: the K cheapest paths per (node, depth).
+
+    init: (B, N, G+1); E/steep: (B, L, N, N).  Returns (hist
+    (B, L+1, N, G+1, K), par_n, par_k (B, L, N, G+1, K) int64, -1 where the
+    slot is unused); the parent *depth* is implied by the band: g_src =
+    g - steep[par_n, n].  Distances and slot order are bit-for-bit equal to
+    the dense ``batched_layered_relax_kbest`` on the scattered (S, S)
+    matrices: per target state each source node contributes at most one
+    candidate depth, so the banded (source-node-major, rank-minor) pool
+    order equals the dense flat-state (source-state-major, rank-minor)
+    order, and both engines pick the K smallest with a stable argsort over
+    the same float64 sums.  This is the k-best engine behind the Pareto
+    frontier subsystem (``core/frontier.py``): where the K=1 engines keep
+    only the energy argmin per state, the k slots carry the alternative
+    placements the frontier is built from.
+
+    ``idx`` as in :func:`batched_banded_relax_min` — the incremental
+    ``Plan`` layer passes its maintained gather indices so warm k-best
+    re-solves skip the index build.
+    """
+    if K < 1:
+        raise ValueError(f"K must be >= 1, got {K}")
+    B, N, Gp1 = init.shape
+    L = E.shape[1]
+    dist = np.full((B, N, Gp1, K), np.inf)
+    dist[..., 0] = np.asarray(init, dtype=np.float64)
+    if L == 0:
+        return (dist[:, None], np.zeros((B, 0, N, Gp1, K), dtype=np.int64),
+                np.zeros((B, 0, N, Gp1, K), dtype=np.int64))
+    if idx is None:
+        idx = _banded_gather_idx(steep, Gp1, lo)         # (B, L, N, N, G+1)
+    pad = np.empty((B, N, Gp1 + 1, K))                   # dist + inf column
+    pad[:, :, Gp1] = np.inf
+    b_i = np.arange(B)[:, None, None, None]
+    n_i = np.arange(N)[None, :, None, None]
+    hist = [dist]
+    pns, pks = [], []
+    for l in range(L):
+        pad[:, :, :Gp1] = dist
+        cand = pad[b_i, n_i, idx[:, l]]                  # (B, N, N, G+1, K)
+        cand += E[:, l, :, :, None, None]
+        # candidate pool per target state: source-node-major, rank-minor —
+        # the same relative order as the dense flat-state pool (states are
+        # node-major and each source node contributes one depth per target)
+        pool = np.ascontiguousarray(np.moveaxis(cand, 4, 2))
+        pool = pool.reshape(B, N * K, N, Gp1)
+        sel = np.argsort(pool, axis=1, kind="stable")[:, :K]   # (B, K, N, G+1)
+        val = np.take_along_axis(pool, sel, axis=1)
+        dist = np.moveaxis(val, 1, 3)                    # (B, N, G+1, K)
+        src = np.moveaxis(sel, 1, 3)
+        ok = np.isfinite(dist)
+        pns.append(np.where(ok, src // K, -1))
+        pks.append(np.where(ok, src % K, -1))
+        hist.append(dist)
+    return (np.stack(hist, axis=1), np.stack(pns, axis=1).astype(np.int64),
+            np.stack(pks, axis=1).astype(np.int64))
+
+
+def batched_banded_relax_kbest_pallas(init: np.ndarray, E: np.ndarray,
+                                      steep: np.ndarray, K: int,
+                                      lo: Optional[int] = None
+                                      ) -> Tuple[np.ndarray, np.ndarray,
+                                                 np.ndarray]:
+    """k-best variant of the chained banded pallas engine (float32).
+
+    Same contract as :func:`batched_banded_relax_kbest`; the whole
+    (B, L) batch relaxes as one chained kernel launch per scenario with
+    the (N, K, G+1) k-slot distance grid carried in VMEM across layers
+    (see ``kernels/minplus``).  Slot order matches the numpy engine's
+    stable-argsort order (iterated first-occurrence argmin extraction);
+    distances carry the usual f32 relaxation error.
+    """
+    from repro.kernels.minplus.ops import banded_minplus_chain_kbest
+    B, N, Gp1 = init.shape
+    finite = np.isfinite(steep)
+    sti = np.where(finite, steep, 0).astype(np.int32)
+    Ef = np.where(finite, E, np.inf).astype(np.float32)
+    import jax.numpy as _jnp
+    h, pn, pk = banded_minplus_chain_kbest(
+        _jnp.asarray(np.asarray(init, np.float32)), _jnp.asarray(Ef),
+        _jnp.asarray(sti), K, lo=lo)
+    init64 = np.full((B, 1, N, Gp1, K), np.inf)
+    init64[:, 0, :, :, 0] = init
+    hist = np.concatenate([init64, np.asarray(h, np.float64)], axis=1)
+    return (hist, np.asarray(pn).astype(np.int64),
+            np.asarray(pk).astype(np.int64))
+
+
 def banded_parent_np(dist_prev: np.ndarray, E_l: np.ndarray, st_l: np.ndarray,
                      n: int, g: int, lo: Optional[int]) -> Tuple[int, int]:
     """Recover the argmin parent of target state (n, g) for one layer.

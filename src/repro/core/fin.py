@@ -14,7 +14,8 @@ O(N^2 G^2) dense (S, S) flattened-state relaxation.  Backends (see
                bit-exact float64, lazy argmin parents;
   ``dense``    the dense flattened-state numpy relaxation over (S, S)
                matrices (alias ``numpy``) — kept for equivalence testing
-               and as the k-best engine;
+               (including as the k-best oracle for the banded k-slot
+               engines);
   ``jnp``      jitted banded relaxation (float32) for large instances;
   ``pallas``   the banded ``minplus`` TPU kernel (kernels/minplus).
 
@@ -42,6 +43,8 @@ import numpy as np
 
 from .bellman_ford import (_RELAX_CHUNK_BYTES_DEFAULT,
                            batched_banded_relax_argmin,
+                           batched_banded_relax_kbest,
+                           batched_banded_relax_kbest_pallas,
                            batched_banded_relax_min,
                            batched_layered_relax_kbest,
                            batched_layered_relax_min, banded_parent_np,
@@ -77,6 +80,14 @@ _relax_chunk_bytes = relax_chunk_bytes
 def _dist_tol(backend: str) -> float:
     """Exit-prune guard for a user-facing backend name (see tolerances.py)."""
     return dist_tol(DP_BACKENDS.get(backend))
+
+
+def _validate_n_best(n_best: int) -> int:
+    """``n_best`` is the k-best slot count — a silent ``max(1, n_best)``
+    clamp would turn a caller's typo'd 0 or -3 into the single-best DP."""
+    if n_best < 1:
+        raise ValueError(f"n_best must be >= 1, got {n_best}")
+    return int(n_best)
 
 
 @dataclass
@@ -172,6 +183,51 @@ class _BandedArgDP:
         pn = int(self.par_n[i - 1, n, g])
         assert pn >= 0
         return pn, g - int(self.steep[i - 1, pn, n]), 0
+
+
+class _BandedKDP:
+    """Banded k-best DP result with stored (node, rank) parents.
+
+    ``hist`` is the (L, N, G+1, K) k-slot distance grid of the banded
+    k-best engines (``bellman_ford.batched_banded_relax_kbest`` and its
+    pallas chain variant); the parent depth is implied by the band:
+    g_src = g - steep[i-1, par_n, n].  Slot order (hence every backtrack)
+    is identical to the dense ``_DPResult`` k-best path, and this is the
+    DP state the Pareto-frontier subsystem's k-best rows come from.
+    """
+    __slots__ = ("dist", "par_n", "par_k", "steep", "_dmin")
+
+    def __init__(self, hist: np.ndarray, par_n: np.ndarray,
+                 par_k: np.ndarray, steep: np.ndarray):
+        self.dist = hist               # (L, N, G+1, K)
+        self.par_n = par_n             # (L-1, N, G+1, K)
+        self.par_k = par_k             # (L-1, N, G+1, K)
+        self.steep = steep             # (L-1, N, N)
+
+    def parent(self, i: int, n: int, g: int, k: int) -> Tuple[int, int, int]:
+        pn = int(self.par_n[i - 1, n, g, k])
+        assert pn >= 0
+        return (pn, g - int(self.steep[i - 1, pn, n]),
+                int(self.par_k[i - 1, n, g, k]))
+
+
+def _banded_dp_kbest(fgs: Sequence[FeasibleGraph], K: int,
+                     engine: str) -> List["_BandedKDP"]:
+    """Batched banded k-best DPs for a same-shape group of scenarios.
+
+    ``banded``/``jnp`` relax through the float64 numpy k-best engine
+    (bit-exact vs the dense k-best path); ``pallas`` through the chained
+    k-slot kernel (f32 distances, identical slot order)."""
+    f0 = fgs[0]
+    gE, gst, ginit = batch_banded_tensors(list(fgs))
+    lo = f0.depth_window_lo
+    if engine == "pallas":
+        hist, pn, pk = batched_banded_relax_kbest_pallas(ginit, gE, gst, K,
+                                                         lo)
+    else:
+        hist, pn, pk = batched_banded_relax_kbest(ginit, gE, gst, K, lo)
+    return [_BandedKDP(hist[j], pn[j], pk[j], gst[j])
+            for j in range(len(fgs))]
 
 
 def _banded_dp_single(fg: FeasibleGraph, engine: str) -> "_DPState":
@@ -274,16 +330,16 @@ def _run_dp_batch(fgs: Sequence[FeasibleGraph], n_best: int = 1,
     exactly the sum of their homogeneous groups.  Distances match
     per-scenario solves bit-for-bit on the float64 numpy engines.
     """
+    K = _validate_n_best(n_best)
     if backend == "python":
         return [_run_dp(fg, n_best=n_best) for fg in fgs]
     engine = DP_BACKENDS.get(backend)
     if engine is None:
         raise ValueError(f"unknown FIN backend {backend!r} "
                          f"(expected python or one of {sorted(DP_BACKENDS)})")
-    K = max(1, n_best)
-    if K > 1 or engine == "pallas":
-        # k-best is dense-numpy-only; the pallas kernel launches once per
-        # (scenario, layer) — both fall back to a per-scenario pass.
+    if K == 1 and engine == "pallas":
+        # the K=1 pallas kernel launches once per (scenario, layer) — fall
+        # back to a per-scenario pass
         return [_run_dp_single(fg, n_best=n_best, backend=backend)
                 for fg in fgs]
 
@@ -293,6 +349,21 @@ def _run_dp_batch(fgs: Sequence[FeasibleGraph], n_best: int = 1,
                           []).append(j)
     out: List[Optional["_DPState"]] = [None] * len(fgs)
     banded = engine in ("banded", "jnp")
+    if K > 1:
+        # k-best rides the banded k-slot engines batched per shape group;
+        # only the dense backend keeps the per-scenario dense k-best pass
+        # (its (S, S) scatter is the equivalence oracle).
+        if not banded and engine != "pallas":
+            return [_run_dp_single(fg, n_best=n_best, backend=backend)
+                    for fg in fgs]
+        for (L, N, G, lam), idxs in groups.items():
+            chunk = relax_chunk_rows(N * N * (G + 1) * K * 16)
+            for start in range(0, len(idxs), chunk):
+                part = idxs[start:start + chunk]
+                for pos, dp in zip(part, _banded_dp_kbest(
+                        [fgs[j] for j in part], K, engine)):
+                    out[pos] = dp
+        return out
     for (L, N, G, lam), idxs in groups.items():
         S = N * (G + 1)
         window = G - lam if lam < G else None
@@ -331,6 +402,7 @@ def _run_dp_batch(fgs: Sequence[FeasibleGraph], n_best: int = 1,
 def _run_dp_single(fg: FeasibleGraph, n_best: int = 1,
                    backend: str = "minplus") -> "_DPState":
     """Vectorized DP for one scenario (dispatches on ``backend``)."""
+    K = _validate_n_best(n_best)
     if backend == "python":
         return _run_dp(fg, n_best=n_best)
     engine = DP_BACKENDS.get(backend)
@@ -339,15 +411,17 @@ def _run_dp_single(fg: FeasibleGraph, n_best: int = 1,
                          f"(expected python or one of {sorted(DP_BACKENDS)})")
     ext = fg.ext
     N, G = ext.n_nodes, fg.gamma
-    K = max(1, n_best)
-    if K == 1 and engine in ("banded", "jnp", "pallas"):
-        return _banded_dp_single(fg, engine)
+    if engine in ("banded", "jnp", "pallas"):
+        if K == 1:
+            return _banded_dp_single(fg, engine)
+        return _banded_dp_kbest([fg], K, engine)[0]
     Ws = fg.layer_matrices()
     init = fg.init_vector()
     if K == 1:
         hist = batched_layered_relax_min(init[None], Ws[None])
         return _FlatDP(hist[0], Ws, N, G)
-    # k-best keeps the K cheapest slots per state (dense numpy relaxation).
+    # k-best keeps the K cheapest slots per state (dense numpy relaxation,
+    # the equivalence oracle for the banded k-slot engines).
     hist, ps, pk = batched_layered_relax_kbest(init[None], Ws[None], K)
     return _dp_from_flat(hist[0], ps[0], pk[0], N, G)
 
@@ -519,8 +593,10 @@ def solve_fin(network: Network, profile: DNNProfile, req: AppRequirements,
     ``jnp``/``pallas`` accelerated, ``python`` legacy oracle); all return the
     same configuration.  ``n_best>1`` keeps the k cheapest paths per (node,
     depth) state — our beyond-paper fix for small-gamma quantizer collisions
-    (see _DPResult)."""
+    (see _DPResult) and the slot count behind ``Plan.frontier()``'s k-best
+    Pareto rows (core/frontier.py)."""
     t0 = time.perf_counter()
+    _validate_n_best(n_best)
     ext = build_extended_graph(network, profile, req)
 
     admissible_exits = [k for k in range(profile.n_exits)
@@ -616,6 +692,7 @@ def solve_many(profiles: Union[DNNProfile, Sequence[DNNProfile]],
     relaxes as its own stacked chain (see ``_run_dp_batch``).
     """
     t0 = time.perf_counter()
+    _validate_n_best(n_best)
     profs, nets, reqs = _broadcast_scenarios(profiles, networks, requirements)
     B = len(profs)
 

@@ -20,7 +20,16 @@ through such churn:
     indices, DP grids reused outright when the quantized tensors did not
     move;
   * migration accounting: every placement change is charged the moved
-    blocks and their migration bits (``plan.migration_delta``).
+    blocks and their migration bits (``plan.migration_delta``);
+  * *placement policy*: ``"argmin"`` (default) re-places on the energy
+    argmin, the paper's FIN behaviour; ``"frontier"`` scores every row of
+    the user's Pareto frontier (``core/frontier.py``) — PLUS the still-
+    feasible incumbent — as ``energy + migration_weight * migration_bits``
+    and deploys the cheapest, so a re-placing user can keep a slightly-
+    costlier incumbent (or take a near-argmin row that reuses its current
+    hosts) when the energy delta does not pay for moving the blocks' live
+    state.  With ``migration_weight=0`` the frontier policy selects
+    exactly the argmin row.
 
 ``hysteresis=0`` with ``always_resolve=True`` degenerates to per-tick
 optimal re-planning whose configurations are bit-exact vs cold per-user
@@ -35,9 +44,10 @@ from typing import Dict, Iterable, List, Optional, Sequence, Union
 import numpy as np
 
 from .dnn_profile import DNNProfile
+from .frontier import ParetoFrontier, frontier_pick
 from .plan import Plan, migration_delta, solve_plans, update_uplinks
 from .population import Population
-from .problem import AppRequirements
+from .problem import AppRequirements, Config
 from .scenarios import (MOBILE_UPLINK_BPS, ChurnEvent, churn_trace,
                         paper_scenario)
 from .system_model import Network
@@ -110,13 +120,28 @@ class ChurnOrchestrator:
                  hysteresis: float = 0.05,
                  uplink_bps: float = MOBILE_UPLINK_BPS,
                  detach_frac: float = 0.25,
-                 always_resolve: bool = False):
+                 always_resolve: bool = False,
+                 placement_policy: str = "argmin",
+                 migration_weight: float = 0.0,
+                 frontier_k: int = 4):
         if (plans is None) == (population is None):
             raise ValueError("pass exactly one of plans= or population=")
+        if placement_policy not in ("argmin", "frontier"):
+            raise ValueError(f"unknown placement_policy "
+                             f"{placement_policy!r} (expected 'argmin' or "
+                             f"'frontier')")
+        if migration_weight < 0:
+            raise ValueError(f"migration_weight must be >= 0, got "
+                             f"{migration_weight}")
+        if frontier_k < 1:
+            raise ValueError(f"frontier_k must be >= 1, got {frontier_k}")
         self.hysteresis = hysteresis
         self.uplink_bps = uplink_bps
         self.detach_frac = detach_frac
         self.always_resolve = always_resolve
+        self.placement_policy = placement_policy
+        self.migration_weight = float(migration_weight)
+        self.frontier_k = int(frontier_k)
         self._tick = 0
         self.plans: Optional[List[Plan]] = None
         self.pops: Optional[List[Population]] = None
@@ -266,7 +291,38 @@ class ChurnOrchestrator:
             old = [self.plans[u].solution for u in resolve]
             sols = solve_plans([self.plans[u] for u in resolve])
             rep.n_resolved = len(resolve)
+            frontier_mode = self.placement_policy == "frontier"
             for u, prev, sol in zip(resolve, old, sols):
+                p = self.plans[u]
+                prev_cfg = (prev.config if prev is not None and prev.found
+                            else None)
+                if frontier_mode:
+                    fr = p.frontier(k_per_exit=self.frontier_k)
+                    if prev_cfg is not None:
+                        ev_prev = p.evaluate(prev_cfg)
+                        keep_ok, keep_e = ev_prev.feasible, ev_prev.energy
+                    else:
+                        ev_prev, keep_ok, keep_e = None, False, np.inf
+                    cfg, energy, moved, bits, kept = self._frontier_pick(
+                        fr, prev_cfg, keep_ok, keep_e, p.profile)
+                    if cfg is None:
+                        rep.n_failed += 1
+                        self._cur_energy[u] = np.inf
+                        self._ref_energy[u] = np.inf
+                        continue
+                    if kept:
+                        p.adopt(prev_cfg, ev_prev)
+                    elif (not sol.feasible
+                          or cfg.placement != sol.config.placement
+                          or cfg.final_exit != sol.config.final_exit):
+                        p.adopt(cfg)       # a non-argmin frontier row
+                    self._ref_energy[u] = energy
+                    self._cur_energy[u] = energy
+                    if moved:
+                        rep.n_migrations += 1
+                        rep.blocks_moved += moved
+                        rep.migration_bits += bits
+                    continue
                 if not sol.feasible:
                     rep.n_failed += 1
                     self._cur_energy[u] = np.inf
@@ -274,7 +330,6 @@ class ChurnOrchestrator:
                     continue
                 self._ref_energy[u] = sol.energy
                 self._cur_energy[u] = sol.energy
-                prev_cfg = prev.config if prev is not None else None
                 moved, bits = migration_delta(self.plans[u].profile,
                                               prev_cfg, sol.config)
                 if moved:
@@ -433,6 +488,10 @@ class ChurnOrchestrator:
             loc_res = loc[res]
             old_found = p.inc_found[loc_res].copy()
             old_place = p._inc_place[loc_res].copy()
+            if self.placement_policy == "frontier":
+                self._frontier_resolve(rep, p, gl_res, loc_res, old_found,
+                                       old_place, migrated, moved_bits)
+                continue
             p.solve(loc_res, build_solutions=False)
             rep.n_resolved += len(loc_res)
             new_found = p.inc_found[loc_res]
@@ -474,6 +533,62 @@ class ChurnOrchestrator:
 
         fin = np.isfinite(self._cur_energy)
         rep.energy = float(self._cur_energy[fin].sum())
+
+    # -------------------------------------------------- frontier policy core
+    def _frontier_pick(self, fr: ParetoFrontier,
+                       prev_cfg: Optional[Config], keep_ok: bool,
+                       keep_energy: float, profile: DNNProfile):
+        """One user's frontier-aware placement decision — the shared
+        ``frontier.frontier_pick`` core (the serve engine's failover
+        re-splits run the same function)."""
+        return frontier_pick(fr, prev_cfg, keep_ok, keep_energy, profile,
+                             self.migration_weight)
+
+    def _frontier_resolve(self, rep: TickReport, p: Population,
+                          gl_res: np.ndarray, loc_res: np.ndarray,
+                          old_found: np.ndarray, old_place: np.ndarray,
+                          migrated: np.ndarray,
+                          moved_bits: np.ndarray) -> None:
+        """Population-mode frontier re-placement for one cohort's resolve
+        set: per-user frontiers come from the shared cohort-state
+        candidates (vectorized exact evaluation), the keep-option from the
+        vectorized incumbent re-check, and the per-user decisions are the
+        same ``_frontier_pick`` the per-plan path runs — the two
+        representations make identical choices tick by tick."""
+        old_exit = p._inc_exit[loc_res].copy()
+        # keep-option: incumbents re-evaluated under the new channel state
+        # (dead-node aware) — must precede set_incumbents
+        no_inc, keep_feas, keep_energy = p.evaluate_incumbents(loc_res)
+        frs = p.frontiers(loc_res, k_per_exit=self.frontier_k)
+        rep.n_resolved += len(loc_res)
+        cfgs: List[Optional[Config]] = []
+        energies: List[float] = []
+        for i, fr in enumerate(frs):
+            prev_cfg = None
+            if old_found[i]:
+                nb = p.profile.exits[int(old_exit[i])].block + 1
+                prev_cfg = Config(
+                    placement=[int(x) for x in old_place[i][:nb]],
+                    final_exit=int(old_exit[i]))
+            keep_ok = bool(keep_feas[i]) and not bool(no_inc[i])
+            cfg, energy, moved, bits, _kept = self._frontier_pick(
+                fr, prev_cfg, keep_ok, float(keep_energy[i]), p.profile)
+            cfgs.append(cfg)
+            energies.append(energy)
+            u = int(gl_res[i])
+            if cfg is None:
+                rep.n_failed += 1
+                self._cur_energy[u] = np.inf
+                self._ref_energy[u] = np.inf
+                continue
+            self._cur_energy[u] = energy
+            self._ref_energy[u] = energy
+            if moved:
+                rep.n_migrations += 1
+                rep.blocks_moved += moved
+                migrated[u] = True
+                moved_bits[u] = bits
+        p.set_incumbents(loc_res, cfgs, energies)
 
     def _uplink_vectors(self, idx: np.ndarray) -> np.ndarray:
         """Vectorized ``_uplink_vector`` over many users: (Ud, N) per-target

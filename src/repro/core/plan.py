@@ -48,24 +48,34 @@ which is what the churn orchestrator (``core/online.py``) drives each tick.
 """
 from __future__ import annotations
 
+import logging
 import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from .bellman_ford import (_banded_gather_idx, batched_banded_relax_minarg,
-                           relax_chunk_rows)
+from .bellman_ford import (_banded_gather_idx, batched_banded_relax_kbest,
+                           batched_banded_relax_minarg, relax_chunk_rows)
 from .dnn_profile import DNNProfile
 from .extended_graph import (ExtendedGraph, _profile_tensors,
                              build_extended_graph)
 from .feasible_graph import (FeasibleGraph, _quant, _quant_raw,
                              build_feasible_graph)
-from .fin import DP_BACKENDS, _BandedArgDP, _best_feasible, _run_dp_batch
+from .fin import (DP_BACKENDS, _BandedArgDP, _BandedKDP, _best_feasible,
+                  _iter_configs_at_exit, _run_dp_batch, _validate_n_best)
+from .frontier import ParetoFrontier, frontier_from_rows
 from .problem import (AppRequirements, Config, ConfigEval, Solution,
                       evaluate_config)
 from .system_model import Network
 from .tolerances import dist_tol
+
+logger = logging.getLogger(__name__)
+
+#: backends already warned about (k-best without a warm DP path) — the
+#: population forms construct many identical plans, so the warning fires
+#: once per process per backend, not once per plan
+_cold_kbest_warned: set = set()
 
 
 @dataclass
@@ -138,7 +148,7 @@ class Plan:
         self.quantize = quantize
         self.max_tighten = max_tighten
         self.tighten_factor = tighten_factor
-        self.n_best = n_best
+        self.n_best = _validate_n_best(n_best)
         self.backend = backend
         self.check_aggregate_load = check_aggregate_load
         if backend != "python" and DP_BACKENDS.get(backend) is None:
@@ -217,10 +227,28 @@ class Plan:
         self._admissible = [k for k in range(profile.n_exits)
                             if profile.accuracy_of(k) >= req.alpha - 1e-12]
         self._dist_tol = dist_tol(DP_BACKENDS.get(backend))
-        #: warm DP path: argmin-cached float64 banded relaxation over the
-        #: maintained gather indices (k-best and f32/dense engines go
-        #: through the shared ``fin`` machinery on the cached tensors)
-        self._warm = (n_best == 1 and DP_BACKENDS.get(backend) == "banded")
+        #: warm DP path: parent-cached float64 banded relaxation over the
+        #: maintained gather indices — the K=1 argmin engine or, for
+        #: ``n_best > 1``, the banded k-slot engine (the Pareto-frontier
+        #: DP); f32/dense engines go through the shared ``fin`` machinery
+        #: on the cached tensors
+        self._warm = DP_BACKENDS.get(backend) == "banded"
+        #: the last *solver* solution (``adopt`` replaces only the
+        #: incumbent ``_solution``) — ``frontier()`` pins its argmin row
+        #: to this, so an adopted frontier row never masquerades as the
+        #: argmin solve
+        self._argmin_solution: Optional[Solution] = None
+        if n_best > 1 and not self._warm and backend not in _cold_kbest_warned:
+            # no warm k-best engine for this backend: every solve re-relaxes
+            # from the cached tensors (stage 1-2 stay warm).  Logged once
+            # per process rather than silently paying the cold relax per
+            # solve.
+            _cold_kbest_warned.add(backend)
+            logger.warning(
+                "Plan(n_best=%d, backend=%r): no warm k-best DP path for "
+                "this backend — every solve re-runs the stage-3 relaxation "
+                "from the cached tensors (use a banded backend for warm "
+                "k-best re-solves)", n_best, backend)
         self._solution: Optional[Solution] = None
         self.version = 0
         self.stats = PlanStats()
@@ -674,7 +702,65 @@ class Plan:
 
     def _record(self, sol: Solution) -> None:
         self._solution = sol
+        self._argmin_solution = sol
         self.stats.solves += 1
+
+    # ------------------------------------------------------------- frontier
+    def frontier(self, *, k_per_exit: Optional[int] = 4) -> ParetoFrontier:
+        """The scenario's k-best Pareto frontier (core/frontier.py).
+
+        Backtracks the ``k_per_exit`` cheapest DP candidates per admissible
+        exit from the cached round-0 grids of BOTH quantizer passes (warm:
+        no graph construction, and in-cell channel fades reuse the cached
+        relaxation outright), exact-evaluates each against the plan's
+        current network, and dominance-prunes the feasible rows.  The
+        returned frontier's ``argmin`` row is exactly ``Plan.solve()``'s
+        selection (the plan is warm-solved first if the incumbent is
+        stale), so frontier-aware callers degrade to the argmin solve.
+
+        ``k_per_exit=None`` exhausts every DP end state per exit — with a
+        large enough ``n_best`` that enumerates every path in the feasible
+        graph (the property tests compare this against brute-force config
+        enumeration).  With ``n_best == 1`` the frontier still carries one
+        candidate chain per (node, depth) end state; ``n_best > 1`` adds
+        the k-best alternatives that collide on quantized states.
+        """
+        sol = self._argmin_solution
+        if sol is None or sol.meta.get("plan_version") != self.version:
+            incumbent = self._solution
+            sol = self.solve()
+            if incumbent is not None \
+                    and incumbent.meta.get("policy") == "frontier":
+                self._solution = incumbent    # keep the adopted incumbent
+        argmin_pair = (sol.config, sol.eval) if sol.feasible else None
+        dps = self._dp_round0()
+        pairs: List[Tuple[Config, ConfigEval]] = []
+        for k in self._admissible:
+            for dp in dps:
+                for j, (cfg, _ge) in enumerate(
+                        _iter_configs_at_exit(dp, self.profile, k)):
+                    if k_per_exit is not None and j >= k_per_exit:
+                        break
+                    pairs.append((cfg, self.evaluate(cfg)))
+        return frontier_from_rows(pairs, argmin_pair)
+
+    def adopt(self, config: Config, ev: Optional[ConfigEval] = None,
+              meta: Optional[dict] = None) -> Solution:
+        """Install an externally chosen configuration as the incumbent.
+
+        The frontier-aware placement policy (``core/online.py``) may keep
+        a slightly-costlier frontier row (or the previous incumbent) when
+        the energy delta does not pay for the migration; this records that
+        choice so subsequent hysteresis checks and migration accounting
+        run against what is actually deployed.  ``ev`` defaults to an
+        exact evaluation against the plan's current network."""
+        if ev is None:
+            ev = self.evaluate(config)
+        sol = Solution(config=config, eval=ev, solve_time=0.0, solver="fin",
+                       meta={"policy": "frontier",
+                             "plan_version": self.version, **(meta or {})})
+        self._solution = sol
+        return sol
 
 
 def _validate_population_bps(bps: Union[float, np.ndarray], U: int,
@@ -789,13 +875,14 @@ def _warm_round0(plans: Sequence[Plan]) -> List[List[object]]:
 
     Same-shape plans' cached (steep, gather-index, init-grid) stacks are
     concatenated — both quantizer passes of every plan ride in ONE chained
-    float64 banded relaxation with stored argmin parents, chunked to the
-    ``REPRO_RELAX_CHUNK_BYTES`` cache-residency budget like ``fin``'s
-    batched path.  No graph construction and no index rebuild happens here;
-    that is the whole point of the plan IR.  Plans whose DP inputs did not
-    change since their last relax are served from their cached grids.
-    Returns, per plan, its list of per-mode DP grids (``fin._BandedArgDP``,
-    O(1) parent lookups).
+    float64 banded relaxation with stored parents (the argmin engine for
+    ``n_best == 1``, the banded k-slot engine for the k-best / frontier
+    mode), chunked to the ``REPRO_RELAX_CHUNK_BYTES`` cache-residency
+    budget like ``fin``'s batched path.  No graph construction and no
+    index rebuild happens here; that is the whole point of the plan IR.
+    Plans whose DP inputs did not change since their last relax are served
+    from their cached grids.  Returns, per plan, its list of per-mode DP
+    grids (``fin._BandedArgDP`` / ``fin._BandedKDP``, O(1) parent lookups).
     """
     out: List[Optional[List[object]]] = [None] * len(plans)
     groups: Dict[Tuple[int, int], List[int]] = {}
@@ -809,6 +896,7 @@ def _warm_round0(plans: Sequence[Plan]) -> List[List[object]]:
     for idxs in groups.values():
         p0 = plans[idxs[0]]
         M = len(p0._modes)
+        K = p0.n_best
         lo = p0.depth_window_lo
         if len(idxs) == 1:
             # single plan: its cached stacks ARE the batch — zero copies
@@ -824,21 +912,36 @@ def _warm_round0(plans: Sequence[Plan]) -> List[List[object]]:
                                  (M,) + plans[j]._ext.E.shape)
                  for j in idxs])
         D, N, Gp1 = grid.shape
-        # cache-resident chunks: f64 candidate + i64 argmin per scenario row
-        chunk = relax_chunk_rows(N * N * Gp1 * 16)
+        # cache-resident chunks: f64 candidate (x K slots) + parent payload
+        chunk = relax_chunk_rows(N * N * Gp1 * 16 * K)
         hists: List[np.ndarray] = []
         pars: List[np.ndarray] = []
+        pks: List[np.ndarray] = []
         for start in range(0, D, chunk):
             sl = slice(start, start + chunk)
-            h, par = batched_banded_relax_minarg(grid[sl], E[sl], steep[sl],
-                                                 lo, idx=idx[sl])
+            if K == 1:
+                h, par = batched_banded_relax_minarg(grid[sl], E[sl],
+                                                     steep[sl], lo,
+                                                     idx=idx[sl])
+            else:
+                h, par, pk = batched_banded_relax_kbest(grid[sl], E[sl],
+                                                        steep[sl], K, lo,
+                                                        idx=idx[sl])
+                pks.append(pk)
             hists.append(h)
             pars.append(par)
         hist = np.concatenate(hists) if len(hists) > 1 else hists[0]
         par = np.concatenate(pars) if len(pars) > 1 else pars[0]
+        if K > 1:
+            pk = np.concatenate(pks) if len(pks) > 1 else pks[0]
         for pos, j in enumerate(idxs):
-            dps = [_BandedArgDP(hist[pos * M + mi], par[pos * M + mi],
-                                steep[pos * M + mi]) for mi in range(M)]
+            if K == 1:
+                dps = [_BandedArgDP(hist[pos * M + mi], par[pos * M + mi],
+                                    steep[pos * M + mi]) for mi in range(M)]
+            else:
+                dps = [_BandedKDP(hist[pos * M + mi], par[pos * M + mi],
+                                  pk[pos * M + mi], steep[pos * M + mi])
+                       for mi in range(M)]
             plans[j]._dp_cache = (plans[j]._quant_version, dps)
             plans[j].stats.dp_relaxes += 1
             out[j] = dps

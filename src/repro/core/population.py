@@ -53,7 +53,10 @@ from .bellman_ford import (batched_banded_relax_argmin,
                            batched_banded_relax_minarg, relax_chunk_rows)
 from .dnn_profile import DNNProfile
 from .feasible_graph import _quant_raw
-from .fin import DP_BACKENDS, _BandedArgDP, _backtrack, _best_feasible
+from .fin import (DP_BACKENDS, _BandedArgDP, _backtrack, _best_feasible,
+                  _exit_dmin)
+from .frontier import (ParetoFrontier, eval_config_users, frontier_from_rows,
+                       scan_state_users)
 from .plan import Plan, _validate_population_bps
 from .problem import AppRequirements, Config, ConfigEval, Solution
 from .system_model import Network
@@ -73,8 +76,25 @@ class PopulationStats:
     dp_cache_hits: int = 0       # user-solves served from an existing state
     solves: int = 0              # user-solves issued
     unique_solves: int = 0       # distinct (state, bandwidth) groups solved
+    fastpath_states: int = 0     # states served by the shared fast table
     fallbacks: int = 0           # per-user Plan fallbacks (tighten loop)
     state_evictions: int = 0     # cache compactions
+
+
+def _group_runs(keys: np.ndarray
+                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Group equal keys: (uniq, first, order, bounds).
+
+    ``order[bounds[g]:bounds[g + 1]]`` are the positions of group ``g``
+    (first-occurrence-stable); ``first[g]`` is its first position.  One
+    home for the unique/stable-argsort/searchsorted idiom the solve,
+    incumbent-evaluation and frontier paths all share.
+    """
+    uniq, first, inv = np.unique(keys, return_index=True,
+                                 return_inverse=True)
+    order = np.argsort(inv, kind="stable")
+    bounds = np.searchsorted(inv[order], np.arange(len(uniq) + 1))
+    return uniq, first, order, bounds
 
 
 class _CandCache:
@@ -88,16 +108,45 @@ class _CandCache:
         self.exhausted = False
 
 
+class _FastTable:
+    """The state's shared first-candidate frontier decision (vector path).
+
+    Exact energies are bandwidth-independent, so the scalar post-pass's
+    control flow over FIRST candidates — which (quantizer pass, exit)
+    pairs get scanned, which exit wins, whether the ceil rescue replaces
+    the main pass — is a pure function of the cohort state and is computed
+    ONCE at state birth.  A tick then only has to check, per user, that
+    every scanned first candidate is exactly feasible (stacked-array
+    feasibility flags); when it is — the overwhelmingly common case — the
+    cached choice broadcasts to every user of the state, and any state
+    where it is not falls back to the general vectorized scan.
+
+    ``scan``   [(mi, k, pos)] the shared flow evaluates, in order;
+    ``keys``/``cfgs``  the distinct first-candidate configs (pos-indexed);
+    ``choice`` (mi, k, pos, energy, e_comp, e_comm, used_ceil) or None
+               (None = the tighten-fallback path).
+    """
+
+    __slots__ = ("keys", "cfgs", "scan", "choice")
+
+    def __init__(self, keys, cfgs, scan, choice):
+        self.keys = keys
+        self.cfgs = cfgs
+        self.scan = scan
+        self.choice = choice
+
+
 class _CohortState:
     """One unique (quantized pack, failure mask) DP state of the cohort.
 
     Everything hanging off the state is shared by every user currently in
     it: the masked steepness stack, the init grid, the relaxed DP grids
     (``dps``), the per-exit distance minima (memoized by ``fin._exit_dmin``
-    on the dp objects) and the backtracked candidate lists.
+    on the dp objects), the backtracked candidate lists and the
+    first-candidate fast table of the vectorized post-pass.
     """
 
-    __slots__ = ("stq", "mask", "steep", "grid", "dps", "cand")
+    __slots__ = ("stq", "mask", "steep", "grid", "dps", "cand", "fast")
 
     def __init__(self, stq: np.ndarray, mask: np.ndarray,
                  steep: np.ndarray, grid: np.ndarray):
@@ -107,6 +156,7 @@ class _CohortState:
         self.grid = grid             # (M, N, G+1), masks applied
         self.dps: Optional[List[_BandedArgDP]] = None
         self.cand: Dict[Tuple[int, int], _CandCache] = {}
+        self.fast: Optional[_FastTable] = None
 
 
 class Population:
@@ -129,7 +179,7 @@ class Population:
                  max_tighten: int = 6, tighten_factor: float = 0.85,
                  backend: str = "minplus", check_aggregate_load: bool = False,
                  user_ids: Optional[Sequence[int]] = None,
-                 max_states: int = 65536):
+                 max_states: int = 65536, vector_postpass: bool = True):
         if n_users <= 0:
             raise ValueError(f"n_users must be positive, got {n_users}")
         if backend != "mesh" and DP_BACKENDS.get(backend) is None:
@@ -200,8 +250,17 @@ class Population:
         # cohort-state table (the cross-user DP dedupe)
         self._states: List[_CohortState] = []
         self._state_ids: Dict[bytes, int] = {}
+        #: cohort-wide exact-energy memo (energy is bandwidth-independent):
+        #: (exit, placement) -> (energy, e_comp, e_comm); cleared with the
+        #: state table on compute-slice churn
+        self._cfg_energy: Dict[Tuple, Tuple[float, float, float]] = {}
         self._mesh_relaxer = None
         self._fallback_plan: Optional[Plan] = None
+        #: vectorized frontier post-pass (core/frontier.py): all (candidate,
+        #: user) pairs of a cohort state scored as stacked arrays instead of
+        #: one scalar ``_best_feasible`` per unique (state, bandwidth) —
+        #: bit-exact either way; False keeps the scalar path (the oracle).
+        self._vector_postpass = bool(vector_postpass)
         self.stats = PopulationStats()
         self._assign_states(np.arange(self.U))
 
@@ -350,9 +409,12 @@ class Population:
         self._proto.update_slice(frac)
         # the proto rebuilt its packs and base tensors in place or replaced
         # them; every cached cohort state quantized against the old compute
-        # terms is now stale, and the fallback plan's compute base as well
+        # terms is now stale (incl. fast tables), the memoized exact
+        # energies moved with the compute terms, and the fallback plan's
+        # compute base as well
         self._states = []
         self._state_ids = {}
+        self._cfg_energy = {}
         self._fallback_plan = None
         # requantize every user's pack against the new compute terms (the
         # ingest re-keys the users whose pack moved), then re-key the rest
@@ -521,6 +583,92 @@ class Population:
                                           int(r_)), final_exit=k)
         cache.items.append((cfg, float(vals[j])))
 
+    def _candidate(self, state: _CohortState, mi: int, k: int,
+                   j: int) -> Optional[Tuple[Config, float]]:
+        """Indexed access into the shared per-state candidate frontier:
+        the j-th energy-ordered candidate at exit ``k`` (lazily extended),
+        or None when the exit's candidates are exhausted."""
+        cache = state.cand.get((mi, k))
+        if cache is None:
+            cache = state.cand[(mi, k)] = _CandCache()
+        while len(cache.items) <= j and not cache.exhausted:
+            self._extend_candidates(state, mi, k, cache)
+        return cache.items[j] if j < len(cache.items) else None
+
+    def _eval_users_factory(self, bwv: np.ndarray):
+        """Bind the cohort's shared tensors into a vectorized exact
+        evaluator over the given (Us, N) per-user bandwidth rows."""
+        prof, req = self.profile, self.req
+        nodes = self.network0.nodes
+        base_bw = self._proto._bw
+        comp = self._proto._compute
+        src = self.src
+        chk = self.check_aggregate_load
+
+        def ev(cfg: Config, idx: np.ndarray):
+            return eval_config_users(prof, req, nodes, base_bw, comp, src,
+                                     cfg, bwv[idx],
+                                     check_aggregate_load=chk)
+        return ev
+
+    def _scan_state_group(self, state: _CohortState, bwv: np.ndarray):
+        """``_solve_one``'s control flow vectorized over a whole user batch
+        sharing one cohort state: the main-pass scan, the ceil rescue pass
+        bounded by the main pass's per-user energies, and the rare
+        no-feasible fallback — all (candidate, user) pairs scored as
+        stacked arrays (``frontier.scan_state_users``), with per-user
+        selections bit-identical to the scalar post-pass.
+
+        Returns (cfgs, energy, lat, e_comp, e_comm, used_ceil, exit_, fb):
+        per-user chosen Config references (shared candidate objects, None
+        where nothing was found), their exact objective parts, the
+        ceil-pass markers and per-user fallback Solutions (None except on
+        the tighten path).
+        """
+        Us = len(bwv)
+        adm = self._proto._admissible
+        ev = self._eval_users_factory(bwv)
+        s0 = scan_state_users(
+            state.dps[0], self.profile, adm,
+            lambda k, j: self._candidate(state, 0, k, j), ev, Us,
+            dist_tol=self._dist_tol)
+        cfgs: List[Optional[Config]] = [None] * Us
+        fb: List[Optional[Solution]] = [None] * Us
+        energy = s0.energy.copy()
+        lat = s0.latency.copy()
+        e_comp = s0.e_comp.copy()
+        e_comm = s0.e_comm.copy()
+        exit_ = s0.exit.copy()
+        cand_ = s0.cand.copy()
+        mi_ = np.zeros(Us, dtype=np.int64)
+        used_ceil = np.zeros(Us, dtype=bool)
+        fb_mask = ~s0.found & (self.max_tighten > 0)
+        for i in np.nonzero(fb_mask)[0]:
+            fb[i] = self._fallback_solve(bwv[i], state.mask)
+        rest = np.nonzero(~fb_mask)[0]
+        if self.quantize != "ceil" and len(rest):
+            bound = np.where(s0.found[rest], s0.energy[rest], np.nan)
+            s1 = scan_state_users(
+                state.dps[1], self.profile, adm,
+                lambda k, j: self._candidate(state, 1, k, j),
+                self._eval_users_factory(bwv[rest]), len(rest),
+                dist_tol=self._dist_tol, bound_energy=bound)
+            take = s1.found & (~s0.found[rest] | (s1.energy < s0.energy[rest]))
+            t = rest[take]
+            exit_[t] = s1.exit[take]
+            cand_[t] = s1.cand[take]
+            mi_[t] = 1
+            energy[t] = s1.energy[take]
+            lat[t] = s1.latency[take]
+            e_comp[t] = s1.e_comp[take]
+            e_comm[t] = s1.e_comm[take]
+            used_ceil[t] = True
+        for i in rest:
+            if exit_[i] >= 0:
+                cfgs[i] = self._candidate(state, int(mi_[i]), int(exit_[i]),
+                                          int(cand_[i]))[0]
+        return cfgs, energy, lat, e_comp, e_comm, used_ceil, exit_, fb
+
     def _scan_state(self, state: _CohortState, mi: int, network: Network,
                     bound=None):
         return _best_feasible(
@@ -599,7 +747,12 @@ class Population:
 
         Relaxes exactly the cohort states born since their last relax, then
         runs the exact post-pass once per unique (state, true-bandwidth)
-        group — users with identical channel state share one solve.
+        group — users with identical channel state share one solve.  With
+        the default vectorized post-pass the unique groups of each cohort
+        state are scored together as stacked arrays (``frontier.
+        scan_state_users``) — per-user selections are bit-identical to the
+        scalar per-group path (``vector_postpass=False``), which the
+        ``always_resolve`` benchmarks keep as the same-machine oracle.
         Updates the incumbents in place; returns the per-user Solutions
         when ``build_solutions`` (pass False on million-user ticks to skip
         materializing U Python objects — the incumbent arrays carry the
@@ -625,20 +778,254 @@ class Population:
         rows[:, 1:] = self._bw_vec[users]
         v = np.ascontiguousarray(rows).view(
             np.dtype((np.void, rows.shape[1] * 8))).ravel()
-        _, first, inv = np.unique(v, return_index=True, return_inverse=True)
-        order = np.argsort(inv, kind="stable")
-        bounds = np.searchsorted(inv[order], np.arange(len(first) + 1))
+        _, first, order, bounds = _group_runs(v)
         dt_share = (time.perf_counter() - t0) / Us
 
-        for g, j in enumerate(first):
-            u = int(users[j])
-            state = self._states[int(self._user_state[u])]
-            cfg, ev, meta = self._solve_one(state, self._bw_vec[u])
-            members = users[order[bounds[g]:bounds[g + 1]]]
-            self._record_group(members, cfg, ev, meta, dt_share,
-                               build_solutions)
+        if self._vector_postpass and self._proto._admissible:
+            self._solve_vectorized(users, sids, first, order, bounds,
+                                   dt_share, build_solutions)
+        else:
+            for g, j in enumerate(first):
+                u = int(users[j])
+                state = self._states[int(self._user_state[u])]
+                cfg, ev, meta = self._solve_one(state, self._bw_vec[u])
+                members = users[order[bounds[g]:bounds[g + 1]]]
+                self._record_group(members, cfg, ev, meta, dt_share,
+                                   build_solutions)
         self.stats.unique_solves += len(first)
         return self.solutions(users) if build_solutions else None
+
+    def _build_fast(self, state: _CohortState) -> _FastTable:
+        """Materialize the state's shared first-candidate decision (see
+        :class:`_FastTable`): replay the scalar post-pass's control flow
+        over the FIRST candidate of each (quantizer pass, admissible exit)
+        using the bandwidth-independent exact energies — one exact
+        evaluation per distinct configuration, memoized cohort-wide."""
+        adm = self._proto._admissible
+        prof = self.profile
+        keys: List[Tuple] = []
+        cfgs: List[Config] = []
+        pos_of: Dict[Tuple, int] = {}
+
+        def cand0(mi: int, k: int) -> Optional[int]:
+            item = self._candidate(state, mi, k, 0)
+            if item is None:
+                return None
+            cfg = item[0]
+            key = (cfg.final_exit, tuple(cfg.placement))
+            p = pos_of.get(key)
+            if p is None:
+                p = pos_of[key] = len(cfgs)
+                keys.append(key)
+                cfgs.append(cfg)
+            return p
+
+        def energy(p: int) -> Tuple[float, float, float]:
+            ent = self._cfg_energy.get(keys[p])
+            if ent is None:
+                e, ec, em, _lat, _v = eval_config_users(
+                    prof, self.req, self.network0.nodes, self._proto._bw,
+                    self._proto._compute, self.src, cfgs[p],
+                    self._bw_vec[:1],
+                    check_aggregate_load=self.check_aggregate_load)
+                ent = self._cfg_energy[keys[p]] = (e, ec, em)
+            return ent
+
+        tol = self._dist_tol
+        scan: List[Tuple[int, int, int]] = []
+        found = None                    # (energy, mi, k, pos, ec, em)
+        for k in adm:
+            dmin = _exit_dmin(state.dps[0], prof.exits[k].block)
+            if found is not None and dmin > found[0] * (1.0 + tol):
+                continue
+            p = cand0(0, k)
+            if p is None:
+                continue
+            scan.append((0, k, p))
+            e, ec, em = energy(p)
+            if found is None or e < found[0]:
+                found = (e, 0, k, p, ec, em)
+        used_ceil = False
+        if self.quantize != "ceil":
+            bound = found[0] if found is not None else None
+            alt = None
+            for k in adm:
+                dmin = _exit_dmin(state.dps[1], prof.exits[k].block)
+                be = alt[0] if alt is not None else bound
+                if be is not None and dmin > be * (1.0 + tol):
+                    continue
+                p = cand0(1, k)
+                if p is None:
+                    continue
+                scan.append((1, k, p))
+                e, ec, em = energy(p)
+                if alt is None or e < alt[0]:
+                    alt = (e, 1, k, p, ec, em)
+            if alt is not None and (found is None or alt[0] < found[0]):
+                found = alt
+                used_ceil = True
+        choice = None
+        if found is not None:
+            e, mi, k, p, ec, em = found
+            choice = (mi, k, p, e, ec, em, used_ceil)
+        state.fast = _FastTable(keys, cfgs, scan, choice)
+        return state.fast
+
+    def _solve_vectorized(self, users: np.ndarray, sids: np.ndarray,
+                          first: np.ndarray, order: np.ndarray,
+                          bounds: np.ndarray, dt_share: float,
+                          build_solutions: bool) -> None:
+        """Vectorized frontier post-pass over the unique (state, bandwidth)
+        representatives.
+
+        Fast path: the distinct first-candidate configurations of every
+        touched state are evaluated ONCE each for ALL representatives as
+        stacked feasibility arrays; a state whose scanned first candidates
+        are feasible for every representative broadcasts its cached
+        ``_FastTable`` choice (exact energies are bandwidth-independent, so
+        the selection is shared).  States with any first-candidate
+        violation fall back to the general per-state scan
+        (``_scan_state_group``); both are bit-identical to the scalar
+        per-group post-pass.
+        """
+        reps = users[first]
+        rep_sids = sids[first]
+        uniq_s, _f, s_order, s_bounds = _group_runs(rep_sids)
+        states = [self._states[int(s)] for s in uniq_s]
+        tables = [st.fast if st.fast is not None else self._build_fast(st)
+                  for st in states]
+
+        # distinct scanned configs across states -> one stacked-feasibility
+        # evaluation each, over exactly the representatives of the states
+        # that reference the config (cohort states sharing a first
+        # candidate share the evaluation; disjoint states do not pay for
+        # each other's rows — unevaluated (row, rep) cells are never read)
+        key2row: Dict[Tuple, int] = {}
+        tasks: List[Config] = []
+        task_rpos: List[List[np.ndarray]] = []
+        for gi, ft in enumerate(tables):
+            rpos = s_order[s_bounds[gi]:s_bounds[gi + 1]]
+            for key, cfg in zip(ft.keys, ft.cfgs):
+                r = key2row.get(key)
+                if r is None:
+                    r = key2row[key] = len(tasks)
+                    tasks.append(cfg)
+                    task_rpos.append([])
+                task_rpos[r].append(rpos)
+        bw_reps = self._bw_vec[reps]
+        nR = len(reps)
+        violM = np.ones((len(tasks), nR), dtype=bool)
+        latM = np.empty((len(tasks), nR))
+        for r, cfg in enumerate(tasks):
+            cols = (task_rpos[r][0] if len(task_rpos[r]) == 1
+                    else np.unique(np.concatenate(task_rpos[r])))
+            _e, _ec, _em, lat, viol = eval_config_users(
+                self.profile, self.req, self.network0.nodes,
+                self._proto._bw, self._proto._compute, self.src, cfg,
+                bw_reps[cols], check_aggregate_load=self.check_aggregate_load)
+            violM[r, cols] = viol
+            latM[r, cols] = lat
+
+        base_meta = {"gamma": self.gamma, "quantize": self.quantize,
+                     "tighten_rounds": 0, "backend": self.backend,
+                     "warm": True, "population": True}
+        fast_meta = {**base_meta, "delta_eff": self.req.delta,
+                     "n_feasible_states": 1}
+        for gi, (state, ft) in enumerate(zip(states, tables)):
+            rpos = s_order[s_bounds[gi]:s_bounds[gi + 1]]
+            ids = [key2row[k] for k in ft.keys]
+            scan_rows = sorted({ids[p] for _mi, _k, p in ft.scan})
+            ok = (not scan_rows
+                  or not violM[np.ix_(scan_rows, rpos)].any())
+            if ok and ft.choice is not None:
+                mi, k, p, e, ec, em, used_ceil = ft.choice
+                cfg = ft.cfgs[p]
+                self.stats.fastpath_states += 1
+                if not build_solutions:
+                    members = (users[order[bounds[rpos[0]]:
+                                           bounds[rpos[0] + 1]]]
+                               if len(rpos) == 1 else
+                               np.concatenate(
+                                   [users[order[bounds[rp]:bounds[rp + 1]]]
+                                    for rp in rpos]))
+                    self._record_fast(members, cfg, e)
+                    continue
+                row = ids[p]
+                meta = ({**fast_meta, "used_ceil_pass": True} if used_ceil
+                        else dict(fast_meta))
+                acc = self.profile.accuracy_of(k)
+                for rp in rpos:
+                    members = users[order[bounds[rp]:bounds[rp + 1]]]
+                    ev = ConfigEval(energy=e, energy_comp=ec,
+                                    energy_comm=em,
+                                    latency=float(latM[row, rp]),
+                                    accuracy=acc, feasible=True,
+                                    violations=[])
+                    ev._energy_rate = self.req.sigma * e
+                    self._record_group(members, cfg, ev, meta, dt_share,
+                                       True)
+                continue
+            if ok and ft.choice is None:
+                # no DP candidates at any admissible exit: the tighten
+                # fallback (or a no-feasible-path record), per the scalar
+                # control flow
+                for rp in rpos:
+                    members = users[order[bounds[rp]:bounds[rp + 1]]]
+                    if self.max_tighten > 0:
+                        sol = self._fallback_solve(bw_reps[rp], state.mask)
+                        self._record_group(members, sol.config, sol.eval,
+                                           sol.meta, dt_share,
+                                           build_solutions)
+                    else:
+                        meta = {**base_meta, "reason": "no feasible path"}
+                        self._record_group(members, None, None, meta,
+                                           dt_share, build_solutions)
+                continue
+            # general path: full vectorized scan for this state's reps
+            cfgs, energy, lat, e_comp, e_comm, used_ceil_a, exit_, fb = \
+                self._scan_state_group(state, bw_reps[rpos])
+            for pi, rp in enumerate(rpos):
+                members = users[order[bounds[rp]:bounds[rp + 1]]]
+                if fb[pi] is not None:
+                    sol = fb[pi]
+                    self._record_group(members, sol.config, sol.eval,
+                                       sol.meta, dt_share, build_solutions)
+                    continue
+                cfg = cfgs[pi]
+                if cfg is None:
+                    meta = {**base_meta, "reason": "no feasible path"}
+                    self._record_group(members, None, None, meta, dt_share,
+                                       build_solutions)
+                    continue
+                if build_solutions:
+                    ev = ConfigEval(
+                        energy=float(energy[pi]),
+                        energy_comp=float(e_comp[pi]),
+                        energy_comm=float(e_comm[pi]),
+                        latency=float(lat[pi]),
+                        accuracy=self.profile.accuracy_of(int(exit_[pi])),
+                        feasible=True, violations=[])
+                    ev._energy_rate = self.req.sigma * ev.energy
+                    meta = {**base_meta, "delta_eff": self.req.delta,
+                            "n_feasible_states": 1}
+                    if used_ceil_a[pi]:
+                        meta["used_ceil_pass"] = True
+                    self._record_group(members, cfg, ev, meta, dt_share,
+                                       True)
+                else:
+                    self._record_fast(members, cfg, float(energy[pi]))
+
+    def _record_fast(self, members: np.ndarray, cfg: Config,
+                     energy: float) -> None:
+        """Incumbent-arrays-only recording (build_solutions=False path)."""
+        self._solved[members] = True
+        nb = len(cfg.placement)
+        self._inc_place[members, :nb] = cfg.placement
+        self._inc_place[members, nb:] = -1
+        self._inc_exit[members] = cfg.final_exit
+        self._inc_energy[members] = energy
+        for u in members:
+            self._solutions[u] = None
 
     def _record_group(self, members: np.ndarray, cfg: Optional[Config],
                       ev: Optional[ConfigEval], meta: dict, dt: float,
@@ -658,6 +1045,118 @@ class Population:
                        meta=meta) if build_solutions else None
         for u in members:
             self._solutions[u] = sol
+
+    # -------------------------------------------------------------- frontier
+    def frontiers(self, users: np.ndarray, *,
+                  k_per_exit: Optional[int] = 4) -> List[ParetoFrontier]:
+        """Per-user k-best Pareto frontiers (core/frontier.py).
+
+        The candidate rows are the per-cohort-state energy-ordered
+        backtracks (shared across every user in a state — one backtrack
+        per candidate for the whole cohort), exact-evaluated against each
+        user's true bandwidth as stacked arrays and dominance-pruned per
+        user (latency feasibility is per-user, so so is the frontier).
+        Each frontier's ``argmin`` row is exactly the user's
+        ``Population.solve`` selection — the orchestrator's frontier
+        policy degrades to the argmin policy row by row.
+        """
+        users = np.asarray(users, dtype=np.int64)
+        Us = len(users)
+        out: List[Optional[ParetoFrontier]] = [None] * Us
+        if Us == 0:
+            return []
+        if not self._proto._admissible:
+            return [ParetoFrontier([], None) for _ in range(Us)]
+        self._refresh_states(users)
+        sids = self._user_state[users]
+        need = [int(s) for s in np.unique(sids)
+                if self._states[int(s)].dps is None]
+        self._relax_states(need)
+        self.stats.solves += Us
+        uniq_s, _f, s_order, s_bounds = _group_runs(sids)
+        sigma = self.req.sigma
+        for gi in range(len(uniq_s)):
+            pos = s_order[s_bounds[gi]:s_bounds[gi + 1]]
+            state = self._states[int(uniq_s[gi])]
+            bwv = self._bw_vec[users[pos]]
+            cfgs, energy, lat, e_comp, e_comm, _used_ceil, exit_, fb = \
+                self._scan_state_group(state, bwv)
+            # candidate rows in the solver's scan order (exit asc, quantizer
+            # pass asc, graph-energy asc) — identical to Plan.frontier's
+            items: List[Config] = []
+            for k in self._proto._admissible:
+                for mi in range(self.M):
+                    j = 0
+                    while k_per_exit is None or j < k_per_exit:
+                        it = self._candidate(state, mi, k, j)
+                        if it is None:
+                            break
+                        items.append(it[0])
+                        j += 1
+            evals = [eval_config_users(
+                self.profile, self.req, self.network0.nodes,
+                self._proto._bw, self._proto._compute, self.src, cfg, bwv,
+                check_aggregate_load=self.check_aggregate_load)
+                for cfg in items]
+            for pi, p_ in enumerate(pos):
+                if fb[pi] is not None:
+                    sol = fb[pi]
+                    am = (sol.config, sol.eval) if sol.feasible else None
+                elif cfgs[pi] is not None:
+                    ev0 = ConfigEval(
+                        energy=float(energy[pi]),
+                        energy_comp=float(e_comp[pi]),
+                        energy_comm=float(e_comm[pi]),
+                        latency=float(lat[pi]),
+                        accuracy=self.profile.accuracy_of(int(exit_[pi])),
+                        feasible=True, violations=[])
+                    ev0._energy_rate = sigma * ev0.energy
+                    am = (cfgs[pi], ev0)
+                else:
+                    am = None
+                pairs = []
+                for cfg, (e, ec, em, latr, violr) in zip(items, evals):
+                    if violr[pi]:
+                        continue
+                    evr = ConfigEval(
+                        energy=e, energy_comp=ec, energy_comm=em,
+                        latency=float(latr[pi]),
+                        accuracy=self.profile.accuracy_of(cfg.final_exit),
+                        feasible=True, violations=[])
+                    evr._energy_rate = sigma * e
+                    pairs.append((cfg, evr))
+                out[p_] = frontier_from_rows(pairs, am)
+        return out
+
+    def frontier(self, u: int, *,
+                 k_per_exit: Optional[int] = 4) -> ParetoFrontier:
+        """One user's Pareto frontier (see :meth:`frontiers`)."""
+        return self.frontiers(np.array([int(u)]), k_per_exit=k_per_exit)[0]
+
+    def set_incumbents(self, users: np.ndarray,
+                       cfgs: Sequence[Optional[Config]],
+                       energies: Sequence[float]) -> None:
+        """Install externally chosen configurations as incumbents.
+
+        The orchestrator's frontier policy may keep a slightly-costlier
+        frontier row (or the previous incumbent) when the energy delta
+        does not pay for the migration; this records those choices so the
+        next tick's hysteresis gate and migration accounting run against
+        what is actually deployed."""
+        users = np.asarray(users, dtype=np.int64)
+        for u, cfg, e in zip(users, cfgs, energies):
+            self._solved[u] = True
+            if cfg is None:
+                self._inc_place[u] = -1
+                self._inc_exit[u] = -1
+                self._inc_energy[u] = np.inf
+            else:
+                nb = len(cfg.placement)
+                self._inc_place[u, :nb] = cfg.placement
+                self._inc_place[u, nb:] = -1
+                self._inc_exit[u] = cfg.final_exit
+                self._inc_energy[u] = float(e)
+            self._solutions[int(u)] = None
 
     # ------------------------------------------------ incumbent re-evaluation
     def evaluate_incumbents(self, users: np.ndarray
@@ -684,9 +1183,7 @@ class Population:
         rows[:, 1:] = self._inc_place[users[idx]]
         v = np.ascontiguousarray(rows).view(
             np.dtype((np.void, rows.shape[1] * 4))).ravel()
-        _, first, inv = np.unique(v, return_index=True, return_inverse=True)
-        order = np.argsort(inv, kind="stable")
-        bounds = np.searchsorted(inv[order], np.arange(len(first) + 1))
+        _, first, order, bounds = _group_runs(v)
         for g, j in enumerate(first):
             k = int(rows[j, 0])
             nb = self.profile.exits[k].block + 1
@@ -709,100 +1206,14 @@ class Population:
         """Vectorized ``problem.evaluate_config``: one configuration, many
         users differing only in their source-link bandwidth vector.
 
-        Returns (energy, latency (Us,), violated (Us,)).  Energy has no
-        bandwidth term, so it is a single Python-float accumulation shared
-        by the group; the latency accumulates per user through the SAME
-        ordered sequence of IEEE-double adds as the scalar evaluator, so
-        every per-user result is bit-identical to ``evaluate_config`` on
-        that user's mutated network.
+        Returns (energy, latency (Us,), violated (Us,)) — the shared
+        evaluator now lives in ``core/frontier.py`` (it also powers the
+        vectorized frontier post-pass); every per-user result is
+        bit-identical to ``evaluate_config`` on that user's mutated
+        network.
         """
-        place = config.placement
-        k = config.final_exit
-        last_block = self.profile.exits[k].block
-        assert len(place) == last_block + 1
-        prof = self.profile
-        req = self.req
-        nodes = self.network0.nodes
-        src = self.src
-        sigma = req.sigma
-        base_bw = self._proto._bw
-        comp = self._proto._compute
-        inf = float("inf")
-        Us = len(bwv)
-
-        lat = np.zeros(Us)
-        viol = np.zeros(Us, dtype=bool)
-        energy_comp = 0.0
-        energy_comm = 0.0
-
-        def link(n: int, n2: int):
-            if n == src:
-                return bwv[:, n2]
-            if n2 == src:
-                return bwv[:, n]
-            return float(base_bw[n, n2])
-
-        if place[0] != src:
-            b_in = link(src, place[0])
-            bad = b_in <= 0
-            viol |= bad
-            b_eff = np.where(bad, inf, b_in)
-            lat += prof.input_bits / b_eff
-            energy_comm += (nodes[src].e_tx + nodes[place[0]].e_rx) \
-                * prof.input_bits
-            viol |= sigma * prof.input_bits > b_eff
-
-        for i in range(last_block + 1):
-            n = place[i]
-            ops = prof.block_ops_with_exit(i, k)
-            surv_in = prof.survival_entering_block(i, k)
-            c = float(comp[n])
-            if c <= 0:
-                viol[:] = True
-                c = inf
-            t_comp = ops / c
-            lat += t_comp
-            energy_comp += surv_in * nodes[n].power_active * t_comp
-            if sigma * surv_in * ops > c:
-                viol[:] = True
-
-            if i < last_block:
-                n2 = place[i + 1]
-                if n != n2:
-                    d = float(prof.cut_bits[i])
-                    surv_out = prof.survival_after_block(i, k)
-                    b = link(n, n2)
-                    if isinstance(b, float):
-                        bad_s = b <= 0
-                        if bad_s:
-                            viol[:] = True
-                            b = inf
-                        lat += d / b
-                        energy_comm += surv_out * (nodes[n].e_tx
-                                                   + nodes[n2].e_rx) * d
-                        if sigma * surv_out * d > b:
-                            viol[:] = True
-                    else:
-                        bad = b <= 0
-                        viol |= bad
-                        b_eff = np.where(bad, inf, b)
-                        lat += d / b_eff
-                        energy_comm += surv_out * (nodes[n].e_tx
-                                                   + nodes[n2].e_rx) * d
-                        viol |= sigma * surv_out * d > b_eff
-
-        if self.check_aggregate_load:
-            load = [0.0] * self.N
-            for i in range(last_block + 1):
-                load[place[i]] += (sigma
-                                   * prof.survival_entering_block(i, k)
-                                   * prof.block_ops_with_exit(i, k))
-            for n in range(self.N):
-                if load[n] > float(comp[n]):
-                    viol[:] = True
-
-        accuracy = prof.accuracy_of(k)
-        viol |= lat > req.delta * (1 + 1e-12)
-        if accuracy < req.alpha - 1e-12:
-            viol[:] = True
-        return energy_comp + energy_comm, lat, viol
+        e, _ec, _em, lat, viol = eval_config_users(
+            self.profile, self.req, self.network0.nodes, self._proto._bw,
+            self._proto._compute, self.src, config, bwv,
+            check_aggregate_load=self.check_aggregate_load)
+        return e, lat, viol

@@ -210,6 +210,121 @@ def _banded_chain_kernel(lo, L, dist_ref, e_ref, st_ref, hist_ref, arg_ref):
         arg_ref[0, l] = jnp.argmin(cand, axis=0).astype(jnp.int32)
 
 
+def _banded_chain_kbest_kernel(lo, L, K, Kp, dist_ref, e_ref, st_ref,
+                               hist_ref, pn_ref, pk_ref):
+    """Chained banded k-slot relaxation: ALL layers of one scenario.
+
+    dist_ref: [1, Np, Kp, Gp] the scenario's k-slot init grid (slot 0 =
+    init depths, others BIG); e_ref/st_ref: [1, L, Np, Np]; hist/pn/pk:
+    [1, L, Np, Kp, Gp].  The k-slot grid is carried across layers in VMEM
+    like ``_banded_chain_kernel``'s scalar grid.  Per layer the candidate
+    pool per target state is (source node, source rank) in node-major
+    rank-minor order; the K cheapest are extracted by iterated
+    first-occurrence argmin + mask — the same selection order as a stable
+    ascending argsort, hence the same slot order as the numpy engine
+    (``bellman_ford.batched_banded_relax_kbest``).  ``Kp`` is the
+    sublane-padded slot count (padded slots stay BIG and never win).
+    """
+    d = dist_ref[0]                                      # [Np, Kp, Gp]
+    Np, _, Gp = d.shape
+    g = jax.lax.broadcasted_iota(jnp.int32, (Np, Kp, Np, Gp), 3)
+    for l in range(L):
+        e = e_ref[0, l]                                  # [Np(src), Np(tgt)]
+        st = st_ref[0, l]
+        gsrc = g - st[:, None, :, None]                  # [src, k, tgt, Gp]
+        ok = gsrc >= 0
+        if lo is not None:
+            ok &= (g >= lo) | (st[:, None, :, None] == 0)
+        gat = jnp.take_along_axis(
+            jnp.broadcast_to(d[:, :, None, :], (Np, Kp, Np, Gp)),
+            jnp.clip(gsrc, 0, Gp - 1), axis=3)
+        cand = jnp.where(ok, gat + e[:, None, :, None], BIG)
+        pool = cand.reshape(Np * Kp, Np, Gp)
+        src_i = jax.lax.broadcasted_iota(jnp.int32, pool.shape, 0)
+        outs, pns, pks = [], [], []
+        for _ in range(K):
+            m = jnp.min(pool, axis=0)                    # [tgt, Gp]
+            a = jnp.argmin(pool, axis=0).astype(jnp.int32)
+            outs.append(m)
+            pns.append(a // Kp)
+            pks.append(a % Kp)
+            pool = jnp.where(src_i == a[None], BIG, pool)
+        for _ in range(K, Kp):                           # padded slots
+            outs.append(jnp.full((Np, Gp), BIG, jnp.float32))
+            pns.append(jnp.full((Np, Gp), -1, jnp.int32))
+            pks.append(jnp.full((Np, Gp), -1, jnp.int32))
+        d = jnp.stack(outs, axis=1)                      # [tgt, Kp, Gp]
+        hist_ref[0, l] = d
+        pn_ref[0, l] = jnp.stack(pns, axis=1)
+        pk_ref[0, l] = jnp.stack(pks, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("K", "lo", "interpret"))
+def banded_minplus_chain_kbest_pallas(dist: jnp.ndarray, E: jnp.ndarray,
+                                      st: jnp.ndarray, K: int, *, lo=None,
+                                      interpret: bool = True):
+    """Chained banded k-best relaxation, batched over scenarios.
+
+    dist: [B, N, G+1] init grids; E: [B, L, N, N] (inf = pruned); st:
+    [B, L, N, N] int steepness; K >= 1 slots per state.  Returns (hist
+    [B, L, N, G+1, K] float32 — the k-slot grid AFTER each layer — and
+    par_n / par_k [B, L, N, G+1, K] int32, -1 where the slot is unused).
+    One launch per scenario relaxes the whole layer chain with the k-slot
+    grid resident in VMEM; slot order equals the numpy k-best engine's
+    stable-argsort order (see ``_banded_chain_kbest_kernel``).
+    """
+    assert K >= 1
+    B, N, Gp1 = dist.shape
+    L = E.shape[1]
+    dist = jnp.where(jnp.isfinite(dist), dist, BIG).astype(jnp.float32)
+    E = jnp.where(jnp.isfinite(E), E, BIG).astype(jnp.float32)
+    st = st.astype(jnp.int32)
+
+    def pad_to(x, m, axis, value):
+        r = (-x.shape[axis]) % m
+        if r == 0:
+            return x
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, r)
+        return jnp.pad(x, widths, constant_values=value)
+
+    Kp = K + ((-K) % 8)                  # sublane-pad the slot axis
+    # slot 0 carries the init depths, the other K-1 (and padded) slots BIG
+    dist_k = jnp.concatenate(
+        [dist[:, :, None, :],
+         jnp.full((B, N, Kp - 1, Gp1), BIG, jnp.float32)], axis=2)
+    dist_p = pad_to(pad_to(dist_k, 128, 3, BIG), 8, 1, BIG)
+    Np, _, Gp = dist_p.shape[1:]
+    E_p = pad_to(pad_to(E, 8, 2, BIG), 8, 3, BIG)
+    st_p = pad_to(pad_to(st, 8, 2, 0), 8, 3, 0)
+
+    hist, pn, pk = pl.pallas_call(
+        functools.partial(_banded_chain_kbest_kernel, lo, L, K, Kp),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, Np, Kp, Gp), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((1, L, Np, Np), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((1, L, Np, Np), lambda b: (b, 0, 0, 0)),
+        ],
+        out_specs=(pl.BlockSpec((1, L, Np, Kp, Gp), lambda b: (b, 0, 0, 0, 0)),
+                   pl.BlockSpec((1, L, Np, Kp, Gp), lambda b: (b, 0, 0, 0, 0)),
+                   pl.BlockSpec((1, L, Np, Kp, Gp),
+                                lambda b: (b, 0, 0, 0, 0))),
+        out_shape=(jax.ShapeDtypeStruct((B, L, Np, Kp, Gp), jnp.float32),
+                   jax.ShapeDtypeStruct((B, L, Np, Kp, Gp), jnp.int32),
+                   jax.ShapeDtypeStruct((B, L, Np, Kp, Gp), jnp.int32)),
+        interpret=interpret,
+    )(dist_p, E_p, st_p)
+    unreached = hist >= BIG
+    hist = jnp.where(unreached, jnp.inf, hist)
+    pn = jnp.where(unreached, -1, pn)
+    pk = jnp.where(unreached, -1, pk)
+    # [B, L, N, K, Gp1] -> [B, L, N, Gp1, K]
+    return (jnp.moveaxis(hist[:, :, :N, :K, :Gp1], 3, 4),
+            jnp.moveaxis(pn[:, :, :N, :K, :Gp1], 3, 4),
+            jnp.moveaxis(pk[:, :, :N, :K, :Gp1], 3, 4))
+
+
 @functools.partial(jax.jit, static_argnames=("lo", "interpret"))
 def banded_minplus_chain_pallas(dist: jnp.ndarray, E: jnp.ndarray,
                                 st: jnp.ndarray, *, lo=None,

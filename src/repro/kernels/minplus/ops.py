@@ -8,7 +8,8 @@ from typing import Tuple
 
 import jax.numpy as jnp
 
-from .minplus import (banded_minplus_chain_pallas, banded_minplus_pallas,
+from .minplus import (banded_minplus_chain_kbest_pallas,
+                      banded_minplus_chain_pallas, banded_minplus_pallas,
                       minplus_argmin_pallas, minplus_pallas)
 
 
@@ -46,6 +47,20 @@ def banded_minplus_argmin(dist: jnp.ndarray, E: jnp.ndarray, st: jnp.ndarray,
     (out [N, G+1], argmin source node [N, G+1] int32, -1 unreachable).
     O(N^2 G) work/memory vs the O(N^2 G^2) scattered ``minplus_vecmat``."""
     return banded_minplus_pallas(dist, E, st, lo=lo, interpret=interpret)
+
+
+def banded_minplus_chain_kbest(dist: jnp.ndarray, E: jnp.ndarray,
+                               st: jnp.ndarray, K: int, *, lo=None,
+                               interpret: bool = True):
+    """Chained banded k-best relaxation: K cheapest paths per state.
+
+    dist: [B, N, G+1]; E/st: [B, L, N, N]; K slots -> (hist
+    [B, L, N, G+1, K], par_n / par_k [B, L, N, G+1, K] int32, -1 unused).
+    The k-slot grid stays in VMEM across the layer chain; slot order
+    matches the numpy k-best engine.  This is the kernel behind the
+    Pareto-frontier subsystem's k-best DP (``core/frontier.py``)."""
+    return banded_minplus_chain_kbest_pallas(dist, E, st, K, lo=lo,
+                                             interpret=interpret)
 
 
 def banded_minplus_chain(dist: jnp.ndarray, E: jnp.ndarray, st: jnp.ndarray,

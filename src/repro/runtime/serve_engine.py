@@ -18,7 +18,13 @@ per-sample early exits are realized as *scheduling*:
     ``fail_node`` masks the dead node and issues a *warm* re-solve (no
     graph reconstruction; bit-exact vs a cold solve on the reduced
     network), ``recover_node`` unmasks and re-solves; node indices stay
-    stable across failures (Sec. V elasticity).
+    stable across failures (Sec. V elasticity).  Every failover re-split
+    also exposes the scenario's Pareto frontier (``engine.frontier``,
+    core/frontier.py), and with ``migration_weight > 0`` the re-split is
+    frontier-aware: the engine deploys the frontier row minimizing
+    ``energy + migration_weight * migration_bits`` — on recovery that can
+    keep the current placement instead of migrating everything back for a
+    marginal energy win.
 """
 from __future__ import annotations
 
@@ -31,8 +37,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core import (AppRequirements, Config, DNNProfile, Network, Plan,
-                        evaluate_config, migration_delta)
+from repro.core import (AppRequirements, Config, DNNProfile, Network,
+                        ParetoFrontier, Plan, evaluate_config,
+                        migration_delta)
+from repro.core.frontier import frontier_pick
 from repro.kernels.ee_gate.ops import ee_gate
 from repro.models import transformer as T
 
@@ -80,7 +88,8 @@ class SplitServeEngine:
                  network: Optional[Network] = None,
                  profile: Optional[DNNProfile] = None,
                  req: Optional[AppRequirements] = None,
-                 gamma: int = 10, seed: int = 0):
+                 gamma: int = 10, seed: int = 0,
+                 migration_weight: float = 0.0, frontier_k: int = 4):
         assert cfg.has_decoder
         self.cfg = cfg
         self.params = params
@@ -105,11 +114,22 @@ class SplitServeEngine:
         self.plan: Optional[Plan] = None
         self.placement: Optional[Config] = None
         self.network = network
+        if migration_weight < 0:
+            raise ValueError(f"migration_weight must be >= 0, got "
+                             f"{migration_weight}")
+        if frontier_k < 1:
+            raise ValueError(f"frontier_k must be >= 1, got {frontier_k}")
+        self.migration_weight = float(migration_weight)
+        self.frontier_k = int(frontier_k)
+        #: the Pareto frontier of the last (re-)placement — refreshed on
+        #: every failover / recovery re-split (core/frontier.py)
+        self.frontier: Optional[ParetoFrontier] = None
         if network is not None and profile is not None and req is not None:
             self.plan = Plan(network, profile, req, gamma=gamma)
             sol = self.plan.solve()
             assert sol.feasible, "no feasible FIN placement"
             self.placement = sol.config
+            self.frontier = self.plan.frontier(k_per_exit=self.frontier_k)
             self.network = self.plan.network   # live view of current state
 
     # ------------------------------------------------------------------ API
@@ -137,13 +157,36 @@ class SplitServeEngine:
         self._replace()
 
     def _replace(self) -> None:
+        """Warm re-solve + frontier-aware re-split.
+
+        The plan's Pareto frontier is exposed on every re-split
+        (``self.frontier``); with ``migration_weight > 0`` the new
+        placement is the option minimizing ``energy + migration_weight *
+        migration_bits`` over the frontier rows AND the current placement
+        (if it is still feasible — after a recovery, keeping the current
+        hosts avoids migrating every block back for a marginal win).
+        ``migration_weight=0`` deploys the argmin row, the pre-frontier
+        behaviour."""
         old = self.placement
         sol = self.plan.solve()
-        if not sol.feasible:
+        fr = self.plan.frontier(k_per_exit=self.frontier_k)
+        self.frontier = fr
+        choice = sol.config
+        if self.migration_weight > 0 and old is not None:
+            ev_old = self.plan.evaluate(old)
+            choice, _energy, _moved, _bits, _kept = frontier_pick(
+                fr, old, ev_old.feasible, ev_old.energy, self.profile,
+                self.migration_weight)
+            if choice is not None and (
+                    not sol.feasible
+                    or choice.placement != sol.config.placement
+                    or choice.final_exit != sol.config.final_exit):
+                self.plan.adopt(choice)     # a non-argmin frontier choice
+        if choice is None:
             raise RuntimeError("no feasible placement after failure")
-        self.placement = sol.config
+        self.placement = choice
         self.stats.replacements += 1
-        moved, bits = migration_delta(self.profile, old, sol.config)
+        moved, bits = migration_delta(self.profile, old, choice)
         self.stats.blocks_migrated += moved
         self.stats.migration_bits += bits
 

@@ -147,6 +147,54 @@ def test_fail_node_avoids_dead_node_and_matches_cold_solve(setup):
     assert eng.plan.solution.energy == ref.energy
 
 
+def test_failover_exposes_frontier_and_migration_aware_resplit(setup):
+    """Every failover re-split refreshes ``engine.frontier`` (the scenario's
+    Pareto rows, argmin == the plan's solve), and with a heavy
+    ``migration_weight`` a recovery keeps the current placement instead of
+    migrating every block back for a marginal energy win."""
+    from repro.core.multiapp import PAPER_MULTIAPP_REQS
+
+    cfg, params = setup
+    nw = paper_scenario(n_extra_edge=1)
+    prof = paper_profile("h1")
+    req = PAPER_MULTIAPP_REQS["h1"]
+
+    eng = SplitServeEngine(cfg, params, batch_size=2, cache_len=64,
+                           network=nw, profile=prof, req=req)
+    assert eng.frontier is not None and len(eng.frontier) >= 1
+    assert eng.frontier.argmin.config.placement == eng.placement.placement
+
+    # channel regime that places off-mobile (the failure-bench setup)
+    eng.plan.update_uplink(0.3e9)
+    eng._replace()
+    assert eng.frontier.argmin.config.placement == eng.placement.placement
+    victim = next(p for p in eng.placement.placement
+                  if p != nw.source_node)
+    eng.fail_node(victim)
+    assert victim not in eng.placement.placement
+    assert all(victim not in r.config.placement for r in eng.frontier)
+    assert eng.frontier.argmin.config.placement == eng.placement.placement
+    post_fail = list(eng.placement.placement)
+    eng.recover_node(victim)
+    argmin_back = list(eng.placement.placement)
+
+    # heavy migration weight: the recovery re-split keeps the incumbent
+    eng2 = SplitServeEngine(cfg, params, batch_size=2, cache_len=64,
+                            network=nw, profile=prof, req=req,
+                            migration_weight=1.0)
+    eng2.plan.update_uplink(0.3e9)
+    eng2._replace()
+    victim2 = next(p for p in eng2.placement.placement
+                   if p != nw.source_node)
+    eng2.fail_node(victim2)
+    bits_after_fail = eng2.stats.migration_bits
+    kept = list(eng2.placement.placement)
+    eng2.recover_node(victim2)
+    assert eng2.placement.placement == kept       # no migrate-back
+    assert eng2.stats.migration_bits == bits_after_fail
+    assert argmin_back != post_fail or kept == argmin_back
+
+
 def test_measured_phi_feeds_placement(setup):
     """measured_phi from the gates is a valid phi vector for core.DNNProfile."""
     cfg, params = setup
