@@ -1,0 +1,120 @@
+"""Congestion benchmark: shared-capacity coupled ticks vs uncoupled.
+
+One measurement family, ``congestion_ar1``: the six-app population on the
+multi-helper network under AR(1) fading, with the edge nodes' compute
+capacity self-calibrated to a fraction of the load the UNCOUPLED
+population actually puts on the busiest shared node — guaranteed
+over-subscription, whatever the channel draws do.  The coupled run pays
+a congestion transient on the first tick (repricing iterations,
+degrades/rejects) and then streams converged ticks whose only extra work
+over the uncoupled path is one vectorized ``accumulate_loads`` pass; the
+paper-facing numbers are
+
+  ``user_ticks_per_s``        converged coupled-tick throughput,
+  ``iters_to_converge``       fixed-point iterations on the transient tick,
+  ``admission_rate``          admitted fraction after the final tick,
+  ``coupled_vs_uncoupled``    converged coupled throughput / uncoupled
+                              throughput on the same draws (the
+                              machine-robust ratio the CI gate tracks).
+
+In-bench asserts: every post-transient tick converges, the final state
+carries zero capacity violations (canonical grouped reduction), and at
+full size the converged coupled throughput clears the 100k user-ticks/s
+floor at 1e4 users.
+"""
+from __future__ import annotations
+
+import time
+from typing import Iterable, List
+
+import numpy as np
+
+from repro.core import (ChurnOrchestrator, SharedCapacity, accumulate_loads,
+                        population_cohorts)
+
+from .common import Row, kv, smoke
+
+
+def _ar1_draws(users: int, ticks: int, *, seed: int = 5,
+               q_mean: float = 0.65, sigma: float = 0.05) -> List[np.ndarray]:
+    rng = np.random.default_rng(seed)
+    q = np.full(users, q_mean)
+    out = []
+    for _ in range(ticks):
+        q = np.clip(q_mean + 0.95 * (q - q_mean)
+                    + rng.normal(0, sigma, users), 0.3, 1.0)
+        out.append(q.copy())
+    return out
+
+
+def _congestion_row(name: str, *, users: int, ticks: int,
+                    cap_frac: float = 0.6,
+                    assert_floor: bool = False) -> Row:
+    draws = _ar1_draws(users, ticks)
+
+    # --- uncoupled reference: same cohorts, same draws, no capacity
+    ref = ChurnOrchestrator(
+        population=population_cohorts(users, n_extra_edge=2),
+        hysteresis=0.05)
+    t0 = time.perf_counter()
+    for q in draws:
+        ref.step_arrays(quality=q)
+    dt_ref = time.perf_counter() - t0
+
+    # --- self-calibrated over-subscription: cap the busiest shared node
+    # at cap_frac of the load the uncoupled population put on it
+    nl, _ll = accumulate_loads(ref.pops)
+    N = ref.pops[0].N
+    src = ref.pops[0].src
+    shared = np.where(np.arange(N) == src, -1.0, nl)
+    busy = int(np.argmax(shared))
+    assert nl[busy] > 0, "uncoupled population put no load on shared nodes"
+    node_cap = np.full(N, np.inf)
+    node_cap[busy] = nl[busy] * cap_frac
+    sc = SharedCapacity(node_cap=node_cap,
+                        link_cap=np.full((N, N), np.inf))
+
+    cpl = ChurnOrchestrator(
+        population=population_cohorts(users, n_extra_edge=2),
+        hysteresis=0.05, shared_capacity=sc)
+    # transient tick: the fixed point reprices (and possibly evicts)
+    t0 = time.perf_counter()
+    rep0 = cpl.step_arrays(quality=draws[0])
+    dt_transient = time.perf_counter() - t0
+    # converged ticks: warm prices, the congestion pass is one load probe
+    t0 = time.perf_counter()
+    reps = [cpl.step_arrays(quality=q) for q in draws[1:]]
+    dt_conv = time.perf_counter() - t0
+
+    for r in reps:
+        assert r.congestion_converged, "post-transient tick diverged"
+    nl2, ll2 = accumulate_loads(cpl.pops)
+    assert (nl2 <= cpl.congestion.node_cap).all(), "capacity violated"
+    assert (ll2 <= cpl.congestion.link_cap).all()
+
+    conv_ticks = max(1, ticks - 1)
+    uncoupled_tps = users * ticks / dt_ref
+    coupled_tps = users * conv_ticks / dt_conv
+    unplaced = reps[-1].n_unplaced if reps else rep0.n_unplaced
+    if assert_floor:
+        assert coupled_tps >= 100_000, \
+            f"converged coupled ticks too slow: {coupled_tps:.0f}/s"
+    return Row(name, dt_conv / (users * conv_ticks) * 1e6,
+               kv(users=users, ticks=ticks,
+                  user_ticks_per_s=coupled_tps,
+                  uncoupled_user_ticks_per_s=uncoupled_tps,
+                  coupled_vs_uncoupled=coupled_tps / uncoupled_tps,
+                  iters_to_converge=rep0.congestion_iters,
+                  transient_s=dt_transient,
+                  n_repriced=rep0.n_repriced,
+                  n_evicted=rep0.n_evicted,
+                  admission_rate=(users - unplaced) / users,
+                  priced_nodes=int((cpl.congestion.node_k > 0).sum())))
+
+
+def run() -> Iterable[Row]:
+    if smoke():
+        yield _congestion_row("congestion_ar1", users=480, ticks=3)
+    else:
+        yield _congestion_row("congestion_ar1", users=10_000, ticks=4,
+                              assert_floor=True)

@@ -16,6 +16,9 @@ CI perf-regression smoke job.  Benches match the paper artifacts:
   table7    solver execution times (+ large-instance scaling backends)
   online    warm plan-IR re-solves vs cold rebuilds under churn (+ e2e
             orchestrator throughput with hysteresis and failures)
+  congestion shared-capacity coupled ticks: converged-tick throughput,
+            fixed-point iterations and admission rate vs the uncoupled
+            population path on self-calibrated over-subscription
   kernels   Pallas kernel vs reference oracle timings (interpret mode)
   roofline  dry-run derived roofline terms per (arch x shape)
 """
@@ -36,6 +39,7 @@ BENCHES = [
     "bench_table3",
     "bench_table7",
     "bench_online",
+    "bench_congestion",
     "bench_kernels",
     "bench_engine",
     "bench_roofline",

@@ -8,6 +8,7 @@ Public API:
   fin / mcp / optimum — the three solvers compared in Sec. V
   problem        — configuration evaluation against (3a)-(3e)
   multiapp       — Sec. V multi-application orchestration
+  capacity       — population-shared node/link capacity + congestion pricing
 """
 from .system_model import (NodeSpec, Network, make_node, make_network,
                            PAPER_TIERS, TPU_TIERS)
@@ -27,10 +28,12 @@ from .plan import (Plan, PlanStats, solve_plans, update_uplinks,
 from .mcp import solve_mcp
 from .optimum import solve_opt
 from .multiapp import (run_multiapp, MultiAppResult, AppStats, PlanCache,
-                       PAPER_MULTIAPP_REQS, default_solvers, user_network,
-                       user_networks)
+                       PAPER_MULTIAPP_REQS, app_price_weights,
+                       default_solvers, user_network, user_networks)
 from .scenarios import ChurnEvent, churn_trace
 from .population import Population, PopulationStats
+from .capacity import (SharedCapacity, CongestionController,
+                       CongestionReport, accumulate_loads, config_load_rows)
 from .online import (ChurnOrchestrator, ChurnStats, TickReport,
                      population_cohorts, population_plans)
 
@@ -52,4 +55,6 @@ __all__ = [
     "ChurnEvent", "churn_trace", "ChurnOrchestrator", "ChurnStats",
     "TickReport", "population_plans", "population_cohorts",
     "Population", "PopulationStats",
+    "SharedCapacity", "CongestionController", "CongestionReport",
+    "accumulate_loads", "config_load_rows", "app_price_weights",
 ]

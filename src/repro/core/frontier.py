@@ -55,7 +55,8 @@ import numpy as np
 
 from .dnn_profile import DNNProfile
 from .fin import _exit_dmin
-from .problem import AppRequirements, Config, ConfigEval, evaluate_config
+from .problem import (AppRequirements, Config, ConfigEval,
+                      config_node_loads, evaluate_config)
 from .system_model import Network
 
 __all__ = ["FrontierRow", "ParetoFrontier", "pareto_mask",
@@ -382,11 +383,10 @@ def eval_config_users(profile: DNNProfile, req: AppRequirements,
                     viol |= sigma * surv_out * d > b_eff
 
     if check_aggregate_load:
-        load = [0.0] * N
-        for i in range(last_block + 1):
-            load[place[i]] += (sigma
-                               * profile.survival_entering_block(i, k)
-                               * profile.block_ops_with_exit(i, k))
+        # Shared (3d+) helper: the same per-config load arithmetic as
+        # problem.evaluate_config, so both call sites agree bit-for-bit
+        # on boundary cases (load == slice is feasible at both).
+        load = config_node_loads(profile, config, sigma, N)
         for n in range(N):
             if load[n] > float(comp[n]):
                 viol[:] = True

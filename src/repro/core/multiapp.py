@@ -38,6 +38,34 @@ PAPER_MULTIAPP_REQS: Dict[str, AppRequirements] = {
 EDGE_CLOUD_SLICE = 0.005  # 0.5% of edge/cloud compute per application
 
 
+def app_price_weights(apps: Optional[Sequence[str]] = None, *,
+                      mode: str = "uniform") -> List[float]:
+    """Per-app congestion fairness weights for shared-capacity churn
+    (``ChurnOrchestrator(price_weights=...)`` — one entry per cohort, in
+    ``apps`` order; see ``capacity.CongestionController``).
+
+    ``uniform``   every app reacts to congestion prices equally (w = 1);
+    ``latency``   latency-critical apps are sheltered: each app's weight
+                  is its deadline divided by the loosest deadline in the
+                  mix, so the tightest-deadline apps see the softest price
+                  exposure and are steered off contended resources LAST —
+                  the latency-tolerant apps, which can absorb a detour or
+                  a local fallback, yield first.
+    """
+    apps = list(PAPER_MULTIAPP_REQS) if apps is None else list(apps)
+    unknown = [a for a in apps if a not in PAPER_MULTIAPP_REQS]
+    if unknown:
+        raise ValueError(f"unknown apps {unknown} (expected subset of "
+                         f"{sorted(PAPER_MULTIAPP_REQS)})")
+    if mode == "uniform":
+        return [1.0] * len(apps)
+    if mode == "latency":
+        dmax = max(PAPER_MULTIAPP_REQS[a].delta for a in apps)
+        return [PAPER_MULTIAPP_REQS[a].delta / dmax for a in apps]
+    raise ValueError(f"unknown mode {mode!r} (expected 'uniform' or "
+                     f"'latency')")
+
+
 @dataclass
 class AppStats:
     app: str

@@ -43,6 +43,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Union
 
 import numpy as np
 
+from .capacity import CongestionController, SharedCapacity
 from .dnn_profile import DNNProfile
 from .frontier import ParetoFrontier, frontier_pick
 from .plan import Plan, migration_delta, solve_plans, update_uplinks
@@ -72,6 +73,17 @@ class TickReport:
     blocks_moved: int = 0
     migration_bits: float = 0.0
     energy: float = 0.0          # sum of current per-user config energies
+    # shared-capacity accounting (zero/True when no shared_capacity= or
+    # the congestion pass was a read-only no-op — uncoupled ticks keep
+    # their exact report shape)
+    congestion_iters: int = 0    # fixed-point load evaluations this tick
+    congestion_converged: bool = True
+    n_repriced: int = 0          # cohort reprice+re-solve passes
+    n_evicted: int = 0           # admission-control evictions
+    n_degraded: int = 0          # evictions resolved via a frontier row
+    n_rejected: int = 0          # evictions that cleared the incumbent
+    n_readmitted: int = 0        # unplaced users re-admitted on a row
+    n_unplaced: int = 0          # users without an incumbent after the tick
 
 
 @dataclass
@@ -123,9 +135,17 @@ class ChurnOrchestrator:
                  always_resolve: bool = False,
                  placement_policy: str = "argmin",
                  migration_weight: float = 0.0,
-                 frontier_k: int = 4):
+                 frontier_k: int = 4,
+                 shared_capacity: Optional[SharedCapacity] = None,
+                 price_weights: Optional[Sequence[float]] = None):
         if (plans is None) == (population is None):
             raise ValueError("pass exactly one of plans= or population=")
+        if shared_capacity is not None and population is None:
+            raise ValueError("shared_capacity= requires the population "
+                             "representation (pass population=)")
+        if price_weights is not None and shared_capacity is None:
+            raise ValueError("price_weights= only applies with "
+                             "shared_capacity=")
         if placement_policy not in ("argmin", "frontier"):
             raise ValueError(f"unknown placement_policy "
                              f"{placement_policy!r} (expected 'argmin' or "
@@ -145,8 +165,13 @@ class ChurnOrchestrator:
         self._tick = 0
         self.plans: Optional[List[Plan]] = None
         self.pops: Optional[List[Population]] = None
+        self.congestion: Optional[CongestionController] = None
         if population is not None:
             self._init_population(population)
+            if shared_capacity is not None:
+                self.congestion = CongestionController(
+                    shared_capacity, self.pops, weights=price_weights,
+                    frontier_k=self.frontier_k)
             return
         self.plans = list(plans)
         U = len(self.plans)
@@ -530,6 +555,30 @@ class ChurnOrchestrator:
         for u in np.nonzero(migrated)[0]:
             mb += float(moved_bits[u])
         rep.migration_bits = mb
+
+        # shared-capacity coupling: run the congestion-priced fixed point
+        # over the freshly-churned incumbents, then resync the energy
+        # ledger if it moved anyone (repriced re-solves, evictions and
+        # re-admissions all change incumbents behind the hysteresis gate's
+        # back).  A read-only pass (no overload, no prior congestion
+        # state) touches nothing, keeping coupled ticks bit-exact vs the
+        # uncoupled path.
+        if self.congestion is not None:
+            crep = self.congestion.run_tick()
+            rep.congestion_iters = crep.iterations
+            rep.congestion_converged = crep.converged
+            rep.n_repriced = crep.n_repriced
+            rep.n_evicted = crep.n_evicted
+            rep.n_degraded = crep.n_degraded
+            rep.n_rejected = crep.n_rejected
+            rep.n_readmitted = crep.n_readmitted
+            rep.n_unplaced = len(crep.unplaced_ids)
+            if crep.touched:
+                for p in self.pops:
+                    gl = p.user_ids
+                    e = np.where(p.inc_found, p._inc_energy, np.inf)
+                    self._cur_energy[gl] = e
+                    self._ref_energy[gl] = e
 
         fin = np.isfinite(self._cur_energy)
         rep.energy = float(self._cur_energy[fin].sum())

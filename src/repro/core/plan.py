@@ -84,6 +84,7 @@ class PlanStats:
 
     uplink_updates: int = 0
     slice_updates: int = 0
+    backhaul_updates: int = 0
     mask_updates: int = 0
     solves: int = 0
     dp_relaxes: int = 0         # round-0 DP relaxations actually run
@@ -158,6 +159,12 @@ class Plan:
         # owned mutable network state; ``self.network`` is a live view
         N = network.n_nodes
         self._bw = network.bandwidth.copy()
+        #: pristine bandwidths captured at construction — the reference
+        #: point of ``update_backhaul`` (congestion pricing re-scales the
+        #: non-source links RELATIVE to these, so repeated repricing is
+        #: absolute and drift-free; ``update_uplink`` only ever writes the
+        #: source rows/cols, which this snapshot deliberately keeps stale)
+        self._bw_base = network.bandwidth.copy()
         self._compute_base = network.compute.copy()
         self._slice_frac = np.ones(N)
         self._compute = network.compute.copy()
@@ -342,6 +349,43 @@ class Plan:
         self._bump()
         return self
 
+    def update_backhaul(self, scale: Union[float, np.ndarray]) -> "Plan":
+        """Re-scale the non-source backhaul links (relative to the
+        bandwidths captured at construction) and re-derive the
+        bandwidth-dependent tensors.
+
+        ``scale`` is a scalar or an (N, N) per-link factor; entries on the
+        source node's row/column and the diagonal are ignored — the uplink
+        is owned by :meth:`update_uplink` and self-loops stay infinite.
+        This is the congestion-pricing delta: a priced link ``(n, n')``
+        with price ``p`` serves ``bw_base / p``, which raises its latency
+        term and tightens its (3e) admissibility exactly as if the physical
+        link were slower.  Energy tensors are untouched (Eq. 2 has no
+        bandwidth term), and the packed uplink requantizer constants are
+        bandwidth-independent, so the per-user uplink packs of a population
+        stay valid verbatim.  Application is absolute w.r.t. the pristine
+        snapshot — calling with the same ``scale`` twice is a no-op apart
+        from version bumps.
+        """
+        N = self.n_nodes
+        src = self.network.source_node
+        sc = np.broadcast_to(np.asarray(scale, dtype=np.float64),
+                             (N, N)).copy()
+        if not np.all(np.isfinite(sc)) or np.any(sc <= 0):
+            raise ValueError("backhaul scale factors must be finite and > 0")
+        sc[src, :] = 1.0
+        sc[:, src] = 1.0
+        np.fill_diagonal(sc, 1.0)
+        off = np.ones((N, N), dtype=bool)
+        off[src, :] = False
+        off[:, src] = False
+        np.fill_diagonal(off, False)
+        self._bw[off] = self._bw_base[off] * sc[off]
+        self._refresh_bw_full()
+        self.stats.backhaul_updates += 1
+        self._bump()
+        return self
+
     def _bump(self, dp_dirty: bool = True) -> None:
         self._masked_state = None
         self.version += 1
@@ -397,6 +441,37 @@ class Plan:
 
         self._b_src = np.where(np.arange(N) == src, np.inf, bw[src])
         self._refresh_init()
+
+    def _refresh_bw_full(self) -> None:
+        """Re-derive EVERY bandwidth-dependent tensor from the current
+        ``self._bw`` (backhaul churn touches arbitrary links, so the
+        row/col-sliced refresh does not apply).  Mirrors the stage-1
+        builder formulas elementwise, then requantizes both quantizer
+        passes and re-primes the uplink pack — compute-dependent caches
+        (C, energies, comp_fits, packs) are reused verbatim."""
+        ext = self._ext
+        bw = self._bw
+        N = self.n_nodes
+        src = self.network.source_node
+        eye = np.eye(N, dtype=bool)
+        self._stale_src = None            # superseded by the full refresh
+        self._link_ok = (bw > 0) | eye
+        bw_eff = np.where(self._link_ok, np.where(eye, np.inf, bw), np.nan)
+        T = self._cut_bits[:-1, None, None] / bw_eff[None]
+        T = np.where(np.isnan(T), np.inf, T)
+        T[:, eye] = 0.0
+        ext.T[:] = T
+        ext.TT[:] = T + ext.C[1:, :][:, None, :]
+        self._bw_fits = ((self._load[:, None, None]
+                          <= np.where(eye, np.inf, bw)[None])
+                         | eye[None])
+        ext.mask[:] = (self._link_ok[None] & self._bw_fits
+                       & self._comp_fits[:, None, :])
+        self._b_src = np.where(np.arange(N) == src, np.inf, bw[src])
+        self._refresh_init()
+        for mi in range(len(self._modes)):
+            self._requant_full(mi)
+        self._requant_uplink(src)                # re-prime the pack
 
     def _refresh_compute(self) -> None:
         """Re-derive every compute-dependent tensor in place (slice churn).

@@ -401,10 +401,13 @@ class Population:
             self._assign_states(flip)
         return self
 
-    def update_slice(self, frac: float) -> "Population":
+    def update_slice(self, frac: Union[float, np.ndarray]) -> "Population":
         """Cohort-wide compute-slice rescale (``Plan.update_slice`` with
-        ``nodes=None`` for every user).  Per-user slices would break the
-        cohort's shared energy tensors — model those as separate cohorts.
+        ``nodes=None`` for every user).  ``frac`` is a scalar or an (N,)
+        per-node factor vector (congestion pricing rescales individual
+        nodes); either way it applies to every user of the cohort —
+        per-user slices would break the cohort's shared energy tensors,
+        so model those as separate cohorts.
         """
         self._proto.update_slice(frac)
         # the proto rebuilt its packs and base tensors in place or replaced
@@ -421,6 +424,27 @@ class Population:
         # — their packs kept their values but the state table was cleared
         self.ingest(self._bw_vec.copy())
         self._stale[:] = False
+        self._assign_states(np.arange(self.U))
+        return self
+
+    def update_backhaul(self, scale: Union[float, np.ndarray]
+                        ) -> "Population":
+        """Cohort-wide backhaul rescale (``Plan.update_backhaul`` for every
+        user): non-source links serve ``bw_base * scale`` — the congestion
+        pricing delta for shared links.
+
+        The packed uplink requantizer constants are bandwidth-independent,
+        so every user's quantized pack keeps its value verbatim (no ingest
+        pass); but the proto's base steepness stack moved on the non-source
+        entries, so the cohort-state table is cleared and every user
+        re-keyed against it.  The memoized exact energies survive — Eq. (2)
+        has no bandwidth term — which is what keeps repeated link repricing
+        cheap for the fixed-point loop.
+        """
+        self._proto.update_backhaul(scale)
+        self._states = []
+        self._state_ids = {}
+        self._fallback_plan = None
         self._assign_states(np.arange(self.U))
         return self
 

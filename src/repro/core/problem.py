@@ -64,6 +64,51 @@ class ConfigEval:
     _energy_rate: float = 0.0
 
 
+def config_node_loads(profile: DNNProfile, config: Config, sigma: float,
+                      n_nodes: int) -> List[float]:
+    """Per-node aggregate compute load (ops/s) of ONE configuration — the
+    (3d+) left-hand side: every deployed block charges its host
+    ``sigma * survival_entering * ops_with_exit``.
+
+    This is the single home of the aggregate-load arithmetic; both exact
+    evaluators (``evaluate_config`` and the vectorized
+    ``frontier.eval_config_users``) and the shared-capacity accumulator
+    (``capacity.accumulate_loads``) call it, so their sums are IEEE-double
+    identical term by term (pure-Python scalar adds, placement order).
+    """
+    place = config.placement
+    k = config.final_exit
+    last_block = profile.exits[k].block
+    load = [0.0] * n_nodes
+    for i in range(last_block + 1):
+        load[place[i]] += (sigma * profile.survival_entering_block(i, k)
+                           * profile.block_ops_with_exit(i, k))
+    return load
+
+
+def config_link_loads(profile: DNNProfile, config: Config, src: int,
+                      sigma: float) -> List[Tuple[int, int, float]]:
+    """Per-link bandwidth load (bits/s) of ONE configuration — the (3e)
+    left-hand sides, as ``(from_node, to_node, load)`` terms in placement
+    order: the input transfer charges ``sigma * input_bits`` on the
+    source -> host-of-block-0 link, and every cross-node cut ``i`` charges
+    ``sigma * survival_after_block(i) * cut_bits[i]``.  Same-host cuts and
+    a source-hosted block 0 produce no term, exactly like the per-link
+    checks of ``evaluate_config``."""
+    place = config.placement
+    k = config.final_exit
+    last_block = profile.exits[k].block
+    loads: List[Tuple[int, int, float]] = []
+    if place[0] != src:
+        loads.append((src, place[0], sigma * profile.input_bits))
+    for i in range(last_block):
+        n, n2 = place[i], place[i + 1]
+        if n != n2:
+            loads.append((n, n2, sigma * profile.survival_after_block(i, k)
+                          * float(profile.cut_bits[i])))
+    return loads
+
+
 def evaluate_config(network: Network, profile: DNNProfile,
                     req: AppRequirements, config: Config,
                     *, check_aggregate_load: bool = False) -> ConfigEval:
@@ -138,10 +183,7 @@ def evaluate_config(network: Network, profile: DNNProfile,
 
     # --- aggregate per-node load (multi-app orchestrator mode) ----------------
     if check_aggregate_load:
-        load = [0.0] * network.n_nodes
-        for i in range(last_block + 1):
-            load[place[i]] += (sigma * profile.survival_entering_block(i, k)
-                               * profile.block_ops_with_exit(i, k))
+        load = config_node_loads(profile, config, sigma, network.n_nodes)
         for n in range(network.n_nodes):
             if load[n] > comp[n]:
                 violations.append(f"(3d+) aggregate compute overload node {n}")
