@@ -33,11 +33,15 @@ ticks — the fixed point warm-starts from the previous tick's prices), so
 the loop terminates: every iteration either converges (no overload) or
 bumps at least one exponent toward the cap.  A price ``p`` on node ``n``
 is applied as the typed delta ``Population.update_slice`` with per-node
-factor ``p ** -w`` (the node serves ``compute / p^w``: compute latency
-AND compute energy rise by the price — Eq. 2's compute term is
-``P_active * ops / c``); a link price applies as ``Population.
-update_backhaul`` with factor ``p ** -w`` relative to the pristine
-bandwidths.  ``w`` is the cohort's fairness weight (``multiapp.
+factor ``base * p ** -w`` (the node serves ``base * compute / p^w``:
+compute latency AND compute energy rise by the price — Eq. 2's compute
+term is ``P_active * ops / c``), where ``base`` is the cohort's last
+renegotiated slice fraction — ``update_slice`` writes absolutely, so
+slice churn events must route through :meth:`CongestionController.
+renegotiate_slice`, which composes the two factors and re-syncs the
+applied-price keys instead of letting either clobber the other; a link
+price applies as ``Population.update_backhaul`` with factor ``p ** -w``
+relative to the pristine bandwidths.  ``w`` is the cohort's fairness weight (``multiapp.
 app_price_weights``): ``w == 0`` exempts a cohort from repricing
 entirely, fractional ``w`` softens how hard congestion steers it.
 Because both deltas ride the Plan IR's typed-update paths, the PR-4
@@ -230,6 +234,10 @@ class CongestionReport:
     max_node_util: float = 0.0   # peak load/cap seen (finite caps)
     max_link_util: float = 0.0
     unplaced_ids: List[int] = field(default_factory=list)
+    #: global ids whose incumbent (found flag, config or energy) actually
+    #: changed during the pass — the orchestrator re-arms its hysteresis
+    #: baseline for exactly these users, nobody else
+    moved_gids: List[int] = field(default_factory=list)
 
 
 class CongestionController:
@@ -289,6 +297,15 @@ class CongestionController:
         # rule).  Zero exponents are applied by construction.
         self._applied_node = [self.node_k.tobytes()] * len(self.pops)
         self._applied_link = [self.link_k.tobytes()] * len(self.pops)
+        # per-cohort renegotiated base slice: Plan.update_slice writes the
+        # slice fraction ABSOLUTELY, so the applied factor is always
+        # base * step**(-k*w) — slice churn must route through
+        # :meth:`renegotiate_slice` while a controller owns the cohorts
+        self._base_slice = [np.ones(N) for _ in self.pops]
+        # canonical loads of the current incumbent set (admission's cheap
+        # screening state; refreshed by every tracked reduction)
+        self._load_n: Optional[np.ndarray] = None
+        self._load_l: Optional[np.ndarray] = None
         #: becomes True on the first mutation ever; until then every tick
         #: is a pure read-only probe (bit-exactness vs the uncoupled path)
         self._active = False
@@ -321,7 +338,11 @@ class CongestionController:
             if not node_moved and not link_moved:
                 continue
             if node_moved:
-                frac = self.step ** (-self.node_k.astype(np.float64) * w)
+                # compose with the cohort's renegotiated base slice —
+                # update_slice is absolute, a bare price factor would
+                # silently discard a prior slice event (and vice versa)
+                frac = self._base_slice[pi] \
+                    * self.step ** (-self.node_k.astype(np.float64) * w)
                 p.update_slice(frac)
                 self._applied_node[pi] = nk
             if link_moved:
@@ -335,9 +356,63 @@ class CongestionController:
             n_applied += 1
         return n_applied
 
+    def renegotiate_slice(self, value) -> None:
+        """Apply a cohort-shared slice re-negotiation (a ``"slice"`` churn
+        event) COMPOSED with the current congestion prices.
+
+        ``Plan.update_slice`` writes the slice fraction absolutely, so a
+        raw ``Population.update_slice(value)`` would clobber any applied
+        price factor while the applied-exponent keys still claim it is in
+        effect — and the next reprice would in turn discard the
+        renegotiated fraction.  Routing the event through here installs
+        ``base * step**(-k*w)`` per node and re-syncs the applied keys, so
+        both factors survive each other.  With every exponent at zero the
+        composed factor is bit-exactly ``base`` (``step**0 == 1`` and
+        ``x * 1.0`` is exact), keeping un-priced coupled ticks bit-exact
+        vs the uncoupled path.  Does not re-solve: the caller's tick marks
+        every user dirty and re-checks them through its normal gate.
+        """
+        N = len(self.node_cap)
+        for pi, p in enumerate(self.pops):
+            base = np.broadcast_to(
+                np.asarray(value, dtype=np.float64), (N,)).copy()
+            if np.any(~np.isfinite(base)) or np.any(base <= 0):
+                raise ValueError("slice fractions must be finite and > 0")
+            self._base_slice[pi] = base
+            w = self.weights[pi]
+            p.update_slice(
+                base * self.step ** (-self.node_k.astype(np.float64) * w))
+            self._applied_node[pi] = self.node_k.tobytes()
+
     # -------------------------------------------------------------- loads
     def loads(self, return_groups: bool = False):
         return accumulate_loads(self.pops, return_groups=return_groups)
+
+    def _loads_tracked(self):
+        """Canonical loads, remembered as the admission screen's running
+        totals (kept in sync with the current incumbent set)."""
+        nl, ll = self.loads()
+        self._load_n, self._load_l = nl, ll
+        return nl, ll
+
+    def _snapshot(self):
+        """Per-cohort incumbent state, for the post-pass moved-user diff."""
+        return [(p.inc_found.copy(), p._inc_exit.copy(),
+                 p._inc_place.copy(), p._inc_energy.copy())
+                for p in self.pops]
+
+    def _note_moved(self, rep: CongestionReport, snap) -> None:
+        """Record the global ids whose incumbent actually changed vs the
+        pre-mutation snapshot (found flag flipped, or — for found users —
+        exit, placement or energy moved)."""
+        for (f0, e0, pl0, en0), p in zip(snap, self.pops):
+            found = p.inc_found
+            ch = (f0 != found) | (found & (
+                (e0 != p._inc_exit)
+                | (pl0 != p._inc_place).any(axis=1)
+                | (en0 != p._inc_energy)))
+            rep.moved_gids.extend(int(g) for g in p.user_ids[ch])
+        rep.moved_gids.sort()
 
     def _note_util(self, rep: CongestionReport, node_load: np.ndarray,
                    link_load: np.ndarray) -> None:
@@ -356,7 +431,11 @@ class CongestionController:
         control on any residual overload, then re-admission sweeps."""
         rep = CongestionReport()
         self._degraded_tick: set = set()
-        node_load, link_load = self.loads()
+        # admission may mutate even without a bump this tick (warm capped
+        # prices) — snapshot up front then; otherwise lazily at the first
+        # bump, so read-only probes stay zero-copy
+        snap = self._snapshot() if self._active else None
+        node_load, link_load = self._loads_tracked()
         rep.iterations = 1
         self._note_util(rep, node_load, link_load)
         finite = (np.isfinite(self.node_cap).any()
@@ -377,13 +456,27 @@ class CongestionController:
             if not bump_n.any() and not bump_l.any():
                 rep.capped = True       # overloaded but fully priced out
                 break
+            if snap is None:
+                snap = self._snapshot()
             self.node_k[bump_n] += 1
             self.link_k[bump_l] += 1
             rep.touched = True
             self._active = True
             rep.n_repriced += self._apply_prices()
-            node_load, link_load = self.loads()
+            node_load, link_load = self._loads_tracked()
             self._note_util(rep, node_load, link_load)
+        else:
+            # iteration cap exhausted right after a reprice: the final
+            # loads were never classified — do it here so the report
+            # reflects the state actually left behind (the last bump may
+            # well have cleared the overload)
+            over_n = node_load > self.node_cap
+            over_l = link_load > self.link_cap
+            if not over_n.any() and not over_l.any():
+                rep.converged = True
+            elif not ((over_n & (self.node_k < self.k_max)).any()
+                      or (over_l & (self.link_k < self.k_max)).any()):
+                rep.capped = True
 
         if self._active:
             self._admission(rep, node_load, link_load)
@@ -392,6 +485,8 @@ class CongestionController:
                 rep.unplaced_ids.extend(
                     int(g) for g in p.user_ids[~p.inc_found])
             rep.unplaced_ids.sort()
+        if snap is not None:
+            self._note_moved(rep, snap)
         rep.n_priced_nodes = int((self.node_k > 0).sum())
         rep.n_priced_links = int((self.link_k > 0).sum())
         return rep
@@ -436,12 +531,50 @@ class CongestionController:
         assert best is not None, "overloaded resource with no contributor"
         return best[2], best[3]
 
+    #: relative slack for the incremental admission screen: the running
+    #: totals differ from the canonical grouped reduction only by
+    #: summation-order rounding (~U * eps relative), so anything past
+    #: this margin is overloaded under either summation — 1e-9 covers
+    #: reordering error out to ~1e7 users with three orders to spare
+    _SCREEN_SLACK = 1e-9
+
+    def _screen_rejects(self, pi: int, lu: int, cfg: Config) -> bool:
+        """Cheap O(N^2) pre-check for :meth:`_fits`: the candidate's own
+        load delta on top of the tracked running totals.  True only when
+        the install exceeds a capacity by more than the summation-order
+        slack — i.e. when the canonical reduction would certainly reject
+        too; borderline installs fall through to the canonical check."""
+        if self._load_n is None:
+            return False
+        p = self.pops[pi]
+        N = len(self.node_cap)
+        new_n, new_l = config_load_rows(p.profile, cfg, p.req.sigma, N,
+                                        p.src)
+        est_n = self._load_n + new_n
+        est_l = self._load_l + new_l
+        if p.inc_found[lu]:
+            k = int(p._inc_exit[lu])
+            nb = p.profile.exits[k].block + 1
+            old = Config(placement=[int(x) for x in p._inc_place[lu][:nb]],
+                         final_exit=k)
+            old_n, old_l = config_load_rows(p.profile, old, p.req.sigma, N,
+                                            p.src)
+            est_n = est_n - old_n
+            est_l = est_l - old_l
+        slack = 1.0 + self._SCREEN_SLACK
+        return bool((est_n > self.node_cap * slack).any()
+                    or (est_l > self.link_cap * slack).any())
+
     def _fits(self, pi: int, lu: int, cfg: Config, energy: float) -> bool:
         """Install ``cfg`` as user (pi, lu)'s incumbent iff the resulting
         FROM-SCRATCH population loads satisfy every capacity; reverts the
-        incumbent otherwise.  Recomputing through the canonical grouped
-        reduction (rather than adding the row to a running total) keeps
-        the decision IEEE-identical to the post-hoc oracle."""
+        incumbent otherwise.  Clear misfits are screened out first against
+        an incrementally maintained load total (O(N^2), not O(U)); the
+        decision itself recomputes through the canonical grouped
+        reduction, keeping accepted fits IEEE-identical to the post-hoc
+        oracle."""
+        if self._screen_rejects(pi, lu, cfg):
+            return False
         p = self.pops[pi]
         save = (p._inc_place[lu].copy(), int(p._inc_exit[lu]),
                 float(p._inc_energy[lu]), bool(p._solved[lu]),
@@ -449,6 +582,7 @@ class CongestionController:
         p.set_incumbents(np.array([lu]), [cfg], [energy])
         nl, ll = self.loads()
         if (nl <= self.node_cap).all() and (ll <= self.link_cap).all():
+            self._load_n, self._load_l = nl, ll
             return True
         p._inc_place[lu] = save[0]
         p._inc_exit[lu] = save[1]
@@ -498,7 +632,7 @@ class CongestionController:
             if not done:
                 p.set_incumbents(np.array([lu]), [None], [np.inf])
                 rep.n_rejected += 1
-            node_load, link_load = self.loads()
+            node_load, link_load = self._loads_tracked()
 
     def _readmit(self, rep: CongestionReport) -> None:
         """Sweep unplaced users (ascending global id) onto their cheapest

@@ -412,8 +412,15 @@ class ChurnOrchestrator:
                         "per-user slice events are not supported in "
                         "population mode (compute slices are cohort-shared "
                         "state); model per-user slices as separate cohorts")
-                for p in self.pops:
-                    p.update_slice(ev.value)
+                if self.congestion is not None:
+                    # compose with the congestion prices — a raw
+                    # update_slice writes the slice fraction absolutely
+                    # and would clobber the applied price factors (and
+                    # the next reprice would clobber the renegotiation)
+                    self.congestion.renegotiate_slice(ev.value)
+                else:
+                    for p in self.pops:
+                        p.update_slice(ev.value)
                 dirty_mask[:] = True
             else:
                 raise ValueError(f"unknown churn event kind {ev.kind!r}")
@@ -574,11 +581,18 @@ class ChurnOrchestrator:
             rep.n_readmitted = crep.n_readmitted
             rep.n_unplaced = len(crep.unplaced_ids)
             if crep.touched:
+                # resync the spent-energy ledger for everyone (repriced
+                # tensors move incumbent energies wholesale), but re-arm
+                # the hysteresis baseline only for the users whose
+                # incumbent actually changed — untouched users keep the
+                # migration-gate reference they had before the pass
                 for p in self.pops:
                     gl = p.user_ids
                     e = np.where(p.inc_found, p._inc_energy, np.inf)
                     self._cur_energy[gl] = e
-                    self._ref_energy[gl] = e
+                if crep.moved_gids:
+                    mg = np.asarray(crep.moved_gids, dtype=np.int64)
+                    self._ref_energy[mg] = self._cur_energy[mg]
 
         fin = np.isfinite(self._cur_energy)
         rep.energy = float(self._cur_energy[fin].sum())

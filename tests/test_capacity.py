@@ -29,8 +29,8 @@ loop otherwise (the CI image does not ship hypothesis).
 import numpy as np
 import pytest
 
-from repro.core import (ChurnOrchestrator, CongestionController, Plan,
-                        Population, SharedCapacity, accumulate_loads,
+from repro.core import (ChurnEvent, ChurnOrchestrator, CongestionController,
+                        Plan, Population, SharedCapacity, accumulate_loads,
                         app_price_weights, churn_trace, config_load_rows,
                         evaluate_config, paper_profile, population_cohorts,
                         population_plans, synthetic_profile)
@@ -128,13 +128,30 @@ def _assert_caps_hold(ctrl, tol=0.0):
 
 def _no_fitting_row(ctrl, k_per_exit=4):
     """Admission contract: every unplaced user has no frontier row that
-    fits the final residual capacity at the final prices."""
+    fits the final residual capacity at the final prices.  Each _fits
+    rejection is cross-checked against an independent canonical install
+    (guards the incremental screen against false rejections)."""
     for pi, p in enumerate(ctrl.pops):
         for lu in np.nonzero(~p.inc_found)[0]:
-            fr = p.frontier(int(lu), k_per_exit=k_per_exit)
+            lu = int(lu)
+            fr = p.frontier(lu, k_per_exit=k_per_exit)
             for row in fr.rows:
-                assert not ctrl._fits(pi, int(lu), row.config, row.energy), \
-                    (pi, int(lu), row.config)
+                assert not ctrl._fits(pi, lu, row.config, row.energy), \
+                    (pi, lu, row.config)
+                # the canonical grouped reduction must agree that this
+                # install genuinely violates a capacity
+                save = (p._inc_place[lu].copy(), int(p._inc_exit[lu]),
+                        float(p._inc_energy[lu]), bool(p._solved[lu]),
+                        p._solutions[lu])
+                p.set_incumbents(np.array([lu]), [row.config], [row.energy])
+                nl, ll = accumulate_loads(ctrl.pops)
+                assert (nl > ctrl.node_cap).any() \
+                    or (ll > ctrl.link_cap).any(), (pi, lu, row.config)
+                p._inc_place[lu] = save[0]
+                p._inc_exit[lu] = save[1]
+                p._inc_energy[lu] = save[2]
+                p._solved[lu] = save[3]
+                p._solutions[lu] = save[4]
 
 
 # ---------------------------------------------------------------------------
@@ -516,6 +533,199 @@ def test_zero_weight_cohort_never_repriced(network):
 
 
 # ---------------------------------------------------------------------------
+# regressions: slice renegotiation composes with prices; report flags;
+# moved-user tracking; hysteresis baseline scoping
+# ---------------------------------------------------------------------------
+
+def _congested_ctrl(network, U=12, cap_frac=0.4, **sc_kw):
+    """One h1 cohort plus a controller whose busiest non-source node is
+    capped at ``cap_frac`` of its uncoupled load."""
+    pop = _ingest_random(_pop(network, "h1", U=U), 0, lo=1.0, hi=1.0)
+    nl, _ = accumulate_loads([pop])
+    src = network.source_node
+    busy = int(np.argmax(np.where(np.arange(pop.N) == src, -1.0, nl)))
+    assert nl[busy] > 0
+    node_cap = np.full(pop.N, np.inf)
+    node_cap[busy] = nl[busy] * cap_frac
+    ctrl = CongestionController(
+        SharedCapacity(node_cap=node_cap,
+                       link_cap=np.full((pop.N, pop.N), np.inf), **sc_kw),
+        [pop])
+    return pop, ctrl, busy
+
+
+def test_renegotiate_slice_composes_with_prices(network):
+    """A slice re-negotiation under active congestion prices COMPOSES
+    (base * step**(-k*w)) instead of clobbering the applied price factor
+    — and a later reprice keeps the renegotiated base instead of
+    discarding it (the absolute-write footgun of Plan.update_slice)."""
+    pop, ctrl, busy = _congested_ctrl(network)
+    rep = ctrl.run_tick()
+    assert rep.converged and ctrl.node_k[busy] > 0
+    price_frac = ctrl.step ** (-ctrl.node_k.astype(np.float64) * 1.0)
+    assert np.array_equal(pop._proto._slice_frac, 1.0 * price_frac)
+    ctrl.renegotiate_slice(0.9)
+    assert np.array_equal(pop._proto._slice_frac,
+                          np.full(pop.N, 0.9) * price_frac)
+    # prices survive the renegotiation: the applied key is in sync, so
+    # the next run_tick does not see phantom-unapplied exponents
+    assert ctrl._applied_node[0] == ctrl.node_k.tobytes()
+    # a further reprice composes on top of the NEW base
+    ctrl.node_k[busy] += 1
+    ctrl._apply_prices()
+    price_frac2 = ctrl.step ** (-ctrl.node_k.astype(np.float64) * 1.0)
+    assert np.array_equal(pop._proto._slice_frac,
+                          np.full(pop.N, 0.9) * price_frac2)
+    with pytest.raises(ValueError, match="finite"):
+        ctrl.renegotiate_slice(0.0)
+
+
+def test_slice_event_composes_end_to_end():
+    """Orchestrator form of the same regression: a population-mode slice
+    churn event on a congested coupled run lands as base * price on every
+    cohort (weights respected), not as a price-clobbering absolute
+    write."""
+    U = 16
+    probe = _cohort_orch(U)
+    nl, _ = accumulate_loads(probe.pops)
+    N = probe.pops[0].N
+    src = probe.pops[0].src
+    busy = int(np.argmax(np.where(np.arange(N) == src, -1.0, nl)))
+    node_cap = np.full(N, np.inf)
+    node_cap[busy] = nl[busy] * 0.4
+    o = _cohort_orch(U, shared=SharedCapacity(
+        node_cap=node_cap, link_cap=np.full((N, N), np.inf)))
+    o.step([])                                   # prices the busy node
+    assert o.congestion.node_k[busy] > 0
+    o.step([ChurnEvent(kind="slice", user=None, value=0.9)])
+    for pi, p in enumerate(o.pops):
+        w = o.congestion.weights[pi]
+        expect = 0.9 * o.congestion.step \
+            ** (-o.congestion.node_k.astype(np.float64) * w)
+        assert np.array_equal(p._proto._slice_frac, expect)
+    _assert_caps_hold(o.congestion, tol=1e-12)
+
+
+def test_slice_event_unpriced_coupled_bitexact_vs_uncoupled():
+    """With no prices applied (all exponents zero) the composed slice
+    factor is bit-exactly the base: a coupled-but-idle orchestrator and
+    an uncoupled one make identical decisions through a slice event."""
+    U = 12
+    o1 = _cohort_orch(U)
+    o2 = _cohort_orch(U, shared=SharedCapacity.infinite(o1.pops[0].N))
+    ev = [ChurnEvent(kind="slice", user=None, value=0.8)]
+    t1, t2 = o1.step(ev), o2.step(ev)
+    assert t1.energy == t2.energy
+    assert not o2.congestion._active
+    for p1, p2 in zip(o1.pops, o2.pops):
+        assert np.array_equal(p1._proto._slice_frac, p2._proto._slice_frac)
+        assert np.array_equal(p1._inc_place, p2._inc_place)
+        assert np.array_equal(p1._inc_energy, p2._inc_energy)
+
+
+def test_converged_flag_when_iteration_cap_exhausts(network):
+    """If the LAST allowed iteration's reprice clears the overload, the
+    report must say converged — the loop exhausting right after the
+    final bump is not a failure to converge."""
+    _pop1, ctrl1, _busy = _congested_ctrl(network, max_iters=16)
+    rep1 = ctrl1.run_tick()
+    assert rep1.converged
+    k = rep1.iterations
+    assert k >= 2                 # converged detected on iteration k
+    # identical fresh scenario, capped one iteration short of the natural
+    # convergence check: same deterministic bump trajectory, but the loop
+    # exhausts right after the reprice that cleared the overload
+    pop2, ctrl2, busy2 = _congested_ctrl(network, max_iters=k - 1)
+    rep2 = ctrl2.run_tick()
+    assert rep2.iterations == k - 1
+    assert rep2.converged and not rep2.capped
+    assert np.array_equal(ctrl2.node_k, ctrl1.node_k)
+    assert rep2.unplaced_ids == []
+    _assert_caps_hold(ctrl2, tol=1e-12)
+
+
+def test_moved_gids_are_exactly_the_changed_incumbents(network):
+    """CongestionReport.moved_gids == the users whose incumbent (found
+    flag, config or energy) differs from the pre-pass state — the set the
+    orchestrator re-arms its hysteresis baseline for."""
+    nw = paper_scenario(n_extra_edge=1)
+    nw.compute[nw.source_node] *= 1e-3
+    pop = Population(nw, paper_profile("h1"), PAPER_MULTIAPP_REQS["h1"], 12)
+    bw = np.full((12, nw.n_nodes), 1e9)
+    bw[:, nw.source_node] = np.inf
+    pop.ingest(bw)
+    pop.solve(build_solutions=False)
+    nl, _ = accumulate_loads([pop])
+    node_cap = np.full(pop.N, np.inf)
+    for n in range(pop.N):
+        if n != nw.source_node and nl[n] > 0:
+            node_cap[n] = nl[n] * 3.0 / 12 * 1.01
+    ctrl = CongestionController(
+        SharedCapacity(node_cap=node_cap,
+                       link_cap=np.full((pop.N, pop.N), np.inf),
+                       price_cap=4.0, max_iters=6), [pop])
+    before = [(p.inc_found.copy(), p._inc_exit.copy(), p._inc_place.copy(),
+               p._inc_energy.copy()) for p in ctrl.pops]
+    rep = ctrl.run_tick()
+    assert rep.touched
+    changed = []
+    for (f0, e0, pl0, en0), p in zip(before, ctrl.pops):
+        for lu in range(p.U):
+            if f0[lu] != p.inc_found[lu] or (p.inc_found[lu] and (
+                    e0[lu] != p._inc_exit[lu]
+                    or (pl0[lu] != p._inc_place[lu]).any()
+                    or en0[lu] != p._inc_energy[lu])):
+                changed.append(int(p.user_ids[lu]))
+    assert rep.moved_gids == sorted(changed)
+    assert rep.moved_gids
+    # every rejected user changed by definition
+    assert set(rep.unplaced_ids) <= set(rep.moved_gids)
+
+
+def test_congestion_ref_reset_scoped_to_moved_users():
+    """The orchestrator's hysteresis baseline (_ref_energy) is re-armed
+    ONLY for users the congestion pass actually moved: a sheltered
+    (w = 0) cohort's untouched user keeps its baseline through a tick
+    that reprices the other cohort, while _cur_energy resyncs for all."""
+    U = 16
+    probe = _cohort_orch(U)
+    nl, _ = accumulate_loads(probe.pops)
+    N = probe.pops[0].N
+    src = probe.pops[0].src
+    busy = int(np.argmax(np.where(np.arange(N) == src, -1.0, nl)))
+    # start uncontended, then tighten the live cap between ticks
+    o = _cohort_orch(U, shared=SharedCapacity.infinite(N),
+                     weights=[0.0, 1.0])
+    o.step([])
+    a = o.pops[0]                                # the sheltered cohort
+    sheltered = a.user_ids
+    assert np.isfinite(o._ref_energy[sheltered]).all()
+    sentinel = o._ref_energy[sheltered] * (1.0 + 1e-6)
+    o._ref_energy[sheltered] = sentinel
+    a_inc = (a.inc_found.copy(), a._inc_exit.copy(), a._inc_place.copy(),
+             a._inc_energy.copy())
+    o.congestion.node_cap[busy] = nl[busy] * 0.5
+    rep = o.step([])
+    assert rep.n_repriced >= 1                   # cohort b was repriced
+    untouched = (a_inc[0] == a.inc_found) \
+        & (a_inc[1] == a._inc_exit) \
+        & (a_inc[2] == a._inc_place).all(axis=1) \
+        & (a_inc[3] == a._inc_energy)
+    assert untouched.any()
+    # untouched users keep their baseline (the old eager reset clobbered
+    # it) while the spent-energy ledger resyncs to the incumbents
+    assert np.array_equal(o._ref_energy[sheltered[untouched]],
+                          sentinel[untouched])
+    assert np.array_equal(o._cur_energy[sheltered[untouched]],
+                          a._inc_energy[untouched])
+    # moved sheltered users (if any) had their baseline re-armed
+    moved = ~untouched
+    if moved.any():
+        assert not np.isin(o._ref_energy[sheltered[moved]],
+                           sentinel[moved]).any()
+
+
+# ---------------------------------------------------------------------------
 # tentpole: determinism across vector_postpass and backends
 # ---------------------------------------------------------------------------
 
@@ -699,6 +909,7 @@ def _random_capacity_run(seed: int) -> None:
     rep0 = CongestionController(SharedCapacity.infinite(pop.N), [pop]) \
         .run_tick()
     assert rep0.converged and not rep0.touched
+    assert rep0.moved_gids == []
     assert np.array_equal(inc[0], pop._inc_place)
     assert np.array_equal(inc[2], pop._inc_energy)
 
