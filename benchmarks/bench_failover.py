@@ -1,0 +1,165 @@
+"""Failover benchmark: contingency-library hits vs warm re-solves vs cold.
+
+Two measurement families over the multi-helper evaluation network:
+
+  ``failover_library``    single-node failure on the deployed placement.
+                          Hit = ``ContingencyLibrary.lookup`` + ``mask_node``
+                          + ``install_solution`` + the precomputed frontier
+                          (zero DP relaxations, asserted); warm = the PR-3
+                          ``mask_node`` + ``solve`` + ``frontier`` delta
+                          path; cold = ``solve_fin`` on the pre-built
+                          reduced network.  Hit and warm results are
+                          asserted bit-exact (solution AND frontier rows);
+                          the acceptance criterion ``speedup_vs_warm >= 10``
+                          is asserted at full size.
+  ``failover_tier_trace`` population orchestrator under a correlated
+                          tier-outage trace (``failure_mode="tier"``):
+                          library hit rate, prebuilt-state volume, and a
+                          frozen-channel control run proving failure ticks
+                          perform ZERO DP relaxations end-to-end.
+
+Timing protocol: hit/warm/cold passes are interleaved and best-of-N per
+``benchmarks/common.py`` convention; restores and refills run untimed
+between passes.
+"""
+from __future__ import annotations
+
+import time
+from typing import Iterable
+
+import numpy as np
+
+from repro.core import (ChurnEvent, ChurnOrchestrator, ContingencyLibrary,
+                        Network, Plan, Population, churn_trace,
+                        paper_profile, solve_fin)
+from repro.core.multiapp import PAPER_MULTIAPP_REQS
+from repro.core.problem import AppRequirements
+from repro.core.scenarios import paper_scenario
+
+from .common import Row, kv, smoke
+
+
+def _frontier_sig(fr):
+    return [(r.config.placement, r.config.final_exit, r.energy, r.latency,
+             r.accuracy) for r in fr.rows]
+
+
+def _library_row(*, trials: int) -> Row:
+    """Library hit vs warm mask+solve+frontier vs cold reduced-net solve."""
+    nw = paper_scenario(n_extra_edge=2)
+    prof = paper_profile("h1")
+    req = PAPER_MULTIAPP_REQS["h1"]
+    plan = Plan(nw, prof, req)
+    plan.update_uplink(0.3e9)          # channel regime that uses the cloud
+    plan.solve()
+    victim = next(p for p in plan.solution.config.placement if p != 0)
+    lib = ContingencyLibrary(plan)
+    t0 = time.perf_counter()
+    n_entries = lib.refill()
+    refill_s = time.perf_counter() - t0
+    twin = Plan(nw, prof, req)         # warm path on an identical twin
+    twin.update_uplink(0.3e9)
+    twin.solve()
+    keep = [i for i in range(nw.n_nodes) if i != victim]
+    remap = {new: old for new, old in enumerate(keep)}
+    red = Network(nodes=[plan.network.nodes[i] for i in keep],
+                  bandwidth=plan.network.bandwidth[np.ix_(keep, keep)].copy(),
+                  compute=plan.network.compute[keep].copy(), source_node=0)
+    target = plan._masked.copy()
+    target[victim] = True
+    t_hit = t_warm = t_cold = float("inf")
+    for _ in range(trials):
+        # hit: the engine's covered-failover path, zero relaxations
+        r0 = plan.stats.dp_relaxes
+        t0 = time.perf_counter()
+        entry = lib.lookup(target)
+        plan.mask_node(victim)
+        hit_sol = plan.install_solution(entry.solution, dps=entry.dps)
+        hit_fr = entry.frontier
+        t_hit = min(t_hit, time.perf_counter() - t0)
+        assert plan.stats.dp_relaxes == r0, "library hit performed DP work"
+        plan.unmask_node(victim)       # untimed restore
+        plan.solve()
+        # warm: the PR-3 masked delta re-solve
+        t0 = time.perf_counter()
+        twin.mask_node(victim)
+        warm = twin.solve()
+        warm_fr = twin.frontier(k_per_exit=lib.k_per_exit)
+        t_warm = min(t_warm, time.perf_counter() - t0)
+        twin.unmask_node(victim)
+        twin.solve()
+        # cold: full pipeline on the pre-mutated reduced network
+        t0 = time.perf_counter()
+        cold = solve_fin(red, prof, req)
+        t_cold = min(t_cold, time.perf_counter() - t0)
+    agree = int(hit_sol.feasible and warm.feasible
+                and hit_sol.energy == warm.energy
+                and hit_sol.config.placement == warm.config.placement
+                and hit_sol.config.final_exit == warm.config.final_exit
+                and _frontier_sig(hit_fr) == _frontier_sig(warm_fr)
+                and cold.feasible and cold.energy == warm.energy
+                and [remap[p] for p in cold.config.placement]
+                == warm.config.placement)
+    assert agree == 1, "library hit diverged from warm/cold re-solve"
+    speedup_warm = t_warm / t_hit
+    if not smoke():
+        assert speedup_warm >= 10.0, \
+            f"library hit only {speedup_warm:.1f}x over warm (need 10x)"
+    return Row("failover_library", t_hit * 1e6,
+               kv(hit_us=t_hit * 1e6, warm_us=t_warm * 1e6,
+                  cold_us=t_cold * 1e6, speedup_vs_warm=speedup_warm,
+                  speedup_vs_cold=t_cold / t_hit, agree=agree,
+                  n_entries=n_entries, refill_us=refill_s * 1e6))
+
+
+def _tier_trace_row(*, users: int, ticks: int) -> Row:
+    """Orchestrator hit rate under correlated tier outages + AR(1) fading,
+    with a frozen-channel control run proving covered failure ticks are
+    solve-free (zero ``dp_relaxes``) end-to-end."""
+    nw = paper_scenario(n_extra_edge=1)
+    prof = paper_profile("h2")
+    req = AppRequirements(alpha=0.5, delta=8e-3)
+    pop = Population(nw, prof, req, n_users=users)
+    orch = ChurnOrchestrator(population=pop, contingency=True)
+    trace = churn_trace(users, ticks, seed=3, sigma=0.05,
+                        p_fail=0.4, p_recover=0.5, fail_nodes=(1, 2),
+                        failure_mode="tier")
+    n_outages = sum(1 for evs in trace
+                    if any(e.kind == "fail" for e in evs))
+    t0 = time.perf_counter()
+    stats = orch.run(trace)
+    dt = time.perf_counter() - t0
+    hits = int(stats.total("contingency_hits"))
+    misses = int(stats.total("contingency_misses"))
+    prebuilt = int(stats.total("contingency_prebuilt"))
+    assert hits > 0 and misses == 0, (hits, misses)
+    # control: frozen channel, failures only — after one uplink-only
+    # warm-up tick, EVERY subsequent relaxation would be failure-driven;
+    # covered failover means there are none.
+    pop2 = Population(nw, prof, req, n_users=users)
+    orch2 = ChurnOrchestrator(population=pop2, contingency=True)
+    orch2.step([ChurnEvent("uplink", u, 0.65) for u in range(users)])
+    r0 = pop2.stats.dp_relaxes
+    ctrl = churn_trace(users, ticks, seed=3, sigma=0.0, q_mean=0.65,
+                       p_fail=0.4, p_recover=0.5, fail_nodes=(1, 2),
+                       failure_mode="tier")
+    orch2.run(ctrl)
+    failure_relaxes = pop2.stats.dp_relaxes - r0
+    assert failure_relaxes == 0, failure_relaxes
+    user_ticks = users * ticks
+    return Row("failover_tier_trace", dt / user_ticks * 1e6,
+               kv(users=users, ticks=ticks, outages=n_outages,
+                  user_ticks_per_s=user_ticks / dt,
+                  hits=hits, misses=misses,
+                  hit_rate=hits / max(1, hits + misses),
+                  prebuilt_states=prebuilt,
+                  failure_tick_dp_relaxes=failure_relaxes))
+
+
+def run() -> Iterable[Row]:
+    if smoke():
+        trials, users, ticks = 2, 16, 6
+    else:
+        trials, users, ticks = 5, 64, 20
+    yield _library_row(trials=trials)
+    yield _tier_trace_row(users=users, ticks=ticks)

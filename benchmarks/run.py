@@ -19,6 +19,8 @@ CI perf-regression smoke job.  Benches match the paper artifacts:
   congestion shared-capacity coupled ticks: converged-tick throughput,
             fixed-point iterations and admission rate vs the uncoupled
             population path on self-calibrated over-subscription
+  failover  contingency-library hits vs warm mask+re-solve vs cold rebuild
+            (bit-exact, zero-relaxation), + tier-outage trace hit rate
   kernels   Pallas kernel vs reference oracle timings (interpret mode)
   roofline  dry-run derived roofline terms per (arch x shape)
 """
@@ -40,6 +42,7 @@ BENCHES = [
     "bench_table7",
     "bench_online",
     "bench_congestion",
+    "bench_failover",
     "bench_kernels",
     "bench_engine",
     "bench_roofline",

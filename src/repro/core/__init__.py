@@ -9,6 +9,7 @@ Public API:
   problem        — configuration evaluation against (3a)-(3e)
   multiapp       — Sec. V multi-application orchestration
   capacity       — population-shared node/link capacity + congestion pricing
+  contingency    — precomputed-failover library (O(1) failure masks)
 """
 from .system_model import (NodeSpec, Network, make_node, make_network,
                            PAPER_TIERS, TPU_TIERS)
@@ -34,6 +35,10 @@ from .scenarios import ChurnEvent, churn_trace
 from .population import Population, PopulationStats
 from .capacity import (SharedCapacity, CongestionController,
                        CongestionReport, accumulate_loads, config_load_rows)
+from .contingency import (ContingencyEntry, ContingencyLibrary,
+                          ContingencyPolicy, ContingencyStats,
+                          NoFeasiblePlacement, PopulationContingency,
+                          candidate_masks, tier_groups_of)
 from .online import (ChurnOrchestrator, ChurnStats, TickReport,
                      population_cohorts, population_plans)
 
@@ -57,4 +62,7 @@ __all__ = [
     "Population", "PopulationStats",
     "SharedCapacity", "CongestionController", "CongestionReport",
     "accumulate_loads", "config_load_rows", "app_price_weights",
+    "ContingencyEntry", "ContingencyLibrary", "ContingencyPolicy",
+    "ContingencyStats", "NoFeasiblePlacement", "PopulationContingency",
+    "candidate_masks", "tier_groups_of",
 ]

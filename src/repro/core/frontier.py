@@ -156,6 +156,21 @@ class ParetoFrontier:
                 best, best_score = (row, bits), score
         return best
 
+    def cheapest_avoiding(self, masked: Sequence[int]
+                          ) -> Optional[FrontierRow]:
+        """The cheapest row whose placement touches none of the given
+        (dead) nodes — the ``on_infeasible="degrade"`` fallback: when no
+        placement survives a failure under the CURRENT constraints, the
+        engine degrades onto the best row of the last feasible frontier
+        that avoids the failed set.  Rows are energy-sorted, so the first
+        surviving row is the cheapest; returns None when every row routes
+        through a dead node (degrade then falls back to pausing)."""
+        dead = set(int(n) for n in masked)
+        for row in self.rows:
+            if not dead.intersection(row.config.placement):
+                return row
+        return None
+
 
 def frontier_pick(fr: "ParetoFrontier", prev_cfg: Optional[Config],
                   keep_ok: bool, keep_energy: float, profile: DNNProfile,

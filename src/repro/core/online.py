@@ -44,6 +44,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Union
 import numpy as np
 
 from .capacity import CongestionController, SharedCapacity
+from .contingency import ContingencyPolicy, PopulationContingency
 from .dnn_profile import DNNProfile
 from .frontier import ParetoFrontier, frontier_pick
 from .plan import Plan, migration_delta, solve_plans, update_uplinks
@@ -84,6 +85,10 @@ class TickReport:
     n_rejected: int = 0          # evictions that cleared the incumbent
     n_readmitted: int = 0        # unplaced users re-admitted on a row
     n_unplaced: int = 0          # users without an incumbent after the tick
+    # contingency-library accounting (zero when contingency= is off)
+    contingency_hits: int = 0    # affected states whose mask was prebuilt
+    contingency_misses: int = 0  # affected states that had to relax
+    contingency_prebuilt: int = 0  # states prebuilt by this tick's refill
 
 
 @dataclass
@@ -137,11 +142,15 @@ class ChurnOrchestrator:
                  migration_weight: float = 0.0,
                  frontier_k: int = 4,
                  shared_capacity: Optional[SharedCapacity] = None,
-                 price_weights: Optional[Sequence[float]] = None):
+                 price_weights: Optional[Sequence[float]] = None,
+                 contingency: Union[bool, ContingencyPolicy, None] = None):
         if (plans is None) == (population is None):
             raise ValueError("pass exactly one of plans= or population=")
         if shared_capacity is not None and population is None:
             raise ValueError("shared_capacity= requires the population "
+                             "representation (pass population=)")
+        if contingency and population is None:
+            raise ValueError("contingency= requires the population "
                              "representation (pass population=)")
         if price_weights is not None and shared_capacity is None:
             raise ValueError("price_weights= only applies with "
@@ -166,6 +175,13 @@ class ChurnOrchestrator:
         self.plans: Optional[List[Plan]] = None
         self.pops: Optional[List[Population]] = None
         self.congestion: Optional[CongestionController] = None
+        #: per-cohort prebuilt-failover libraries (core/contingency.py);
+        #: ``contingency=True`` uses the default policy, or pass a
+        #: ContingencyPolicy to pick the covered masks
+        self._contingency_policy: Optional[ContingencyPolicy] = (
+            contingency if isinstance(contingency, ContingencyPolicy)
+            else ContingencyPolicy() if contingency else None)
+        self.contingency_libs: Optional[List[PopulationContingency]] = None
         if population is not None:
             self._init_population(population)
             if shared_capacity is not None:
@@ -234,6 +250,12 @@ class ChurnOrchestrator:
             gl = p.user_ids[found]
             self._ref_energy[gl] = p._inc_energy[found]
             self._cur_energy[gl] = p._inc_energy[found]
+        if self._contingency_policy is not None:
+            self.contingency_libs = [
+                PopulationContingency(p, policy=self._contingency_policy)
+                for p in pops]
+            for lib in self.contingency_libs:
+                lib.refill()
 
     # ------------------------------------------------------------------ API
     def run(self, trace: Iterable[Sequence[ChurnEvent]]) -> ChurnStats:
@@ -376,6 +398,7 @@ class ChurnOrchestrator:
         U = self.n_users
         uplink_mask = np.zeros(U, dtype=bool)
         dirty_mask = np.zeros(U, dtype=bool)
+        topo_event = False
         for ev in events:
             if ev.kind == "uplink":
                 if ev.user is None:
@@ -395,14 +418,31 @@ class ChurnOrchestrator:
                     dirty_mask[ev.user] = True
             elif ev.kind in ("fail", "recover"):
                 node = int(ev.value)
+                topo_event = True
+                # library-coverage probe BEFORE the mask lands: does the
+                # flipped (pack, mask) signature already exist relaxed?
+                # (event-time view — optimistic when a fade re-keys the
+                # user in this same tick; the failover bench reports the
+                # tick's actual relaxation count as ground truth)
                 if ev.user is None:
+                    if self.contingency_libs is not None:
+                        for lib in self.contingency_libs:
+                            h, m = lib.coverage(node, ev.kind)
+                            rep.contingency_hits += h
+                            rep.contingency_misses += m
                     for p in self.pops:
                         (p.mask_node(node) if ev.kind == "fail"
                          else p.unmask_node(node))
                     dirty_mask[:] = True
                 else:
-                    p = self.pops[int(self._pop_of[ev.user])]
+                    pi = int(self._pop_of[ev.user])
                     loc = [int(self._local_of[ev.user])]
+                    if self.contingency_libs is not None:
+                        h, m = self.contingency_libs[pi].coverage(
+                            node, ev.kind, users=loc)
+                        rep.contingency_hits += h
+                        rep.contingency_misses += m
+                    p = self.pops[pi]
                     (p.mask_node(node, users=loc) if ev.kind == "fail"
                      else p.unmask_node(node, users=loc))
                     dirty_mask[ev.user] = True
@@ -422,9 +462,21 @@ class ChurnOrchestrator:
                     for p in self.pops:
                         p.update_slice(ev.value)
                 dirty_mask[:] = True
+                topo_event = True       # slice churn clears the state table
             else:
                 raise ValueError(f"unknown churn event kind {ev.kind!r}")
         self._population_tick(rep, uplink_mask, dirty_mask)
+        # background refill: after a topology change (masks moved / state
+        # table cleared), a quant re-key (new packs need new contingency
+        # states) or a congestion reprice (backhaul rescale cleared the
+        # table), rebuild coverage around the new cohort states so the
+        # NEXT failure tick is relaxation-free again — off that tick's
+        # critical path, counted in PopulationStats.prebuilt_states
+        if (self.contingency_libs is not None
+                and self._contingency_policy.auto_refill
+                and (topo_event or rep.n_quant_changed or rep.n_repriced)):
+            for lib in self.contingency_libs:
+                rep.contingency_prebuilt += lib.refill()
         return rep
 
     def step_arrays(self, quality: Optional[np.ndarray] = None,

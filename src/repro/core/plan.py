@@ -258,6 +258,11 @@ class Plan:
                 "k-best re-solves)", n_best, backend)
         self._solution: Optional[Solution] = None
         self.version = 0
+        #: bumped by every delta EXCEPT mask/unmask (see ``_bump``) — the
+        #: validity key of precomputed contingency entries, which are keyed
+        #: by failure mask and assume every other DP/post-pass input is
+        #: unchanged since they were built
+        self.env_version = 0
         self.stats = PlanStats()
 
     # ------------------------------------------------------------ properties
@@ -313,24 +318,37 @@ class Plan:
         self._bump(dp_dirty=changed)
         return self
 
+    def _check_node(self, n: int) -> int:
+        """Validate a node index for mask/unmask deltas.  Raising a clear
+        ``ValueError`` here beats failing deep inside numpy fancy indexing
+        (negative indices would silently wrap)."""
+        if not isinstance(n, (int, np.integer)):
+            raise ValueError(f"node index must be an int, got {type(n).__name__}")
+        if not 0 <= int(n) < self.n_nodes:
+            raise ValueError(f"node index {int(n)} out of range for a "
+                             f"{self.n_nodes}-node network")
+        return int(n)
+
     def mask_node(self, n: int) -> "Plan":
         """Node failure: depth-infinity row/col masks over the cached banded
         tensors — nothing is re-quantized, and ``unmask_node`` restores the
         pristine tensors for free."""
+        n = self._check_node(n)
         if n == self.network.source_node:
             raise ValueError("cannot mask the source-hosting node")
         if not self._masked[n]:
             self._masked[n] = True
             self.stats.mask_updates += 1
-            self._bump()
+            self._bump(mask_only=True)
         return self
 
     def unmask_node(self, n: int) -> "Plan":
         """Recovery: drop the failure mask of node ``n`` (no recompute)."""
+        n = self._check_node(n)
         if self._masked[n]:
             self._masked[n] = False
             self.stats.mask_updates += 1
-            self._bump()
+            self._bump(mask_only=True)
         return self
 
     def update_slice(self, frac: Union[float, np.ndarray],
@@ -386,11 +404,19 @@ class Plan:
         self._bump()
         return self
 
-    def _bump(self, dp_dirty: bool = True) -> None:
+    def _bump(self, dp_dirty: bool = True, mask_only: bool = False) -> None:
         self._masked_state = None
         self.version += 1
         if dp_dirty:
             self._quant_version += 1
+        if not mask_only:
+            # the environment key of the contingency library: anything that
+            # changes the DP inputs OTHER than the failure mask (channel
+            # fades — including in-cell ones, since the exact post-pass
+            # reads the true bandwidth — slice and backhaul churn)
+            # invalidates every precomputed contingency entry; mask flips
+            # do not, they are what the entries are keyed BY
+            self.env_version += 1
 
     # ------------------------------------------------- slice-recompute cores
     def _flush_ext(self) -> None:
@@ -835,6 +861,31 @@ class Plan:
                        meta={"policy": "frontier",
                              "plan_version": self.version, **(meta or {})})
         self._solution = sol
+        return sol
+
+    def install_solution(self, sol: Solution,
+                         dps: Optional[List[object]] = None) -> Solution:
+        """Install a precomputed solver solution as BOTH the incumbent and
+        the argmin solution — the contingency-library hit path.
+
+        The caller asserts the solution was produced by ``solve()`` on a
+        plan in a state identical to the current one (same masks, same
+        environment — ``core/contingency.py`` keys its entries on exactly
+        that), so installing it is bit-equivalent to re-running the warm
+        solve, minus the DP relaxation and post-pass.  ``dps`` optionally
+        installs the matching relaxed round-0 DP grids so subsequent
+        ``frontier()`` / ``solve()`` calls at this state are relaxation-free
+        too.  The meta's ``plan_version`` is re-stamped to the current
+        version (``frontier()`` uses it as its freshness key); counts as a
+        solve in the stats, with zero ``dp_relaxes``.
+        """
+        sol = Solution(config=sol.config, eval=sol.eval,
+                       solve_time=sol.solve_time, solver=sol.solver,
+                       meta={**sol.meta, "plan_version": self.version,
+                             "contingency": True})
+        self._record(sol)
+        if dps is not None:
+            self._dp_cache = (self._quant_version, dps)
         return sol
 
 

@@ -79,6 +79,7 @@ class PopulationStats:
     fastpath_states: int = 0     # states served by the shared fast table
     fallbacks: int = 0           # per-user Plan fallbacks (tighten loop)
     state_evictions: int = 0     # cache compactions
+    prebuilt_states: int = 0     # contingency states relaxed off-tick
 
 
 def _group_runs(keys: np.ndarray
@@ -250,6 +251,9 @@ class Population:
         # cohort-state table (the cross-user DP dedupe)
         self._states: List[_CohortState] = []
         self._state_ids: Dict[bytes, int] = {}
+        #: contingency-prebuilt state ids pinned through compaction
+        #: (``core/contingency.py``; cleared when the state table is)
+        self._pinned: set = set()
         #: cohort-wide exact-energy memo (energy is bandwidth-independent):
         #: (exit, placement) -> (energy, e_comp, e_comm); cleared with the
         #: state table on compute-slice churn
@@ -417,6 +421,7 @@ class Population:
         # compute base as well
         self._states = []
         self._state_ids = {}
+        self._pinned = set()
         self._cfg_energy = {}
         self._fallback_plan = None
         # requantize every user's pack against the new compute terms (the
@@ -444,6 +449,7 @@ class Population:
         self._proto.update_backhaul(scale)
         self._states = []
         self._state_ids = {}
+        self._pinned = set()
         self._fallback_plan = None
         self._assign_states(np.arange(self.U))
         return self
@@ -479,6 +485,20 @@ class Population:
         if len(self._states) > self.max_states:
             self._compact_states()
 
+    def _state_key(self, stq: np.ndarray, mask: np.ndarray) -> bytes:
+        """The scalar form of ``_assign_states``'s signature encoding —
+        byte-identical to the batched path, so an out-of-band caller (the
+        contingency prebuilder) can probe/register states a user would be
+        keyed into without a user actually holding that (pack, mask)."""
+        M, K2, N = self.M, 2 * self.L - 1, self.N
+        enc = np.empty(M * K2 * N + N, dtype=np.int16)
+        q = np.ascontiguousarray(stq).reshape(-1)
+        fin = np.isfinite(q)
+        np.copyto(enc[:M * K2 * N], q, casting="unsafe", where=fin)
+        enc[:M * K2 * N][~fin] = -1
+        enc[M * K2 * N:] = mask
+        return enc.tobytes()
+
     def _add_state(self, key: bytes, stq: np.ndarray,
                    mask: np.ndarray) -> int:
         """Materialize a cohort state: scatter the pack's source-node
@@ -506,21 +526,30 @@ class Population:
 
     def _compact_states(self) -> None:
         """Drop cohort states no user references (bounds cache growth under
-        adversarial churn; referenced states and their DP grids survive)."""
+        adversarial churn; referenced states and their DP grids survive).
+        Contingency-pinned states survive too — evicting a prebuilt state
+        would silently turn its failover back into a relaxation."""
         live = np.unique(self._user_state)
+        if self._pinned:
+            live = np.unique(np.concatenate(
+                [live, np.fromiter(self._pinned, dtype=np.int64)]))
         remap = {int(s): i for i, s in enumerate(live)}
         self._states = [self._states[int(s)] for s in live]
         self._state_ids = {k: remap[s] for k, s in self._state_ids.items()
                            if s in remap}
         self._user_state = np.searchsorted(live, self._user_state)
+        self._pinned = {remap[s] for s in self._pinned if s in remap}
         self.stats.state_evictions += 1
 
     # ------------------------------------------------------------ relaxation
-    def _relax_states(self, sids: Sequence[int]) -> None:
+    def _relax_states(self, sids: Sequence[int], *,
+                      prebuilt: bool = False) -> None:
         """Chained banded relaxation of the given (unrelaxed) cohort states:
         both quantizer passes of every state ride in ONE batched float64
         chain (or the f32 jnp / pallas / mesh engines), chunked to the
-        shared cache-residency budget."""
+        shared cache-residency budget.  ``prebuilt`` routes the counter to
+        ``stats.prebuilt_states`` (contingency refills relax off the
+        failure tick; a covered tick's ``dp_relaxes`` delta stays zero)."""
         states = [self._states[int(s)] for s in sids]
         if not states:
             return
@@ -551,7 +580,10 @@ class Population:
         for i, s in enumerate(states):
             s.dps = [_BandedArgDP(hist[i * M + mi], par[i * M + mi],
                                   s.steep[mi]) for mi in range(M)]
-        self.stats.dp_relaxes += D
+        if prebuilt:
+            self.stats.prebuilt_states += D
+        else:
+            self.stats.dp_relaxes += D
 
     def _mesh(self):
         if self._mesh_relaxer is None:

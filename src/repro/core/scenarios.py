@@ -127,6 +127,8 @@ def churn_trace(n_users: int, n_ticks: int, *, seed: int = 0,
                 p_fail: float = 0.0, p_recover: float = 0.5,
                 fail_nodes: Sequence[int] = (1,),
                 p_move: float = 0.0, n_edge: int = 1,
+                failure_mode: str = "iid",
+                tier_groups: Optional[Sequence[Sequence[int]]] = None,
                 ) -> List[List[ChurnEvent]]:
     """Per-tick churn events for a user population (Sec. V online regime).
 
@@ -140,10 +142,34 @@ def churn_trace(n_users: int, n_ticks: int, *, seed: int = 0,
     ``fail_nodes``; ``p_move`` re-associates a user to a uniformly drawn
     edge slot (mobility across ``n_edge`` helpers).  Deterministic per
     seed; every tick emits one ``uplink`` event per user.
+
+    ``failure_mode`` picks the outage structure:
+
+    ``"iid"``   (default) one independent Markov chain per node of
+                ``fail_nodes`` — uncorrelated single-node failures;
+    ``"tier"``  one Markov chain per *group* of ``tier_groups`` (default:
+                all of ``fail_nodes`` as one group) — a group fails and
+                recovers jointly, emitting one event per member in the
+                same tick.  This is the correlated regional-outage model
+                (a rack / power-domain / backhaul-segment outage takes a
+                whole tier down at once), the failure masks the
+                contingency library's per-tier candidates precompute.
     """
+    if failure_mode not in ("iid", "tier"):
+        raise ValueError(f"failure_mode must be 'iid' or 'tier', got "
+                         f"{failure_mode!r}")
+    if tier_groups is not None and failure_mode != "tier":
+        raise ValueError("tier_groups= only applies with "
+                         "failure_mode='tier'")
     rng = np.random.default_rng(seed)
     q = np.full(n_users, q_mean)
-    failed: Dict[int, bool] = {n: False for n in fail_nodes}
+    if failure_mode == "tier":
+        groups: List[Tuple[int, ...]] = (
+            [tuple(int(n) for n in fail_nodes)] if tier_groups is None
+            else [tuple(int(n) for n in g) for g in tier_groups])
+    else:
+        groups = [(int(n),) for n in fail_nodes]
+    failed: Dict[int, bool] = {g: False for g in range(len(groups))}
     trace: List[List[ChurnEvent]] = []
     for _ in range(n_ticks):
         events: List[ChurnEvent] = []
@@ -156,14 +182,16 @@ def churn_trace(n_users: int, n_ticks: int, *, seed: int = 0,
             for u in movers:
                 events.append(ChurnEvent("attach", int(u),
                                          int(rng.integers(n_edge))))
-        for node in fail_nodes:
-            if failed[node]:
+        for g, nodes in enumerate(groups):
+            if failed[g]:
                 if rng.random() < p_recover:
-                    failed[node] = False
-                    events.append(ChurnEvent("recover", None, int(node)))
+                    failed[g] = False
+                    events.extend(ChurnEvent("recover", None, node)
+                                  for node in nodes)
             elif p_fail > 0 and rng.random() < p_fail:
-                failed[node] = True
-                events.append(ChurnEvent("fail", None, int(node)))
+                failed[g] = True
+                events.extend(ChurnEvent("fail", None, node)
+                              for node in nodes)
         trace.append(events)
     return trace
 

@@ -18,6 +18,7 @@ from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
 from repro.configs.base import ArchConfig
+from repro.core.contingency import ContingencyLibrary
 from repro.core.plan import Plan, migration_delta
 from repro.core.problem import Config, Solution
 
@@ -108,14 +109,18 @@ class FinFailover:
     new_config: Optional[Config]
     blocks_moved: int
     migration_bits: float
+    #: True when the solution was installed from a contingency-library
+    #: entry (zero DP relaxations) instead of warm re-solved
+    library_hit: bool = False
 
     @property
     def feasible(self) -> bool:
         return self.solution.feasible
 
 
-def fin_failover(plan: Plan, failed_node: int,
-                 *, recover: bool = False) -> FinFailover:
+def fin_failover(plan: Plan, failed_node: int, *, recover: bool = False,
+                 library: Optional[ContingencyLibrary] = None
+                 ) -> FinFailover:
     """Re-place after a node failure (or recovery) as a warm plan delta.
 
     Masks (or unmasks) ``failed_node`` on the plan and issues a warm
@@ -124,14 +129,26 @@ def fin_failover(plan: Plan, failed_node: int,
     result is bit-exact vs a cold ``solve_fin`` on the reduced network;
     the report carries the migration cost of moving the re-hosted blocks'
     state, the placement analogue of :class:`ReshardPlan`.
+
+    With a ``core.contingency`` ``library`` covering the target mask the
+    solution is *installed* from the precomputed entry instead — zero DP
+    relaxations, identical result (``library_hit`` flags it); uncovered
+    or environment-stale masks fall through to the warm re-solve above.
     """
     old = plan.solution.config if plan.solution is not None else None
+    target = plan._masked.copy()
+    target[failed_node] = not recover
+    entry = library.lookup(target) if library is not None else None
     if recover:
         plan.unmask_node(failed_node)
     else:
         plan.mask_node(failed_node)
-    sol = plan.solve()
+    if entry is not None:
+        sol = plan.install_solution(entry.solution, dps=entry.dps)
+    else:
+        sol = plan.solve()
     new = sol.config if sol.feasible else None
     moved, bits = migration_delta(plan.profile, old, new)
     return FinFailover(solution=sol, old_config=old, new_config=new,
-                       blocks_moved=moved, migration_bits=bits)
+                       blocks_moved=moved, migration_bits=bits,
+                       library_hit=entry is not None)

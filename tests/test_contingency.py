@@ -1,0 +1,375 @@
+"""Contingency plan library: precomputed O(1) failover (core/contingency.py).
+
+Covers the mask-candidate generator, the Plan-level library (refill /
+lookup / staleness / restore invariants / bit-exactness vs the warm
+re-solve), the Population-level prebuilder (signature parity, coverage
+probe, pinning through compaction, zero-relaxation failure ticks through
+the orchestrator), the tier-correlated churn trace, and the
+library-aware ``fin_failover``.  No jax model is involved — these run on
+the placement layer alone (the serving-engine integration lives in
+tests/test_serve_engine.py).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (AppRequirements, ChurnOrchestrator,
+                        ContingencyLibrary, ContingencyPolicy, Network, Plan,
+                        Population, PopulationContingency, candidate_masks,
+                        churn_trace, paper_profile, solve_fin, tier_groups_of)
+from repro.core.contingency import NoFeasiblePlacement
+from repro.core.scenarios import paper_scenario
+from repro.runtime.elastic import fin_failover
+
+REQ = AppRequirements(alpha=0.5, delta=8e-3)
+
+
+@pytest.fixture()
+def scenario():
+    return paper_scenario(n_extra_edge=1)
+
+
+@pytest.fixture()
+def plan(scenario):
+    p = Plan(scenario, paper_profile("h2"), REQ)
+    p.solve()
+    return p
+
+
+# ---------------------------------------------------------------------------
+# candidate generation
+# ---------------------------------------------------------------------------
+
+def test_tier_groups_of_excludes_source_and_singletons(scenario):
+    groups = tier_groups_of(scenario)
+    # paper topology + 1 extra edge: [mobile(src), edge, edge, cloud] —
+    # the two edge helpers form the only multi-node non-source tier
+    assert groups == [(1, 2)]
+    for g in groups:
+        assert scenario.source_node not in g
+        assert len(g) >= 2
+
+
+def test_candidate_masks_cover_toggles_tiers_and_base():
+    base = np.zeros(4, dtype=bool)
+    base[3] = True                      # one node already down
+    cands = candidate_masks(base, 0, tier_groups=[(1, 2)])
+    keys = {m.tobytes() for m in cands}
+    # the base mask itself (fail -> recover round trips land on it)
+    assert base.tobytes() in keys
+    # every single-node toggle: fail of 1/2, recovery of 3
+    for n in (1, 2, 3):
+        m = base.copy()
+        m[n] = not m[n]
+        assert m.tobytes() in keys
+    # joint tier fail and joint tier recovery
+    m = base.copy(); m[[1, 2]] = True
+    assert m.tobytes() in keys
+    # full recovery
+    assert np.zeros(4, dtype=bool).tobytes() in keys
+    # no duplicates, nothing masks the source
+    assert len(keys) == len(cands)
+    assert not any(m[0] for m in cands)
+
+
+def test_candidate_masks_observed_and_cap():
+    base = np.zeros(5, dtype=bool)
+    obs = np.zeros(5, dtype=bool); obs[[2, 3, 4]] = True
+    cands = candidate_masks(base, 0, observed=[obs])
+    assert obs.tobytes() in {m.tobytes() for m in cands}
+    # an observed mask containing the source is dropped
+    bad = np.zeros(5, dtype=bool); bad[0] = True
+    cands = candidate_masks(base, 0, observed=[bad])
+    assert bad.tobytes() not in {m.tobytes() for m in cands}
+    # the cap truncates from the back (base + single-node first)
+    capped = candidate_masks(base, 0, max_masks=3)
+    assert len(capped) == 3
+    assert capped[0].tobytes() == base.tobytes()
+
+
+# ---------------------------------------------------------------------------
+# Plan-level library
+# ---------------------------------------------------------------------------
+
+def test_library_refill_restores_plan_state(plan):
+    sol0 = plan.solution
+    ver0, env0 = plan.version, plan.env_version
+    lib = ContingencyLibrary(plan)
+    lib.refill()
+    # masks restored, incumbent and argmin snapshots restored verbatim
+    assert not plan._masked.any()
+    assert plan.solution is sol0
+    assert plan.env_version == env0
+    assert plan.version > ver0          # mask toggles did bump version
+    # the restored base DP cache is live: a solve at the base state is
+    # relaxation-free
+    r0 = plan.stats.dp_relaxes
+    s = plan.solve()
+    assert plan.stats.dp_relaxes == r0
+    assert s.config == sol0.config and s.energy == sol0.energy
+
+
+def test_library_hits_are_bit_exact_vs_warm_resolve(scenario, plan):
+    prof = paper_profile("h2")
+    lib = ContingencyLibrary(plan, k_per_exit=4)
+    lib.refill()
+    for victim in range(scenario.n_nodes):
+        if victim == scenario.source_node:
+            continue
+        m = plan._masked.copy(); m[victim] = True
+        entry = lib.lookup(m)
+        assert entry is not None
+        assert entry.masked == (victim,)
+        # twin plan, warm path: mask -> solve -> frontier
+        twin = Plan(scenario, prof, REQ)
+        twin.solve(); twin.mask_node(victim)
+        warm = twin.solve()
+        assert entry.solution.feasible == warm.feasible
+        assert entry.solution.config == warm.config
+        assert entry.solution.energy == warm.energy
+        wf = twin.frontier(k_per_exit=4)
+        assert [(r.energy, r.config) for r in entry.frontier] == \
+               [(r.energy, r.config) for r in wf]
+    assert lib.stats.hits == scenario.n_nodes - 1
+    assert lib.stats.misses == 0
+
+
+def test_library_install_is_relaxation_free(plan):
+    lib = ContingencyLibrary(plan)
+    lib.refill(base_config=plan.solution.config)
+    m = plan._masked.copy(); m[1] = True
+    entry = lib.lookup(m)
+    r0 = plan.stats.dp_relaxes
+    plan.mask_node(1)
+    sol = plan.install_solution(entry.solution, dps=entry.dps)
+    fr = plan.frontier(k_per_exit=4)
+    # zero relaxations: install + frontier ride the entry's DP grids
+    assert plan.stats.dp_relaxes == r0
+    assert sol.meta["contingency"] is True
+    # and a subsequent solve at this state is served from the cache too
+    s2 = plan.solve()
+    assert plan.stats.dp_relaxes == r0
+    assert s2.config == sol.config
+    assert len(fr) == len(entry.frontier)
+
+
+def test_library_env_staleness_forces_miss(plan):
+    lib = ContingencyLibrary(plan)
+    lib.refill()
+    m = plan._masked.copy(); m[1] = True
+    assert lib.lookup(m) is not None
+    # a channel fade moves the environment: every lookup is a stale miss
+    plan.update_uplink(0.5e9)
+    assert lib.stale
+    assert lib.lookup(m) is None
+    assert lib.stats.stale_misses == 1
+    # mask deltas alone do NOT invalidate (env_version is mask-blind)
+    lib.refill()
+    plan.mask_node(2)
+    assert not lib.stale
+    m2 = plan._masked.copy(); m2[2] = False
+    assert lib.lookup(m2) is not None   # the recovery entry
+
+
+def test_library_observed_masks_enter_next_refill(plan):
+    lib = ContingencyLibrary(plan, policy=ContingencyPolicy(tier_groups=()))
+    lib.refill()
+    double = plan._masked.copy(); double[[1, 3]] = True
+    assert lib.lookup(double) is None   # two flips: uncovered, recorded
+    lib.refill()
+    assert lib.lookup(double) is not None   # now precomputed
+
+
+def test_library_covers_infeasible_masks(scenario):
+    nw = scenario
+    nw.compute[nw.source_node] *= 1e-3      # local-only infeasible
+    plan = Plan(nw, paper_profile("h2"), REQ)
+    assert plan.solve().feasible            # offloads to a helper
+    lib = ContingencyLibrary(
+        plan, policy=ContingencyPolicy(tier_groups=[(1, 2, 3)]))
+    lib.refill()
+    dead = np.ones(nw.n_nodes, dtype=bool); dead[nw.source_node] = False
+    entry = lib.lookup(dead)
+    assert entry is not None and not entry.feasible
+    # instant infeasibility knowledge: no solve needed to learn it
+    twin = Plan(nw, paper_profile("h2"), REQ)
+    for n in (1, 2, 3):
+        twin.mask_node(n)
+    assert twin.solve().feasible == entry.feasible
+
+
+def test_no_feasible_placement_error_payload():
+    err = NoFeasiblePlacement([2, 3], None)
+    assert isinstance(err, RuntimeError)
+    assert err.masked_nodes == [2, 3]
+    assert err.frontier is None
+    assert "2" in str(err) and "3" in str(err)
+
+
+# ---------------------------------------------------------------------------
+# fin_failover with a library
+# ---------------------------------------------------------------------------
+
+def test_fin_failover_library_hit_matches_warm(scenario, plan):
+    lib = ContingencyLibrary(plan)
+    lib.refill()
+    r0 = plan.stats.dp_relaxes
+    out = fin_failover(plan, 1, library=lib)
+    assert out.library_hit
+    assert plan.stats.dp_relaxes == r0          # solve-free
+    twin = Plan(scenario, paper_profile("h2"), REQ)
+    twin.solve()
+    ref = fin_failover(twin, 1)
+    assert not ref.library_hit
+    assert out.solution.energy == ref.solution.energy
+    assert out.new_config == ref.new_config
+    assert out.blocks_moved == ref.blocks_moved
+    assert out.migration_bits == ref.migration_bits
+    # recovery without a refill: the all-clear base mask is an entry too
+    out2 = fin_failover(plan, 1, recover=True, library=lib)
+    assert out2.library_hit
+    assert plan.stats.dp_relaxes == r0
+
+
+# ---------------------------------------------------------------------------
+# population prebuilder
+# ---------------------------------------------------------------------------
+
+def test_state_key_matches_assign_states_encoding(scenario):
+    pop = Population(scenario, paper_profile("h2"), REQ, n_users=4)
+    pop.mask_node(2, users=[1])
+    pop.ingest(pop._bw_vec * np.linspace(0.4, 1.0, 4)[:, None])
+    for u in range(pop.U):
+        sid = int(pop._user_state[u])
+        key = pop._state_key(pop._qpack[u], pop._masked[u])
+        assert pop._state_ids[key] == sid
+
+
+def test_population_refill_prebuilds_and_coverage_hits(scenario):
+    pop = Population(scenario, paper_profile("h2"), REQ, n_users=6)
+    pop.solve(range(6), build_solutions=False)
+    lib = PopulationContingency(pop)
+    n = lib.refill()
+    assert n > 0
+    assert pop.stats.prebuilt_states == n
+    assert pop._pinned and all(pop._states[s].dps is not None
+                               for s in pop._pinned)
+    # a failure the library covers: coverage predicts hits only, and the
+    # actual failure tick relaxes NOTHING
+    h, m = lib.coverage(1, "fail")
+    assert h > 0 and m == 0
+    r0 = pop.stats.dp_relaxes
+    pop.mask_node(1)
+    pop.solve(range(6), build_solutions=False)
+    assert pop.stats.dp_relaxes == r0
+    # bit-exact vs a twin that never prebuilt
+    twin = Population(scenario, paper_profile("h2"), REQ, n_users=6)
+    twin.solve(range(6), build_solutions=False)
+    twin.mask_node(1)
+    twin.solve(range(6), build_solutions=False)
+    assert np.array_equal(pop._inc_exit, twin._inc_exit)
+    assert np.array_equal(pop._inc_place, twin._inc_place)
+    assert np.array_equal(pop._inc_energy, twin._inc_energy)
+
+
+def test_population_pinned_states_survive_compaction(scenario):
+    pop = Population(scenario, paper_profile("h2"), REQ, n_users=3,
+                     max_states=2)
+    pop.solve(range(3), build_solutions=False)
+    lib = PopulationContingency(
+        pop, policy=ContingencyPolicy(tier_groups=()))
+    lib.refill()
+    pinned_keys = {pop._state_key(pop._states[s].stq, pop._states[s].mask)
+                   for s in pop._pinned}
+    # churn the packs to force evictions of unpinned states
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        pop.ingest(pop._bw_vec * rng.uniform(0.3, 1.0, (3, 1)))
+    assert pop.stats.state_evictions > 0
+    for key in pinned_keys:
+        sid = pop._state_ids.get(key)
+        assert sid is not None
+        assert pop._states[sid].dps is not None
+    # slice churn clears the table AND the pins (states are stale)
+    pop.update_slice(0.9)
+    assert pop._pinned == set()
+
+
+def test_orchestrator_contingency_zero_relax_ticks(scenario):
+    prof = paper_profile("h2")
+    pop = Population(scenario, prof, REQ, n_users=8)
+    orch = ChurnOrchestrator(population=pop, contingency=True)
+    trace = churn_trace(8, 12, seed=3, p_fail=0.4, p_recover=0.5,
+                        fail_nodes=(1, 2), failure_mode="tier")
+    r0 = pop.stats.dp_relaxes
+    stats = orch.run(trace)
+    hits = stats.total("contingency_hits")
+    misses = stats.total("contingency_misses")
+    assert hits > 0 and misses == 0
+    assert stats.total("contingency_prebuilt") > 0
+    # the acceptance criterion, population form: covered failure ticks
+    # perform ZERO DP relaxations (all prebuilt, counted separately)
+    assert pop.stats.dp_relaxes == r0
+    assert pop.stats.prebuilt_states > 0
+    # bit-exact vs the same trace without contingency
+    pop2 = Population(scenario, prof, REQ, n_users=8)
+    orch2 = ChurnOrchestrator(population=pop2)
+    trace2 = churn_trace(8, 12, seed=3, p_fail=0.4, p_recover=0.5,
+                         fail_nodes=(1, 2), failure_mode="tier")
+    stats2 = orch2.run(trace2)
+    assert np.array_equal(pop._inc_exit, pop2._inc_exit)
+    assert np.array_equal(pop._inc_place, pop2._inc_place)
+    assert np.array_equal(pop._inc_energy, pop2._inc_energy)
+    for t1, t2 in zip(stats.ticks, stats2.ticks):
+        assert t1.energy == t2.energy
+        assert t1.n_resolved == t2.n_resolved
+        assert t1.n_migrations == t2.n_migrations
+
+
+def test_orchestrator_contingency_requires_population(scenario):
+    plan = Plan(scenario, paper_profile("h2"), REQ)
+    with pytest.raises(ValueError, match="population"):
+        ChurnOrchestrator(plans=[plan], contingency=True)
+
+
+# ---------------------------------------------------------------------------
+# tier-correlated churn traces
+# ---------------------------------------------------------------------------
+
+def test_churn_trace_tier_mode_fails_groups_jointly():
+    trace = churn_trace(2, 60, seed=1, p_fail=0.3, p_recover=0.4,
+                        fail_nodes=(1, 2), failure_mode="tier")
+    saw_fail = saw_recover = False
+    for events in trace:
+        fails = sorted(ev.value for ev in events if ev.kind == "fail")
+        recovers = sorted(ev.value for ev in events
+                          if ev.kind == "recover")
+        # all-or-nothing: the whole group fails/recovers in one tick
+        assert fails in ([], [1, 2])
+        assert recovers in ([], [1, 2])
+        saw_fail |= bool(fails)
+        saw_recover |= bool(recovers)
+    assert saw_fail and saw_recover
+
+
+def test_churn_trace_tier_mode_explicit_groups():
+    trace = churn_trace(1, 80, seed=2, p_fail=0.5, p_recover=0.5,
+                        fail_nodes=(1, 2, 3), failure_mode="tier",
+                        tier_groups=[(1, 2), (3,)])
+    for events in trace:
+        fails = set(ev.value for ev in events if ev.kind == "fail")
+        # groups are independent chains but each is all-or-nothing
+        assert not (1 in fails) ^ (2 in fails)
+
+
+def test_churn_trace_failure_mode_validation():
+    with pytest.raises(ValueError, match="failure_mode"):
+        churn_trace(1, 1, failure_mode="weibull")
+    with pytest.raises(ValueError, match="tier_groups"):
+        churn_trace(1, 1, failure_mode="iid", tier_groups=[(1,)])
+
+
+def test_churn_trace_iid_mode_unchanged():
+    a = churn_trace(3, 20, seed=7, p_fail=0.2, fail_nodes=(1, 2))
+    b = churn_trace(3, 20, seed=7, p_fail=0.2, fail_nodes=(1, 2),
+                    failure_mode="iid")
+    assert a == b
