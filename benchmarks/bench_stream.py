@@ -1,0 +1,213 @@
+"""Streaming tick pipeline benchmarks (PR 8): each tentpole fast path —
+double-buffered ticks, the fused newborn launch, bounded re-relaxation —
+measured separately against the PR-7 synchronous machinery on identical
+churn traces, with bit-exactness asserted in-bench, plus the 1e6/1e7-user
+scale rows.
+
+Rows:
+  ``stream_vs_sync``     ``run_arrays`` (ingest of tick t overlapped with
+                         the in-flight relax of tick t-1) vs the
+                         synchronous ``step_arrays`` loop on the same
+                         draws; every tick's energy/resolve/migration
+                         accounting is asserted identical.
+  ``fused_newborn_relax`` a cohort's newborn states relaxed in ONE chained
+                         launch vs the chunked fallback forced by a 1-byte
+                         ``REPRO_RELAX_CHUNK_BYTES`` budget (bit-exact).
+  ``bounded_rerelax``    warm plan re-solves after single-link backhaul
+                         repricings: affected-layer-onward resume vs the
+                         full-chain relax (bit-exact).
+  ``stream_scale_1e6`` / ``stream_scale_1e7``  streaming AR(1) churn
+                         throughput at 1e6 / 1e7 users; the 1e7 row
+                         derives ``scale_efficiency`` (its user-ticks/s
+                         over the same-run 1e6 row's) — a same-host ratio
+                         the CI regression gate can hold across runners.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Iterable, List
+
+import numpy as np
+
+from repro.core import (ChurnOrchestrator, Plan, Population, paper_profile,
+                        population_cohorts)
+from repro.core.multiapp import PAPER_MULTIAPP_REQS
+from repro.core.scenarios import paper_scenario
+
+from .bench_online import _ar1_draws
+from .common import Row, kv, smoke
+
+
+def _reports_equal(a, b) -> bool:
+    return all(ra.energy == rb.energy
+               and ra.n_resolved == rb.n_resolved
+               and ra.n_held == rb.n_held
+               and ra.migration_bits == rb.migration_bits
+               and ra.n_migrations == rb.n_migrations
+               for ra, rb in zip(a, b))
+
+
+def _stream_vs_sync_row(*, users: int, ticks: int) -> Row:
+    draws = np.stack(_ar1_draws(users, ticks))
+    sync = ChurnOrchestrator(
+        population=population_cohorts(users, n_extra_edge=2),
+        hysteresis=0.05)
+    stream = ChurnOrchestrator(
+        population=population_cohorts(users, n_extra_edge=2),
+        hysteresis=0.05)
+    t0 = time.perf_counter()
+    reps_sync = [sync.step_arrays(quality=q) for q in draws]
+    dt_sync = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    reps_str = stream.run_arrays(draws)
+    dt_str = time.perf_counter() - t0
+    assert _reports_equal(reps_sync, reps_str), \
+        "streaming pipeline diverged from the synchronous tick loop"
+    user_ticks = users * ticks
+    return Row("stream_vs_sync", dt_str / user_ticks * 1e6,
+               kv(users=users, ticks=ticks,
+                  stream_user_ticks_per_s=user_ticks / dt_str,
+                  sync_user_ticks_per_s=user_ticks / dt_sync,
+                  speedup=dt_sync / dt_str, agree=1))
+
+
+def _fused_newborn_row(*, states: int, trials: int) -> Row:
+    """Newborn cohort states relaxed fused vs chunked (both timed on the
+    relax-bearing first solve; interleaved best-of-N)."""
+    nw = paper_scenario(n_extra_edge=2)
+    prof = paper_profile("h4")
+    req = PAPER_MULTIAPP_REQS["h4"]
+    vec = np.linspace(0.3, 1.0, states)[:, None] * 1e9 \
+        * np.linspace(0.5, 1.5, nw.n_nodes)[None, :]
+
+    def solve(chunked: bool):
+        if chunked:
+            os.environ["REPRO_RELAX_CHUNK_BYTES"] = "1"
+        else:
+            os.environ.pop("REPRO_RELAX_CHUNK_BYTES", None)
+        try:
+            pop = Population(nw, prof, req, states)
+            pop.ingest(vec)                 # one newborn state per user
+            t0 = time.perf_counter()
+            sols = pop.solve()
+            dt = time.perf_counter() - t0
+        finally:
+            os.environ.pop("REPRO_RELAX_CHUNK_BYTES", None)
+        key = [(s.found, tuple(s.config.placement) if s.found else None,
+                s.energy) for s in sols]
+        return pop.stats, key, dt
+
+    best_f = best_c = float("inf")
+    for _ in range(trials):
+        st_f, key_f, dt_f = solve(False)
+        st_c, key_c, dt_c = solve(True)
+        best_f = min(best_f, dt_f)
+        best_c = min(best_c, dt_c)
+        assert key_f == key_c, "chunked fallback diverged from fused launch"
+        assert st_f.fused_relaxes >= 1 and st_f.chunked_relaxes == 0
+        assert st_c.chunked_relaxes >= 1 and st_c.fused_relaxes == 0
+    return Row("fused_newborn_relax", best_f * 1e6,
+               kv(states=states, fused_ms=best_f * 1e3,
+                  chunked_ms=best_c * 1e3, speedup=best_c / best_f,
+                  agree=1))
+
+
+def _bounded_rerelax_row(*, ticks: int, trials: int) -> Row:
+    """Warm re-solves after single-link backhaul repricings: bounded
+    resume vs full-chain relax, interleaved on identical delta traces."""
+    nw = paper_scenario(n_extra_edge=2)
+    prof = paper_profile("h1")
+    req = PAPER_MULTIAPP_REQS["h1"]
+    N = nw.n_nodes
+
+    def scales(seed):
+        rng = np.random.default_rng(seed)
+        out = []
+        for _ in range(ticks):
+            sc = np.ones((N, N))
+            n1, n2 = rng.integers(1, N, 2)
+            sc[n1, n2] = sc[n2, n1] = 0.6 + 0.8 * rng.random()
+            out.append(sc)
+        return out
+
+    def run(resume: bool, seed: int):
+        p = Plan(nw, prof, req)
+        p.solve()
+        key = []
+        t0 = time.perf_counter()
+        for sc in scales(seed):
+            p.update_backhaul(sc)
+            if not resume:
+                p._dp_resume = None
+            s = p.solve()
+            key.append((tuple(s.config.placement) if s.config else None,
+                        s.energy))
+        return time.perf_counter() - t0, key, p.stats
+
+    best_b = best_f = float("inf")
+    stats_b = None
+    for tr in range(trials):
+        dt_b, key_b, stats_b = run(True, seed=tr)
+        dt_f, key_f, _ = run(False, seed=tr)
+        best_b = min(best_b, dt_b)
+        best_f = min(best_f, dt_f)
+        assert key_b == key_f, "bounded resume diverged from full relax"
+    assert stats_b.bounded_relaxes > 0
+    return Row("bounded_rerelax", best_b / ticks * 1e6,
+               kv(ticks=ticks, bounded_ms=best_b * 1e3,
+                  full_ms=best_f * 1e3, speedup=best_f / best_b,
+                  bounded_relaxes=stats_b.bounded_relaxes,
+                  layers_skipped=stats_b.layers_skipped, agree=1))
+
+
+def _stream_scale_row(name: str, *, users: int, ticks: int,
+                      baseline_tps: float = 0.0) -> Row:
+    """Streaming scale row: ``run_arrays`` over precomputed AR(1) draws.
+    The first tick is an untimed warm-up — it pays the all-users-stale
+    ingest plus first-touch page faults on the freshly allocated cohort
+    arrays, which at 1e7 users swamps the steady-state rate the row
+    claims.  ``baseline_tps`` (the same-run smaller row's throughput)
+    derives the machine-robust ``scale_efficiency`` ratio for the CI
+    gate."""
+    t0 = time.perf_counter()
+    pops = population_cohorts(users, n_extra_edge=2)
+    ob = ChurnOrchestrator(population=pops, hysteresis=0.05)
+    dt_init = time.perf_counter() - t0
+    draws = np.stack(_ar1_draws(users, ticks + 1))
+    warm = ob.run_arrays(draws[:1])
+    t0 = time.perf_counter()
+    reps = warm + ob.run_arrays(draws[1:])
+    dt = time.perf_counter() - t0
+    user_ticks = users * ticks
+    tps = user_ticks / dt
+    extra = {}
+    if baseline_tps:
+        extra["scale_efficiency"] = tps / baseline_tps
+    return Row(name, dt / user_ticks * 1e6,
+               kv(users=users, ticks=ticks, user_ticks_per_s=tps,
+                  init_s=dt_init,
+                  resolves=sum(r.n_resolved for r in reps),
+                  states=sum(p.n_states for p in ob.pops), **extra))
+
+
+def run() -> Iterable[Row]:
+    if smoke():
+        sv_users, ticks, trials = 2_000, 3, 2
+        newborn_states = 24
+        scales: List = [("stream_scale_2e3", 2_000, 3),
+                        ("stream_scale_2e4", 20_000, 3)]
+    else:
+        sv_users, ticks, trials = 100_000, 4, 3
+        newborn_states = 64
+        scales = [("stream_scale_1e6", 1_000_000, 4),
+                  ("stream_scale_1e7", 10_000_000, 3)]
+    yield _stream_vs_sync_row(users=sv_users, ticks=ticks)
+    yield _fused_newborn_row(states=newborn_states, trials=trials)
+    yield _bounded_rerelax_row(ticks=12 if smoke() else 30, trials=trials)
+    base = _stream_scale_row(scales[0][0], users=scales[0][1],
+                             ticks=scales[0][2])
+    yield base
+    base_tps = float(base.to_dict()["user_ticks_per_s"])
+    yield _stream_scale_row(scales[1][0], users=scales[1][1],
+                            ticks=scales[1][2], baseline_tps=base_tps)

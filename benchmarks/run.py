@@ -21,6 +21,9 @@ CI perf-regression smoke job.  Benches match the paper artifacts:
             population path on self-calibrated over-subscription
   failover  contingency-library hits vs warm mask+re-solve vs cold rebuild
             (bit-exact, zero-relaxation), + tier-outage trace hit rate
+  stream    streaming tick pipeline: double-buffered ticks vs the sync
+            loop, fused vs chunked newborn relax, bounded re-relaxation
+            (all asserted bit-exact), + 1e6/1e7-user scale rows
   kernels   Pallas kernel vs reference oracle timings (interpret mode)
   roofline  dry-run derived roofline terms per (arch x shape)
 """
@@ -43,6 +46,7 @@ BENCHES = [
     "bench_online",
     "bench_congestion",
     "bench_failover",
+    "bench_stream",
     "bench_kernels",
     "bench_engine",
     "bench_roofline",

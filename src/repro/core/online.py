@@ -89,6 +89,15 @@ class TickReport:
     contingency_hits: int = 0    # affected states whose mask was prebuilt
     contingency_misses: int = 0  # affected states that had to relax
     contingency_prebuilt: int = 0  # states prebuilt by this tick's refill
+    # per-phase wall-ms breakdown (zero unless every cohort was built with
+    # ``Population(..., timing=True)``; reprice is timed by the
+    # orchestrator).  Streaming ticks overlap phases, so a tick's relax
+    # time may partially attribute to the tick whose ingest it overlapped
+    # with — sums over a run are exact either way.
+    t_ingest_ms: float = 0.0     # channel ingest + requantize
+    t_relax_ms: float = 0.0      # banded relaxation launches
+    t_post_ms: float = 0.0       # exact post-pass
+    t_reprice_ms: float = 0.0    # congestion fixed point (run_tick)
 
 
 @dataclass
@@ -235,6 +244,13 @@ class ChurnOrchestrator:
             self._pop_of[gids] = pi
             self._local_of[gids] = np.arange(p.U)
         assert (self._pop_of >= 0).all()
+        #: cached per-cohort local index ranges (dense ticks touch every
+        #: user, so the per-tick pop_of scans collapse to these)
+        self._loc_all = [np.arange(p.U, dtype=np.int64) for p in pops]
+        #: per-cohort uplink factor matrices for the fused dense ingest
+        #: (lazily built; rows self-heal against attachment moves)
+        self._fac: Optional[List[np.ndarray]] = None
+        self._fac_attached: Optional[np.ndarray] = None
         self._edge_nodes = [n for n, spec in enumerate(nw.nodes)
                             if spec.tier == "edge"
                             and n != nw.source_node]
@@ -525,46 +541,77 @@ class ChurnOrchestrator:
     def _population_tick(self, rep: TickReport, uplink_mask: np.ndarray,
                          dirty_mask: np.ndarray,
                          requant: bool = True) -> None:
-        # channel + mobility funnel: one vectorized ingest per cohort
-        up_idx = np.nonzero(uplink_mask)[0]
-        if len(up_idx):
-            vecs = self._uplink_vectors(up_idx)
+        snap = self._timing_snapshot()
+        # channel + mobility funnel: one vectorized ingest per cohort.
+        # Dense ticks (every user dirty — the step_arrays common case)
+        # skip the per-cohort membership scans and the (U, N) staging
+        # vector: the cached per-cohort factor matrix turns the whole
+        # ingest into one fused scale-times-factors multiply per cohort,
+        # bit-identical per row to _uplink_vectors (same operand order).
+        dense = bool(uplink_mask.all())
+        if dense:
+            fac = self._factors()
             changed_total = 0
             for pi, p in enumerate(self.pops):
-                pos = np.nonzero(self._pop_of[up_idx] == pi)[0]
-                if not len(pos):
-                    continue
-                loc = self._local_of[up_idx[pos]]
-                changed = p.ingest(vecs[pos], users=loc, requant=requant)
+                scale = self.uplink_bps * self.quality[p.user_ids]
+                changed = p.ingest_factors(scale, fac[pi], requant=requant)
                 if changed is not None:
                     changed_total += int(np.count_nonzero(changed))
-            rep.n_uplink_updates = len(up_idx)
+            rep.n_uplink_updates = self.n_users
             rep.n_quant_changed = changed_total
+        else:
+            up_idx = np.nonzero(uplink_mask)[0]
+            if len(up_idx):
+                vecs = self._uplink_vectors(up_idx)
+                changed_total = 0
+                for pi, p in enumerate(self.pops):
+                    pos = np.nonzero(self._pop_of[up_idx] == pi)[0]
+                    if not len(pos):
+                        continue
+                    loc = self._local_of[up_idx[pos]]
+                    changed = p.ingest(vecs[pos], users=loc,
+                                       requant=requant)
+                    if changed is not None:
+                        changed_total += int(np.count_nonzero(changed))
+                rep.n_uplink_updates = len(up_idx)
+                rep.n_quant_changed = changed_total
 
         # hysteresis gate: vectorized exact incumbent re-check
-        dirty_idx = np.nonzero(dirty_mask)[0]
-        rep.n_dirty = len(dirty_idx)
+        all_dirty = dense and bool(dirty_mask.all())
+        dirty_idx = np.nonzero(dirty_mask)[0] if not all_dirty else None
+        rep.n_dirty = (self.n_users if all_dirty else len(dirty_idx))
         moved_bits = np.zeros(self.n_users)
         migrated = np.zeros(self.n_users, dtype=bool)
         for pi, p in enumerate(self.pops):
-            pos = np.nonzero(self._pop_of[dirty_idx] == pi)[0]
-            if not len(pos):
-                continue
-            gl = dirty_idx[pos]
-            loc = self._local_of[gl]
+            if all_dirty:
+                gl = p.user_ids
+                loc = self._loc_all[pi]
+            else:
+                pos = np.nonzero(self._pop_of[dirty_idx] == pi)[0]
+                if not len(pos):
+                    continue
+                gl = dirty_idx[pos]
+                loc = self._local_of[gl]
             if self.always_resolve:
                 # every dirty user re-solves; skip the (unused) incumbent
                 # evaluation — identical decisions, energies overwritten
                 res = np.ones(len(gl), dtype=bool)
+                n_res = len(gl)
             else:
-                no_inc, feas, energy = p.evaluate_incumbents(loc)
+                no_inc, feas, energy = p.evaluate_incumbents(
+                    None if all_dirty else loc)
                 thresh = self._ref_energy[gl] * (1.0 + self.hysteresis)
                 res = no_inc | ~feas | (energy > thresh)
-            held = ~res
-            rep.n_held += int(np.count_nonzero(held))
-            if held.any():
-                self._cur_energy[gl[held]] = energy[held]
-            if not res.any():
+                n_res = int(np.count_nonzero(res))
+                rep.n_held += len(gl) - n_res
+                if n_res == 0:
+                    # everyone held: one aligned store, no boolean gathers
+                    self._cur_energy[gl] = energy
+                    continue
+                held = ~res
+                if held.any():
+                    self._cur_energy[gl[held]] = energy[held]
+            if n_res == 0:
                 continue
 
             # batched warm re-solve of this cohort's re-placing users
@@ -578,36 +625,8 @@ class ChurnOrchestrator:
                 continue
             p.solve(loc_res, build_solutions=False)
             rep.n_resolved += len(loc_res)
-            new_found = p.inc_found[loc_res]
-            new_place = p._inc_place[loc_res]
-            new_energy = p._inc_energy[loc_res]
-            failed = ~new_found
-            rep.n_failed += int(np.count_nonzero(failed))
-            self._cur_energy[gl_res[failed]] = np.inf
-            self._ref_energy[gl_res[failed]] = np.inf
-            self._cur_energy[gl_res[new_found]] = new_energy[new_found]
-            self._ref_energy[gl_res[new_found]] = new_energy[new_found]
-
-            # migration accounting, vectorized but bit-identical to
-            # migration_delta per user: the -1 padding makes "block present
-            # in only one config" a plain element mismatch, and the bits
-            # accumulate column-by-column in the same order as the scalar
-            # loop (adding 0.0 for unmoved blocks is exact)
-            elig = new_found & old_found
-            if elig.any():
-                diff = old_place[elig] != new_place[elig]      # (R, L)
-                L = p.L
-                cut = p.profile.cut_bits
-                bits = np.zeros(diff.shape[0])
-                for i in range(L):
-                    bits += np.where(diff[:, i],
-                                     float(cut[min(i, L - 1)]), 0.0)
-                moved = diff.sum(axis=1)
-                gl_elig = gl_res[elig]
-                rep.n_migrations += int(np.count_nonzero(moved))
-                rep.blocks_moved += int(moved.sum())
-                migrated[gl_elig] = moved > 0
-                moved_bits[gl_elig] = bits
+            self._account_resolves(rep, p, gl_res, loc_res, old_found,
+                                   old_place, migrated, moved_bits)
         # per-plan parity: migration bits accumulate per user in global
         # index order (float addition order matters)
         mb = 0.0
@@ -623,7 +642,10 @@ class ChurnOrchestrator:
         # state) touches nothing, keeping coupled ticks bit-exact vs the
         # uncoupled path.
         if self.congestion is not None:
+            t_rp = time.perf_counter() if snap is not None else 0.0
             crep = self.congestion.run_tick()
+            if snap is not None:
+                rep.t_reprice_ms = (time.perf_counter() - t_rp) * 1e3
             rep.congestion_iters = crep.iterations
             rep.congestion_converged = crep.converged
             rep.n_repriced = crep.n_repriced
@@ -648,6 +670,192 @@ class ChurnOrchestrator:
 
         fin = np.isfinite(self._cur_energy)
         rep.energy = float(self._cur_energy[fin].sum())
+        self._timing_fill(rep, snap)
+
+    # ------------------------------------------------------- streaming ticks
+    def run_arrays(self, qualities: np.ndarray,
+                   attaches: Optional[np.ndarray] = None, *,
+                   stream: bool = True) -> List[TickReport]:
+        """Run a whole array-form churn trace (population mode only).
+
+        ``qualities`` is (T, U) per-tick channel draws; ``attaches`` an
+        optional (T, U) edge-slot matrix.  With ``stream=True`` (the
+        default) ticks run as a double-buffered pipeline: tick t's
+        numpy-side channel ingest overlaps tick t-1's in-flight
+        relaxation (launched on a background thread by
+        ``Population.solve_begin``), and tick t-1's post-pass reads its
+        begin-time bandwidth snapshot — so every decision, energy and
+        migration stays bit-identical to the synchronous
+        :meth:`step_arrays` loop on the same draws.  Congestion coupling
+        and the frontier policy serialize each tick around shared state,
+        so those configurations (and ``stream=False``) take the
+        synchronous path.
+        """
+        if self.pops is None:
+            raise ValueError("run_arrays requires population mode")
+        qualities = np.asarray(qualities, dtype=np.float64)
+        U = self.n_users
+        if qualities.ndim != 2 or qualities.shape[1] != U:
+            raise ValueError(f"qualities must be (T, {U}), got "
+                             f"{qualities.shape}")
+        if attaches is not None:
+            attaches = np.asarray(attaches, dtype=np.int64)
+            if attaches.shape != qualities.shape:
+                raise ValueError(
+                    f"attaches must match qualities shape "
+                    f"{qualities.shape}, got {attaches.shape}")
+        if not stream or self.congestion is not None \
+                or self.placement_policy == "frontier":
+            return [self.step_arrays(
+                        qualities[t],
+                        None if attaches is None else attaches[t])
+                    for t in range(len(qualities))]
+        reports: List[TickReport] = []
+        prev = None                # in-flight tick: (rep, pendings, snap)
+        for t in range(len(qualities)):
+            rep = TickReport(tick=self._tick)
+            self._tick += 1
+            snap = self._timing_snapshot()
+            self.quality[:] = qualities[t]
+            rep.n_events += U
+            if attaches is not None:
+                slots = attaches[t] % max(1, len(self._edge_nodes))
+                moved = slots != self.attached
+                self.attached[moved] = slots[moved]
+                rep.n_events += int(np.count_nonzero(moved))
+            # ingest(t) overlaps relax(t-1): writes only the bandwidth
+            # store + stale flags, while the in-flight post-pass reads
+            # its begin-time snapshot
+            self._stream_ingest(rep)
+            if prev is not None:
+                self._finish_tick(*prev)
+                reports.append(prev[0])
+            prev = (rep, self._gate_and_begin(rep), snap)
+        if prev is not None:
+            self._finish_tick(*prev)
+            reports.append(prev[0])
+        return reports
+
+    def _stream_ingest(self, rep: TickReport) -> None:
+        """Dense fused ingest of the current quality/attachment state into
+        every cohort (requantization deferred to the resolve gather)."""
+        fac = self._factors()
+        for pi, p in enumerate(self.pops):
+            scale = self.uplink_bps * self.quality[p.user_ids]
+            p.ingest_factors(scale, fac[pi], requant=False)
+        rep.n_uplink_updates = self.n_users
+        rep.n_dirty = self.n_users
+
+    def _gate_and_begin(self, rep: TickReport) -> list:
+        """Hysteresis-gate every cohort and launch its newborn relaxation
+        in flight (``solve_begin(stream=True)``); returns the per-cohort
+        pending handles for :meth:`_finish_tick`."""
+        pendings = []
+        for pi, p in enumerate(self.pops):
+            gl = p.user_ids
+            loc = self._loc_all[pi]
+            if self.always_resolve:
+                gl_res, loc_res = gl, loc
+            else:
+                no_inc, feas, energy = p.evaluate_incumbents(None)
+                thresh = self._ref_energy[gl] * (1.0 + self.hysteresis)
+                res = no_inc | ~feas | (energy > thresh)
+                n_res = int(np.count_nonzero(res))
+                rep.n_held += p.U - n_res
+                if n_res == 0:
+                    self._cur_energy[gl] = energy
+                    pendings.append(None)
+                    continue
+                held = ~res
+                if held.any():
+                    self._cur_energy[gl[held]] = energy[held]
+                gl_res = gl[res] if n_res < p.U else gl
+                loc_res = loc[res] if n_res < p.U else loc
+            old_found = p.inc_found[loc_res].copy()
+            old_place = p._inc_place[loc_res].copy()
+            pend = p.solve_begin(loc_res, build_solutions=False,
+                                 stream=True)
+            rep.n_resolved += len(loc_res)
+            pendings.append((p, pend, gl_res, loc_res, old_found,
+                             old_place))
+        return pendings
+
+    def _finish_tick(self, rep: TickReport, pendings: list, snap) -> None:
+        """Join every cohort's in-flight relaxation, run the post-passes
+        against their begin-time snapshots, and close the tick's
+        accounting — identical arithmetic to the synchronous path."""
+        moved_bits = np.zeros(self.n_users)
+        migrated = np.zeros(self.n_users, dtype=bool)
+        for item in pendings:
+            if item is None:
+                continue
+            p, pend, gl_res, loc_res, old_found, old_place = item
+            p.solve_finish(pend)
+            self._account_resolves(rep, p, gl_res, loc_res, old_found,
+                                   old_place, migrated, moved_bits)
+        mb = 0.0
+        for u in np.nonzero(migrated)[0]:
+            mb += float(moved_bits[u])
+        rep.migration_bits = mb
+        fin = np.isfinite(self._cur_energy)
+        rep.energy = float(self._cur_energy[fin].sum())
+        self._timing_fill(rep, snap)
+
+    def _timing_snapshot(self):
+        """Sums of the cohorts' phase clocks, or None when any cohort has
+        timing disabled (keeping the breakdown zero-cost by default)."""
+        if self.pops is None or not all(p._timing for p in self.pops):
+            return None
+        return (sum(p.stats.t_ingest_ms for p in self.pops),
+                sum(p.stats.t_relax_ms for p in self.pops),
+                sum(p.stats.t_post_ms for p in self.pops))
+
+    def _timing_fill(self, rep: TickReport, snap) -> None:
+        if snap is None:
+            return
+        rep.t_ingest_ms = \
+            sum(p.stats.t_ingest_ms for p in self.pops) - snap[0]
+        rep.t_relax_ms = \
+            sum(p.stats.t_relax_ms for p in self.pops) - snap[1]
+        rep.t_post_ms = \
+            sum(p.stats.t_post_ms for p in self.pops) - snap[2]
+
+    def _account_resolves(self, rep: TickReport, p: Population,
+                          gl_res: np.ndarray, loc_res: np.ndarray,
+                          old_found: np.ndarray, old_place: np.ndarray,
+                          migrated: np.ndarray,
+                          moved_bits: np.ndarray) -> None:
+        """Post-solve bookkeeping for one cohort's resolve set: the energy
+        ledgers plus migration accounting — vectorized but bit-identical
+        to ``migration_delta`` per user: the -1 padding makes "block
+        present in only one config" a plain element mismatch, and the bits
+        accumulate column-by-column in the same order as the scalar loop
+        (adding 0.0 for unmoved blocks is exact)."""
+        new_found = p.inc_found[loc_res]
+        new_place = p._inc_place[loc_res]
+        new_energy = p._inc_energy[loc_res]
+        failed = ~new_found
+        rep.n_failed += int(np.count_nonzero(failed))
+        self._cur_energy[gl_res[failed]] = np.inf
+        self._ref_energy[gl_res[failed]] = np.inf
+        self._cur_energy[gl_res[new_found]] = new_energy[new_found]
+        self._ref_energy[gl_res[new_found]] = new_energy[new_found]
+
+        elig = new_found & old_found
+        if elig.any():
+            diff = old_place[elig] != new_place[elig]          # (R, L)
+            L = p.L
+            cut = p.profile.cut_bits
+            bits = np.zeros(diff.shape[0])
+            for i in range(L):
+                bits += np.where(diff[:, i],
+                                 float(cut[min(i, L - 1)]), 0.0)
+            moved = diff.sum(axis=1)
+            gl_elig = gl_res[elig]
+            rep.n_migrations += int(np.count_nonzero(moved))
+            rep.blocks_moved += int(moved.sum())
+            migrated[gl_elig] = moved > 0
+            moved_bits[gl_elig] = bits
 
     # -------------------------------------------------- frontier policy core
     def _frontier_pick(self, fr: ParetoFrontier,
@@ -704,6 +912,44 @@ class ChurnOrchestrator:
                 migrated[u] = True
                 moved_bits[u] = bits
         p.set_incumbents(loc_res, cfgs, energies)
+
+    def _factors(self) -> List[np.ndarray]:
+        """Per-cohort (p.U, N) uplink factor matrices for the fused dense
+        ingest: row u holds 1.0 on the attached edge node / non-edge
+        targets and ``detach_frac`` on detached edge helpers, so
+        ``uplink_bps * quality[u] * factors[u]`` reproduces
+        ``_uplink_vectors`` bit-for-bit (identical operand order).  Rows
+        self-heal against attachment moves by diffing a snapshot of
+        ``attached``, so event-form ticks interleaved with array-form
+        ticks stay consistent."""
+        if self._fac is None:
+            self._fac = [self._fac_rows(p.user_ids) for p in self.pops]
+            self._fac_attached = self.attached.copy()
+            return self._fac
+        moved = np.nonzero(self.attached != self._fac_attached)[0]
+        if len(moved):
+            rows = self._fac_rows(moved)
+            for pi in np.unique(self._pop_of[moved]):
+                sel = self._pop_of[moved] == pi
+                self._fac[int(pi)][self._local_of[moved[sel]]] = rows[sel]
+            self._fac_attached[moved] = self.attached[moved]
+        return self._fac
+
+    def _fac_rows(self, gids: np.ndarray) -> np.ndarray:
+        """(len(gids), N) factor rows for the given global users' current
+        attachments — the per-link {1.0, detach_frac} pattern of
+        ``_uplink_vectors`` without the bandwidth scale."""
+        N = self.pops[0].network0.n_nodes
+        rows = np.ones((len(gids), N))
+        if self._edge_nodes:
+            edge_mask = np.zeros(N, dtype=bool)
+            edge_mask[self._edge_nodes] = True
+            att = np.asarray(self._edge_nodes)[
+                self.attached[gids] % len(self._edge_nodes)]
+            detached = edge_mask[None, :] \
+                & (np.arange(N)[None, :] != att[:, None])
+            rows[detached] = self.detach_frac
+        return rows
 
     def _uplink_vectors(self, idx: np.ndarray) -> np.ndarray:
         """Vectorized ``_uplink_vector`` over many users: (Ud, N) per-target

@@ -89,6 +89,8 @@ class PlanStats:
     solves: int = 0
     dp_relaxes: int = 0         # round-0 DP relaxations actually run
     dp_cache_hits: int = 0      # round-0 solves served from cached DP grids
+    bounded_relaxes: int = 0    # resumed relaxes (affected-layer onward)
+    layers_skipped: int = 0     # layer chains reused by bounded resumes
     tighten_rebuilds: int = 0   # rare full requantize passes (tighten loop)
 
 
@@ -362,7 +364,11 @@ class Plan:
             self._slice_frac[:] = frac
         else:
             self._slice_frac[list(nodes)] = frac
+        snap = (self._steep.copy(), self._grid.copy(), self._ext.E.copy())
+        stash0 = self._dp_resume         # survives the pack rebuild below
         self._refresh_compute()
+        self._dp_resume = stash0
+        self._stash_resume_tensors(*snap)
         self.stats.slice_updates += 1
         self._bump()
         return self
@@ -399,7 +405,9 @@ class Plan:
         off[:, src] = False
         np.fill_diagonal(off, False)
         self._bw[off] = self._bw_base[off] * sc[off]
+        snap = (self._steep.copy(), self._grid.copy(), None)
         self._refresh_bw_full()
+        self._stash_resume_tensors(*snap)
         self.stats.backhaul_updates += 1
         self._bump()
         return self
@@ -497,7 +505,7 @@ class Plan:
         self._refresh_init()
         for mi in range(len(self._modes)):
             self._requant_full(mi)
-        self._requant_uplink(src)                # re-prime the pack
+        self._requant_uplink(src, stash=False)   # re-prime the pack
 
     def _refresh_compute(self) -> None:
         """Re-derive every compute-dependent tensor in place (slice churn).
@@ -523,7 +531,8 @@ class Plan:
         self._rebuild_packs()
         for mi in range(len(self._modes)):
             self._requant_full(mi)
-        self._requant_uplink(self.network.source_node)   # re-prime the pack
+        self._requant_uplink(self.network.source_node,   # re-prime the pack
+                             stash=False)
 
     def _refresh_init(self) -> None:
         ext = self._ext
@@ -576,12 +585,20 @@ class Plan:
         lp[L:] = self._load
         self._load_pack = lp[:, None]
         self._qpack: Optional[np.ndarray] = None   # last quantized pack
+        #: bounded re-relaxation stash: (parent DP grids, first affected
+        #: layer, the quant version they resume INTO).  Any delta that
+        #: bumps ``_quant_version`` past the stashed target invalidates it.
+        self._dp_resume: Optional[Tuple[List[object], int, int]] = None
 
-    def _requant_uplink(self, src: int) -> bool:
+    def _requant_uplink(self, src: int, stash: bool = True) -> bool:
         """Uplink delta: requantize the source-node slice as one packed
         pipeline (see ``_rebuild_packs``) and scatter into the cached
         steepness / gather-index / init tensors only when the quantized
-        values actually moved.  Returns whether any DP input changed."""
+        values actually moved.  Returns whether any DP input changed.
+        ``stash=False`` suppresses the bounded-resume stash when the call
+        re-primes the pack inside a full refresh (the whole-tensor diff in
+        the caller owns the stash there — the pack rows alone would
+        understate which layers moved)."""
         G = self.gamma
         M = len(self._modes)
         bwv = self._bw[src].copy()                   # (N,)
@@ -601,10 +618,117 @@ class Plan:
         stq = np.where(valid & (qs <= G), qs, np.inf)
         if self._qpack is not None and np.array_equal(stq, self._qpack):
             return False
+        if stash:
+            self._stash_resume(stq)
+        else:
+            self._dp_resume = None
         self._apply_qpack(src, stq,
                           _banded_gather_idx(stq, G + 1,
                                              self.depth_window_lo))
         return True
+
+    def _stash_resume(self, stq: np.ndarray) -> None:
+        """Record the first layer this uplink delta touches, together with
+        the pre-delta DP grids, so the next warm solve can resume the
+        banded relaxation from that layer's saved grid slice instead of
+        re-relaxing the whole chain.  Pack row ``r < L-1`` feeds the
+        relaxation of layer ``r`` (source-node row steeps), ``r == L-1``
+        the init grid (first layer — no resume), ``r >= L`` layer
+        ``r - L`` (column steeps).  Consecutive uplink deltas chain by
+        taking the min affected layer against the SAME parent grids; any
+        other delta bumps ``_quant_version`` past the stash and kills it.
+        """
+        if self._qpack is None:                      # construction-time prime
+            self._dp_resume = None
+            return
+        if not (self._warm and self.n_best == 1):
+            self._dp_resume = None
+            return
+        if (self._dp_cache is not None
+                and self._dp_cache[0] == self._quant_version):
+            base, base_l0 = self._dp_cache[1], self.profile.n_blocks
+        elif (self._dp_resume is not None
+                and self._dp_resume[2] == self._quant_version):
+            base, base_l0 = self._dp_resume[0], self._dp_resume[1]
+        else:
+            self._dp_resume = None
+            return
+        L = self.profile.n_blocks
+        rows = np.nonzero((stq != self._qpack).any(axis=(0, 2)))[0]
+        l0 = base_l0
+        for r in rows:
+            l0 = min(l0, 0 if r == L - 1 else (r if r < L - 1 else r - L))
+        if l0 < 1:
+            self._dp_resume = None
+            return
+        self._dp_resume = (base, int(l0), self._quant_version + 1)
+
+    def _stash_resume_tensors(self, old_steep: np.ndarray,
+                              old_grid: np.ndarray,
+                              old_E: Optional[np.ndarray]) -> None:
+        """Whole-tensor form of :meth:`_stash_resume` for the full-refresh
+        deltas (slice rescale, backhaul rescale): diff the pre-delta
+        quantized steepness stack / init grid (and, for compute churn, the
+        energy tensor) per transition layer.  A single-link backhaul
+        reprice or single-node slice rescale usually crosses quantization
+        cells only at the layers whose cut-bits / ops straddle the new
+        boundary, so the first affected layer is often deep in the chain.
+        Called before ``_bump``: the current quant version still names the
+        parent grids."""
+        base_l0 = None
+        if (self._dp_cache is not None
+                and self._dp_cache[0] == self._quant_version):
+            base, base_l0 = self._dp_cache[1], self.profile.n_blocks - 1
+        elif (self._dp_resume is not None
+                and self._dp_resume[2] == self._quant_version):
+            base, base_l0 = self._dp_resume[0], self._dp_resume[1]
+        self._dp_resume = None
+        if base_l0 is None or not (self._warm and self.n_best == 1):
+            return
+        if not np.array_equal(self._grid, old_grid):
+            return                      # init grid moved: layer 0 affected
+        Lm1 = self.profile.n_blocks - 1
+        ch = (self._steep != old_steep).reshape(
+            len(self._modes), Lm1, -1).any(axis=(0, 2))
+        if old_E is not None:
+            ch |= (self._ext.E != old_E).reshape(Lm1, -1).any(axis=1)
+        moved = np.nonzero(ch)[0]
+        l0 = min(base_l0, int(moved[0])) if len(moved) else base_l0
+        if l0 < 1:
+            return
+        self._dp_resume = (base, int(l0), self._quant_version + 1)
+
+    def _try_resume_dp(self) -> Optional[List[object]]:
+        """Bounded re-relaxation: if a valid resume stash targets the
+        current quant version, relax only layers ``l0..L-1`` from the
+        parent grids' saved layer-``l0`` slice and splice the untouched
+        prefix — bit-exact vs the full relax because the depth window is
+        depth-based (not layer-position-based) and float64 chaining is
+        associative over an identical per-layer schedule."""
+        st = self._dp_resume
+        if st is None:
+            return None
+        dps, l0, ver = st
+        self._dp_resume = None
+        if ver != self._quant_version:
+            return None
+        steep, idx, _, _ = self._quant_state()
+        M = len(self._modes)
+        init = np.stack([dps[mi].hist[l0] for mi in range(M)])
+        E_tail = self._ext.E[l0:]
+        E = np.broadcast_to(E_tail[None], (M,) + E_tail.shape)
+        hist, par = batched_banded_relax_minarg(
+            init, E, steep[:, l0:], self.depth_window_lo, idx=idx[:, l0:])
+        new: List[object] = []
+        for mi in range(M):
+            h = np.concatenate([dps[mi].hist[:l0], hist[mi]])
+            pn = np.concatenate([dps[mi].par_n[:l0], par[mi]])
+            new.append(_BandedArgDP(h, pn, steep[mi]))
+        self._dp_cache = (self._quant_version, new)
+        self.stats.dp_relaxes += 1
+        self.stats.bounded_relaxes += 1
+        self.stats.layers_skipped += l0
+        return new
 
     def _apply_qpack(self, src: int, stq: np.ndarray,
                      ix: np.ndarray) -> None:
@@ -1017,6 +1141,10 @@ def _warm_round0(plans: Sequence[Plan]) -> List[List[object]]:
         cached = p._dp_cached()
         if cached is not None:
             out[j] = cached          # DP inputs unchanged since last relax
+            continue
+        resumed = p._try_resume_dp()
+        if resumed is not None:
+            out[j] = resumed         # bounded resume from the stashed layer
         else:
             groups.setdefault((p.profile.n_blocks, p.n_nodes), []).append(j)
     for idxs in groups.values():

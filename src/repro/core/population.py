@@ -80,6 +80,17 @@ class PopulationStats:
     fallbacks: int = 0           # per-user Plan fallbacks (tighten loop)
     state_evictions: int = 0     # cache compactions
     prebuilt_states: int = 0     # contingency states relaxed off-tick
+    fused_relaxes: int = 0       # newborn batches relaxed in ONE launch
+    chunked_relaxes: int = 0     # newborn batches split by the residency
+    #                              budget (REPRO_RELAX_CHUNK_BYTES)
+    bounded_relaxes: int = 0     # states relaxed from a parent's layer slice
+    layers_skipped: int = 0      # relax layers skipped by bounded resumes
+    mask_reuses: int = 0         # masked states served by a parent's grids
+    # per-phase wall clock (accumulated only when the Population was built
+    # with timing=True — the counters stay zero-cost when disabled)
+    t_ingest_ms: float = 0.0     # channel ingest + requantize
+    t_relax_ms: float = 0.0      # banded relaxation launches
+    t_post_ms: float = 0.0       # exact post-pass (solve minus relax)
 
 
 def _group_runs(keys: np.ndarray
@@ -90,12 +101,69 @@ def _group_runs(keys: np.ndarray
     (first-occurrence-stable); ``first[g]`` is its first position.  One
     home for the unique/stable-argsort/searchsorted idiom the solve,
     incumbent-evaluation and frontier paths all share.
+
+    All-equal keys short-circuit without sorting: a cold-start cohort (one
+    bandwidth row tiled U times) and steady single-config ticks are the
+    common case at scale, and one vectorized compare beats a million-row
+    argsort by orders of magnitude.
     """
+    n = len(keys)
+    if n > 1 and bool((keys == keys[0]).all()):
+        return (keys[:1], np.zeros(1, dtype=np.int64),
+                np.arange(n, dtype=np.int64),
+                np.array([0, n], dtype=np.int64))
     uniq, first, inv = np.unique(keys, return_index=True,
                                  return_inverse=True)
     order = np.argsort(inv, kind="stable")
     bounds = np.searchsorted(inv[order], np.arange(len(uniq) + 1))
     return uniq, first, order, bounds
+
+
+class _BwCols:
+    """Column-gather view over selected rows of the bandwidth store.
+
+    ``eval_config_users`` touches its bandwidth argument only through
+    ``bwv[:, n]`` columns and ``len(bwv)``; gathering one (Us,) column per
+    visited link — instead of materializing the whole (Us, N) row gather
+    up front — keeps the per-group incumbent re-evaluation's memory
+    traffic proportional to the links a configuration actually uses.
+    Values are identical to ``bw[rows][:, n]``, so results stay bit-exact.
+    """
+
+    __slots__ = ("_bw", "_rows")
+
+    def __init__(self, bw: np.ndarray, rows: np.ndarray):
+        self._bw = bw
+        self._rows = rows
+
+    def __len__(self) -> int:
+        return len(self._rows)
+
+    def __getitem__(self, key) -> np.ndarray:
+        s, n = key                       # only the bwv[:, n] access pattern
+        assert s == slice(None)
+        return self._bw[self._rows, n]
+
+
+class _PendingSolve:
+    """In-flight tick handle between ``solve_begin`` and ``solve_finish``:
+    the begin-time (state, bandwidth) snapshot, the grouped rows and the
+    relax future (None when the relaxation ran synchronously)."""
+
+    __slots__ = ("users", "build_solutions", "t0", "sids", "first",
+                 "order", "bounds", "bw", "future")
+
+    def __init__(self, users: np.ndarray, build_solutions: bool,
+                 t0: float):
+        self.users = users
+        self.build_solutions = build_solutions
+        self.t0 = t0
+        self.sids = None
+        self.first = None
+        self.order = None
+        self.bounds = None
+        self.bw = None
+        self.future = None
 
 
 class _CandCache:
@@ -147,10 +215,11 @@ class _CohortState:
     first-candidate fast table of the vectorized post-pass.
     """
 
-    __slots__ = ("stq", "mask", "steep", "grid", "dps", "cand", "fast")
+    __slots__ = ("stq", "mask", "steep", "grid", "dps", "cand", "fast",
+                 "parent")
 
     def __init__(self, stq: np.ndarray, mask: np.ndarray,
-                 steep: np.ndarray, grid: np.ndarray):
+                 steep: np.ndarray, grid: np.ndarray, parent: int = -1):
         self.stq = stq               # (M, 2L-1, N)
         self.mask = mask             # (N,) bool
         self.steep = steep           # (M, L-1, N, N), masks applied
@@ -158,6 +227,12 @@ class _CohortState:
         self.dps: Optional[List[_BandedArgDP]] = None
         self.cand: Dict[Tuple[int, int], _CandCache] = {}
         self.fast: Optional[_FastTable] = None
+        #: state id the first user keyed here came FROM — a bounded
+        #: re-relaxation *hint* only: the resume path re-validates the
+        #: layer-prefix equality against whatever state currently sits at
+        #: this index (compaction may remap it), so a stale hint degrades
+        #: to a full relax, never to a wrong result
+        self.parent = parent
 
 
 class Population:
@@ -180,7 +255,8 @@ class Population:
                  max_tighten: int = 6, tighten_factor: float = 0.85,
                  backend: str = "minplus", check_aggregate_load: bool = False,
                  user_ids: Optional[Sequence[int]] = None,
-                 max_states: int = 65536, vector_postpass: bool = True):
+                 max_states: int = 65536, vector_postpass: bool = True,
+                 bounded_rerelax: bool = True, timing: bool = False):
         if n_users <= 0:
             raise ValueError(f"n_users must be positive, got {n_users}")
         if backend != "mesh" and DP_BACKENDS.get(backend) is None:
@@ -265,6 +341,16 @@ class Population:
         #: one scalar ``_best_feasible`` per unique (state, bandwidth) —
         #: bit-exact either way; False keeps the scalar path (the oracle).
         self._vector_postpass = bool(vector_postpass)
+        #: bounded re-relaxation (affected-layer-onward resumes and whole-
+        #: grid reuse for masked-out unreached nodes); False forces every
+        #: newborn state through the full layer chain — the oracle switch
+        #: the equivalence tests and benches flip
+        self._bounded = bool(bounded_rerelax)
+        #: live masked-entry count — lets the hot incumbent gate skip the
+        #: (U, N) bitmap scan entirely when no user has a failure
+        self._mask_count = 0
+        self._timing = bool(timing)
+        self._relax_executor = None      # lazy 1-thread pool (streaming)
         self.stats = PopulationStats()
         self._assign_states(np.arange(self.U))
 
@@ -321,6 +407,7 @@ class Population:
         quantization work without changing any decision or solution.
         Returns None in that case (the change flags are not yet known).
         """
+        t0 = time.perf_counter() if self._timing else 0.0
         users = (np.arange(self.U) if users is None
                  else np.asarray(users, dtype=np.int64))
         Us = len(users)
@@ -335,17 +422,57 @@ class Population:
         self.stats.uplink_updates += Us
         if not requant:
             self._stale[users] = True
+            if self._timing:
+                self.stats.t_ingest_ms += (time.perf_counter() - t0) * 1e3
             return None
         changed = self._requant_users(users, vec)
         self._stale[users] = False
+        if self._timing:
+            self.stats.t_ingest_ms += (time.perf_counter() - t0) * 1e3
+        return changed
+
+    def ingest_factors(self, scale: np.ndarray, factors: np.ndarray,
+                       requant: bool = True) -> Optional[np.ndarray]:
+        """Whole-cohort ingest from a per-user scale and a per-user factor
+        row: the new bandwidth matrix is ``scale[:, None] * factors``
+        written straight into the SoA store (one fused multiply, no
+        intermediate (U, N) staging copy).  ``factors`` encodes the static
+        per-user link pattern (attachment edge, detach fraction) so a
+        dense channel tick only has to supply the (U,) fading scale.
+
+        Semantically identical to ``ingest(scale[:, None] * factors)``
+        over all users; same ``requant`` contract.
+        """
+        if scale.shape != (self.U,) or factors.shape != (self.U, self.N):
+            raise ValueError(
+                f"ingest_factors expects scale ({self.U},) and factors "
+                f"({self.U}, {self.N}); got {scale.shape} and "
+                f"{factors.shape}")
+        t0 = time.perf_counter() if self._timing else 0.0
+        np.multiply(scale[:, None], factors, out=self._bw_vec)
+        self._bw_vec[:, self.src] = np.inf       # self-loop (Sec. II-A)
+        self.stats.ingests += 1
+        self.stats.uplink_updates += self.U
+        if not requant:
+            self._stale[:] = True
+            if self._timing:
+                self.stats.t_ingest_ms += (time.perf_counter() - t0) * 1e3
+            return None
+        changed = self._requant_users(np.arange(self.U), self._bw_vec)
+        self._stale[:] = False
+        if self._timing:
+            self.stats.t_ingest_ms += (time.perf_counter() - t0) * 1e3
         return changed
 
     def _refresh_states(self, users: np.ndarray) -> None:
         """Flush deferred requantizations (lazy ingest) for these users."""
         sel = users[self._stale[users]]
         if len(sel):
+            t0 = time.perf_counter() if self._timing else 0.0
             self._requant_users(sel, self._bw_vec[sel])
             self._stale[sel] = False
+            if self._timing:
+                self.stats.t_ingest_ms += (time.perf_counter() - t0) * 1e3
 
     def _requant_users(self, users: np.ndarray,
                        vec: np.ndarray) -> np.ndarray:
@@ -392,6 +519,7 @@ class Population:
         flip = sel[~self._masked[sel, n]]
         if len(flip):
             self._masked[flip, n] = True
+            self._mask_count += len(flip)
             self._assign_states(flip)
         return self
 
@@ -402,6 +530,7 @@ class Population:
         flip = sel[self._masked[sel, n]]
         if len(flip):
             self._masked[flip, n] = False
+            self._mask_count -= len(flip)
             self._assign_states(flip)
         return self
 
@@ -461,6 +590,7 @@ class Population:
         Us = len(users)
         if Us == 0:
             return
+        old_sids = self._user_state[users]       # bounded-resume hints
         M, K2, N = self.M, 2 * self.L - 1, self.N
         enc = np.empty((Us, M * K2 * N + N), dtype=np.int16)
         q = self._qpack[users].reshape(Us, -1)
@@ -470,6 +600,20 @@ class Population:
         enc[:, M * K2 * N:] = self._masked[users]
         rows = np.ascontiguousarray(enc)
         v = rows.view(np.dtype((np.void, rows.shape[1] * 2))).ravel()
+        if Us > 1 and bool((v == v[0]).all()):
+            # one signature for the whole batch (cold start, uniform
+            # scale moves): skip the million-row unique/argsort entirely
+            key = v[0].tobytes()
+            sid = self._state_ids.get(key)
+            if sid is None:
+                u = int(users[0])
+                sid = self._add_state(key, self._qpack[u].copy(),
+                                      self._masked[u].copy(),
+                                      parent=int(old_sids[0]))
+            self._user_state[users] = sid
+            if len(self._states) > self.max_states:
+                self._compact_states()
+            return
         uniq, first, inv = np.unique(v, return_index=True,
                                      return_inverse=True)
         sids = np.empty(len(uniq), dtype=np.int64)
@@ -479,7 +623,8 @@ class Population:
             if sid is None:
                 u = int(users[j])
                 sid = self._add_state(key, self._qpack[u].copy(),
-                                      self._masked[u].copy())
+                                      self._masked[u].copy(),
+                                      parent=int(old_sids[j]))
             sids[i] = sid
         self._user_state[users] = sids[inv]
         if len(self._states) > self.max_states:
@@ -500,7 +645,7 @@ class Population:
         return enc.tobytes()
 
     def _add_state(self, key: bytes, stq: np.ndarray,
-                   mask: np.ndarray) -> int:
+                   mask: np.ndarray, parent: int = -1) -> int:
         """Materialize a cohort state: scatter the pack's source-node
         rows/cols into a copy of the base steepness stack and rebuild the
         init grid — the exact formulas of ``Plan._apply_qpack``, with
@@ -520,7 +665,8 @@ class Population:
             steep[:, :, :, mask] = np.inf
             grid[:, mask, :] = np.inf
         sid = len(self._states)
-        self._states.append(_CohortState(stq, mask, steep, grid))
+        self._states.append(_CohortState(stq, mask, steep, grid,
+                                         parent=parent))
         self._state_ids[key] = sid
         return sid
 
@@ -544,15 +690,105 @@ class Population:
     # ------------------------------------------------------------ relaxation
     def _relax_states(self, sids: Sequence[int], *,
                       prebuilt: bool = False) -> None:
-        """Chained banded relaxation of the given (unrelaxed) cohort states:
-        both quantizer passes of every state ride in ONE batched float64
-        chain (or the f32 jnp / pallas / mesh engines), chunked to the
-        shared cache-residency budget.  ``prebuilt`` routes the counter to
+        """Chained banded relaxation of the given (unrelaxed) cohort states.
+
+        Newborns split three ways: states whose validated parent hint
+        proves a layer-prefix match resume from the parent's saved grid
+        slice (bounded re-relaxation); pure-mask deltas on nodes the
+        parent never reached share the parent's relaxed grids outright;
+        the rest ride the full chain — ONE fused launch when the whole
+        stack fits the cache-residency budget
+        (``bellman_ford.relax_chunk_rows``), the chunked fallback when it
+        does not.  ``prebuilt`` routes the counter to
         ``stats.prebuilt_states`` (contingency refills relax off the
         failure tick; a covered tick's ``dp_relaxes`` delta stays zero)."""
         states = [self._states[int(s)] for s in sids]
         if not states:
             return
+        t0 = time.perf_counter() if self._timing else 0.0
+        full: List[_CohortState] = []
+        resume: Dict[int, List[Tuple[_CohortState, _CohortState]]] = {}
+        if self._bounded:
+            for s in states:
+                hint = self._resume_hint(s)
+                if hint is None:
+                    full.append(s)
+                    continue
+                kind, parent, l0 = hint
+                if kind == "share":
+                    s.dps = [_BandedArgDP(pd.hist, pd.par_n, s.steep[mi])
+                             for mi, pd in enumerate(parent.dps)]
+                    self.stats.mask_reuses += 1
+                else:
+                    resume.setdefault(l0, []).append((s, parent))
+        else:
+            full = states
+        if full:
+            self._relax_full(full)
+        for l0 in sorted(resume):
+            pairs = resume[l0]
+            self._relax_resume(l0, pairs)
+            self.stats.bounded_relaxes += len(pairs)
+            self.stats.layers_skipped += l0 * len(pairs)
+        if prebuilt:
+            self.stats.prebuilt_states += len(states)
+        else:
+            self.stats.dp_relaxes += len(states)
+        if self._timing:
+            self.stats.t_relax_ms += (time.perf_counter() - t0) * 1e3
+
+    def _resume_hint(self, s: _CohortState
+                     ) -> Optional[Tuple[str, _CohortState, int]]:
+        """Validate a newborn's parent hint (see ``_CohortState.parent``).
+
+        Returns None (full relax), ("share", parent, 0) when the parent's
+        relaxed grids serve the state verbatim — a pure mask-add delta on
+        nodes the parent's chain never reached (all-inf rows at every
+        block, so no finite cell and no backtrack can touch them) — or
+        ("resume", parent, l0) when layers < l0 are provably identical.
+        The hint is re-validated against whatever state sits at the index
+        NOW, so compaction/renumbering can only cost speed, not
+        correctness; resumes are float64-engine-only (the f32 engines
+        round intermediates in-chain, so a spliced prefix is not an
+        identity there)."""
+        p = s.parent
+        if p < 0 or p >= len(self._states):
+            return None
+        parent = self._states[p]
+        if parent is s or parent.dps is None:
+            return None
+        L = self.L
+        if np.array_equal(s.stq, parent.stq):
+            added = s.mask & ~parent.mask
+            if not added.any() or (parent.mask & ~s.mask).any():
+                return None
+            for pd in parent.dps:
+                if np.isfinite(pd.hist[:, added, :]).any():
+                    return None
+            return ("share", parent, 0)
+        if self._engine != "banded" or self.backend == "mesh":
+            return None
+        if not np.array_equal(s.mask, parent.mask):
+            return None
+        # first affected relax layer: pack row r < L-1 scatters into the
+        # layer-r source row, row r >= L into the layer-(r-L) source col;
+        # a moved init-depth row (r == L-1) moves the layer-0 input, so
+        # nothing can be skipped
+        diff = (s.stq != parent.stq).any(axis=(0, 2))          # (2L-1,)
+        l0 = L - 1
+        for r in np.nonzero(diff)[0]:
+            r = int(r)
+            layer = 0 if r == L - 1 else (r if r < L - 1 else r - L)
+            l0 = min(l0, layer)
+        if l0 < 1:
+            return None
+        return ("resume", parent, l0)
+
+    def _relax_full(self, states: List[_CohortState]) -> None:
+        """Full-chain relaxation: one fused launch across every state when
+        the (D*M, L-1, N, N) stack fits the residency budget, the chunked
+        loop when it does not (``REPRO_RELAX_CHUNK_BYTES`` shrinks the
+        budget; tiny values force the fallback — see the chunking tests)."""
         D, M = len(states), self.M
         N, Gp1 = self.N, self.gamma + 1
         steep = np.concatenate([s.steep for s in states])      # (D*M, ...)
@@ -562,28 +798,59 @@ class Population:
         lo = self.depth_window_lo
         if self.backend == "mesh":
             hist, par = self._mesh().relax(grid, E, steep, lo)
-        elif self._engine == "banded":
-            chunk = relax_chunk_rows(N * N * Gp1 * 16)
-            hists, pars = [], []
-            for start in range(0, D * M, chunk):
-                sl = slice(start, start + chunk)
-                h, p = batched_banded_relax_minarg(grid[sl], E[sl],
-                                                   steep[sl], lo)
-                hists.append(h)
-                pars.append(p)
-            hist = np.concatenate(hists) if len(hists) > 1 else hists[0]
-            par = np.concatenate(pars) if len(pars) > 1 else pars[0]
+            self.stats.fused_relaxes += 1
         else:
-            hist, par = batched_banded_relax_argmin(
-                grid, np.ascontiguousarray(E), steep, lo,
-                backend=self._engine)
+            chunk = relax_chunk_rows(N * N * Gp1 * 16)
+            if D * M <= chunk:
+                hist, par = self._relax_batch(grid, E, steep, lo)
+                self.stats.fused_relaxes += 1
+            else:
+                hists, pars = [], []
+                for start in range(0, D * M, chunk):
+                    sl = slice(start, start + chunk)
+                    h, p = self._relax_batch(grid[sl], E[sl], steep[sl], lo)
+                    hists.append(h)
+                    pars.append(p)
+                hist = np.concatenate(hists)
+                par = np.concatenate(pars)
+                self.stats.chunked_relaxes += 1
         for i, s in enumerate(states):
             s.dps = [_BandedArgDP(hist[i * M + mi], par[i * M + mi],
                                   s.steep[mi]) for mi in range(M)]
-        if prebuilt:
-            self.stats.prebuilt_states += D
-        else:
-            self.stats.dp_relaxes += D
+
+    def _relax_batch(self, grid: np.ndarray, E: np.ndarray,
+                     steep: np.ndarray, lo: Optional[int]
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        if self._engine == "banded":
+            return batched_banded_relax_minarg(grid, E, steep, lo)
+        return batched_banded_relax_argmin(
+            grid, np.ascontiguousarray(E), steep, lo, backend=self._engine)
+
+    def _relax_resume(self, l0: int,
+                      pairs: List[Tuple[_CohortState, _CohortState]]
+                      ) -> None:
+        """Bounded re-relaxation: seed a relax over layers ``l0:`` with the
+        parents' saved block-``l0`` grid slices and splice the untouched
+        hist/par prefixes back in.  Bit-exact vs the full chain because the
+        depth-window masking is DEPTH-based, not layer-position-based
+        (``bellman_ford._banded_gather_idx``), so the suffix relax applies
+        exactly the ops the full chain would from block ``l0`` on."""
+        M = self.M
+        lo = self.depth_window_lo
+        init = np.stack([pr.dps[mi].hist[l0]
+                         for s, pr in pairs for mi in range(M)])
+        steep = np.concatenate([s.steep[:, l0:] for s, _pr in pairs])
+        E_one = self._proto._ext.E[l0:]
+        E = np.broadcast_to(E_one[None], (len(init),) + E_one.shape)
+        hist, par = batched_banded_relax_minarg(init, E, steep, lo)
+        for i, (s, pr) in enumerate(pairs):
+            dps = []
+            for mi in range(M):
+                pd = pr.dps[mi]
+                h = np.concatenate([pd.hist[:l0], hist[i * M + mi]])
+                pn = np.concatenate([pd.par_n[:l0], par[i * M + mi]])
+                dps.append(_BandedArgDP(h, pn, s.steep[mi]))
+            s.dps = dps
 
     def _mesh(self):
         if self._mesh_relaxer is None:
@@ -814,17 +1081,37 @@ class Population:
         materializing U Python objects — the incumbent arrays carry the
         results either way).
         """
+        return self.solve_finish(
+            self.solve_begin(users, build_solutions=build_solutions))
+
+    def solve_begin(self, users: Optional[np.ndarray] = None,
+                    build_solutions: bool = True, *,
+                    stream: bool = False) -> "_PendingSolve":
+        """Phase 1 of a tick's solve: flush deferred requants, snapshot the
+        (state, bandwidth) inputs, group identical rows and LAUNCH the
+        newborn relaxation.  ``stream=True`` runs the relaxation on a
+        background thread so the caller can overlap the NEXT tick's
+        numpy-side ingest with this tick's in-flight relax (the streaming
+        pipeline); the handle must be redeemed with :meth:`solve_finish`
+        before any call that mutates cohort states (ingest with
+        ``requant=False`` only touches the bandwidth store and is safe to
+        overlap).  Results are bit-identical to :meth:`solve` — the
+        post-pass reads this snapshot, not the live bandwidth."""
         t0 = time.perf_counter()
         users = (np.arange(self.U) if users is None
                  else np.asarray(users, dtype=np.int64))
         Us = len(users)
+        pend = _PendingSolve(users, build_solutions, t0)
         if Us == 0:
-            return [] if build_solutions else None
+            return pend
         self._refresh_states(users)
         sids = self._user_state[users]
         uniq_sids = np.unique(sids)
         need = [int(s) for s in uniq_sids if self._states[int(s)].dps is None]
-        self._relax_states(need)
+        if need and stream:
+            pend.future = self._executor().submit(self._relax_states, need)
+        elif need:
+            self._relax_states(need)
         self.stats.dp_cache_hits += Us - len(need)
         self.stats.solves += Us
 
@@ -835,21 +1122,47 @@ class Population:
         v = np.ascontiguousarray(rows).view(
             np.dtype((np.void, rows.shape[1] * 8))).ravel()
         _, first, order, bounds = _group_runs(v)
-        dt_share = (time.perf_counter() - t0) / Us
+        pend.sids = sids
+        pend.first, pend.order, pend.bounds = first, order, bounds
+        pend.bw = rows[:, 1:]            # the tick's bandwidth snapshot
+        return pend
+
+    def solve_finish(self, pend: "_PendingSolve"
+                     ) -> Optional[List[Solution]]:
+        """Phase 2: join the in-flight relaxation (if streaming) and run
+        the exact post-pass against the snapshot taken at begin-time."""
+        users = pend.users
+        Us = len(users)
+        if Us == 0:
+            return [] if pend.build_solutions else None
+        if pend.future is not None:
+            pend.future.result()
+            pend.future = None
+        t1 = time.perf_counter()
+        first, order, bounds = pend.first, pend.order, pend.bounds
+        dt_share = (t1 - pend.t0) / Us
 
         if self._vector_postpass and self._proto._admissible:
-            self._solve_vectorized(users, sids, first, order, bounds,
-                                   dt_share, build_solutions)
+            self._solve_vectorized(users, pend.sids, first, order, bounds,
+                                   dt_share, pend.build_solutions, pend.bw)
         else:
             for g, j in enumerate(first):
-                u = int(users[j])
-                state = self._states[int(self._user_state[u])]
-                cfg, ev, meta = self._solve_one(state, self._bw_vec[u])
+                state = self._states[int(pend.sids[j])]
+                cfg, ev, meta = self._solve_one(state, pend.bw[j])
                 members = users[order[bounds[g]:bounds[g + 1]]]
                 self._record_group(members, cfg, ev, meta, dt_share,
-                                   build_solutions)
+                                   pend.build_solutions)
         self.stats.unique_solves += len(first)
-        return self.solutions(users) if build_solutions else None
+        if self._timing:
+            self.stats.t_post_ms += (time.perf_counter() - t1) * 1e3
+        return self.solutions(users) if pend.build_solutions else None
+
+    def _executor(self):
+        if self._relax_executor is None:
+            from concurrent.futures import ThreadPoolExecutor
+            self._relax_executor = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="pop-relax")
+        return self._relax_executor
 
     def _build_fast(self, state: _CohortState) -> _FastTable:
         """Materialize the state's shared first-candidate decision (see
@@ -930,7 +1243,8 @@ class Population:
     def _solve_vectorized(self, users: np.ndarray, sids: np.ndarray,
                           first: np.ndarray, order: np.ndarray,
                           bounds: np.ndarray, dt_share: float,
-                          build_solutions: bool) -> None:
+                          build_solutions: bool,
+                          bw: Optional[np.ndarray] = None) -> None:
         """Vectorized frontier post-pass over the unique (state, bandwidth)
         representatives.
 
@@ -968,7 +1282,7 @@ class Population:
                     tasks.append(cfg)
                     task_rpos.append([])
                 task_rpos[r].append(rpos)
-        bw_reps = self._bw_vec[reps]
+        bw_reps = self._bw_vec[reps] if bw is None else bw[first]
         nR = len(reps)
         violM = np.ones((len(tasks), nR), dtype=bool)
         latM = np.empty((len(tasks), nR))
@@ -1215,7 +1529,7 @@ class Population:
             self._solutions[int(u)] = None
 
     # ------------------------------------------------ incumbent re-evaluation
-    def evaluate_incumbents(self, users: np.ndarray
+    def evaluate_incumbents(self, users: Optional[np.ndarray] = None
                             ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Vectorized ``Plan.evaluate(incumbent)`` across users.
 
@@ -1225,36 +1539,86 @@ class Population:
         pass whose per-user latency accumulation replays ``evaluate_config``
         term by term (bit-identical doubles), with the failure-bitmap
         dead-node check of ``Plan.evaluate`` applied first.
+
+        ``users=None`` evaluates the whole cohort positionally — the dense
+        hysteresis gate's hot path: the incumbent columns are read as
+        views, the grouping key is radix-sorted int64 (one all-equal
+        compare in the steady single-config state) and a single-group
+        cohort reads the bandwidth store with zero per-user gathers.
         """
-        users = np.asarray(users, dtype=np.int64)
-        Us = len(users)
+        whole = users is None
+        if whole:
+            exit_all = self._inc_exit
+            place_all = self._inc_place
+            solved = self._solved
+        else:
+            users = np.asarray(users, dtype=np.int64)
+            exit_all = self._inc_exit[users]
+            place_all = self._inc_place[users]
+            solved = self._solved[users]
+        Us = len(exit_all)
         feas = np.zeros(Us, dtype=bool)
         energy = np.full(Us, np.inf)
-        no_inc = ~self._solved[users] | (self._inc_exit[users] < 0)
-        idx = np.nonzero(~no_inc)[0]
-        if len(idx) == 0:
+        no_inc = ~solved | (exit_all < 0)
+        any_no = bool(no_inc.any())
+        if any_no and no_inc.all():
             return no_inc, feas, energy
-        rows = np.empty((len(idx), 1 + self.L), dtype=np.int32)
-        rows[:, 0] = self._inc_exit[users[idx]]
-        rows[:, 1:] = self._inc_place[users[idx]]
-        v = np.ascontiguousarray(rows).view(
-            np.dtype((np.void, rows.shape[1] * 4))).ravel()
-        _, first, order, bounds = _group_runs(v)
+        # group by incumbent configuration; an injective radix-sortable
+        # int64 key (digits = shifted exit/placement columns, base N+2
+        # covers the -1 padding) replaces the void-row lexsort whenever the
+        # profile is narrow enough to fit — the wide-profile fallback keeps
+        # the row view.  No-incumbent users collapse into one skipped
+        # sentinel group instead of being filtered up front (saves the
+        # index/gather round-trip on the common all-solved tick).
+        if (self.L + 1) * int(self.N + 2).bit_length() < 63:
+            key = exit_all.astype(np.int64) + 1
+            for i in range(self.L):
+                key *= self.N + 2
+                key += place_all[:, i] + 1
+            if any_no:
+                key[no_inc] = -1
+            _, first, order, bounds = _group_runs(key)
+        else:
+            rows = np.empty((Us, 1 + self.L), dtype=np.int32)
+            rows[:, 0] = np.where(no_inc, -2, exit_all) if any_no \
+                else exit_all
+            rows[:, 1:] = place_all
+            v = np.ascontiguousarray(rows).view(
+                np.dtype((np.void, rows.shape[1] * 4))).ravel()
+            _, first, order, bounds = _group_runs(v)
+        any_mask = self._mask_count > 0
+        single = len(first) == 1
         for g, j in enumerate(first):
-            k = int(rows[j, 0])
+            j = int(j)
+            k = int(exit_all[j])
+            if k < 0 or not solved[j]:
+                continue                 # the no-incumbent sentinel group
             nb = self.profile.exits[k].block + 1
-            place = [int(n) for n in rows[j, 1:1 + nb]]
-            members = idx[order[bounds[g]:bounds[g + 1]]]
-            gl = users[members]
+            place = [int(n) for n in place_all[j, :nb]]
+            members = None if single else order[bounds[g]:bounds[g + 1]]
             cfg = Config(placement=place, final_exit=k)
-            e_sc, lat, viol = self._eval_config_users(cfg, self._bw_vec[gl])
-            dead = self._masked[gl][:, place].any(axis=1)
+            if members is None:
+                gl = users if not whole else None
+                bwv = (self._bw_vec if gl is None
+                       else _BwCols(self._bw_vec, gl))
+            else:
+                gl = users[members] if not whole else members
+                bwv = _BwCols(self._bw_vec, gl)
+            e_sc, lat, viol = self._eval_config_users(cfg, bwv)
             f = ~viol
-            f[dead] = False
-            en = np.full(len(gl), e_sc)
-            en[dead] = np.inf
-            feas[members] = f
-            energy[members] = en
+            en = np.full(Us if members is None else len(members), e_sc)
+            if any_mask:
+                rows_m = (self._masked if gl is None
+                          else self._masked[gl])
+                dead = rows_m[:, place].any(axis=1)
+                f[dead] = False
+                en[dead] = np.inf
+            if members is None:
+                feas = f
+                energy = en
+            else:
+                feas[members] = f
+                energy[members] = en
         return no_inc, feas, energy
 
     def _eval_config_users(self, config: Config, bwv: np.ndarray

@@ -19,6 +19,19 @@ real chips with the banded Pallas kernel as the per-shard engine
 backends, the mesh engine relaxes in float32 — ``Population`` widens its
 exit-prune guard accordingly (``tolerances.DIST_RTOL_F32``); the float64
 numpy fallback (``backend="minplus"``) remains the bit-exact reference.
+
+Multi-host: when the mesh spans devices of several ``jax.distributed``
+processes (launch each with ``JAX_COORDINATOR_ADDRESS`` /
+``JAX_NUM_PROCESSES`` / ``JAX_PROCESS_ID`` or call
+``jax.distributed.initialize`` yourself, then build
+``population_mesh()``), every host keeps its OWN user shard: the stacked
+per-host chains are assembled into one global array with
+``jax.make_array_from_process_local_data``, the same jitted program runs
+SPMD across hosts, and each host reads back only its addressable shards.
+Cohort signature dedupe stays host-local; nothing but the per-shard
+relaxed grids ever crosses hosts — the banded DP has no cross-scenario
+term, so hosts only synchronize on shard sizes (one tiny allgather per
+relax) and on the jit dispatch itself.
 """
 from __future__ import annotations
 
@@ -38,7 +51,8 @@ __all__ = ["population_mesh", "MeshRelaxer"]
 
 
 def population_mesh(n_devices: Optional[int] = None) -> Mesh:
-    """1-D mesh over the ``"users"`` axis (default: every visible device).
+    """1-D mesh over the ``"users"`` axis (default: every visible device,
+    across every ``jax.distributed`` process when one was initialized).
 
     Start the process with
     ``XLA_FLAGS=--xla_force_host_platform_device_count=K`` to expose K host
@@ -46,6 +60,10 @@ def population_mesh(n_devices: Optional[int] = None) -> Mesh:
     """
     devs = jax.devices()
     if n_devices is not None:
+        if jax.process_count() > 1:
+            raise ValueError(
+                "n_devices cannot be trimmed on a multi-process mesh — "
+                "every process's devices must participate")
         if n_devices > len(devs):
             raise ValueError(f"requested {n_devices} devices but only "
                              f"{len(devs)} are visible (set XLA_FLAGS="
@@ -79,6 +97,18 @@ class MeshRelaxer:
     def __init__(self, mesh: Optional[Mesh] = None):
         self.mesh = mesh if mesh is not None else population_mesh()
         self._sharding = NamedSharding(self.mesh, P("users"))
+        procs = {d.process_index for d in self.mesh.devices.flat}
+        #: the mesh spans several jax.distributed processes: inputs are
+        #: per-host shards assembled into one global array, outputs are
+        #: this host's addressable shards only
+        self.multihost = len(procs) > 1
+        me = jax.process_index()
+        self._n_local = sum(1 for d in self.mesh.devices.flat
+                            if d.process_index == me)
+        if self.multihost and self._n_local == 0:
+            raise ValueError("multi-process mesh has no devices on this "
+                             "host — every participating process must "
+                             "contribute devices")
 
     @property
     def n_devices(self) -> int:
@@ -86,7 +116,14 @@ class MeshRelaxer:
 
     def relax(self, init: np.ndarray, E: np.ndarray, steep: np.ndarray,
               lo: Optional[int]) -> Tuple[np.ndarray, np.ndarray]:
+        if init.ndim != 3:
+            raise ValueError(f"init must be (D, N, G+1), got {init.shape}")
         D, N, Gp1 = init.shape
+        if E.ndim != 4 or E.shape[0] != D or E.shape[2:] != (N, N) \
+                or steep.shape != E.shape:
+            raise ValueError(
+                f"E/steep must be ({D}, L, {N}, {N}) matching init "
+                f"{init.shape}, got E {E.shape}, steep {steep.shape}")
         L = E.shape[1]
         if L == 0:
             return (np.asarray(init)[:, None].astype(np.float64),
@@ -95,21 +132,66 @@ class MeshRelaxer:
         sti = np.where(finite, steep, 0).astype(np.int32)
         Ef = np.where(finite, E, np.inf).astype(np.float32)
         initf = np.asarray(init, np.float32)
-        n = self.n_devices
-        pad = (-D) % n
+        if self.multihost:
+            hist, par = self._relax_global(initf, Ef, sti, lo, D)
+        else:
+            # scenario counts not divisible by the device count pad with
+            # empty (all-inf) chains and strip them from the outputs —
+            # callers never pre-shape
+            n = self.n_devices
+            pad = (-D) % n
+            if pad:
+                initf = np.concatenate(
+                    [initf, np.full((pad, N, Gp1), np.inf, np.float32)])
+                Ef = np.concatenate(
+                    [Ef, np.full((pad, L, N, N), np.inf, np.float32)])
+                sti = np.concatenate(
+                    [sti, np.zeros((pad, L, N, N), np.int32)])
+            dev = jax.device_put(jnp.asarray(initf), self._sharding)
+            Ed = jax.device_put(jnp.asarray(Ef), self._sharding)
+            sd = jax.device_put(jnp.asarray(sti), self._sharding)
+            h, p = _mesh_relax(dev, Ed, sd, lo)
+            hist = np.asarray(h, np.float64)[:D]
+            par = np.asarray(p).astype(np.int64)[:D]
+        # layer-0 history: the exact float64 init (parity with the jnp
+        # engine, whose callers read hist[0] as the untouched init grid)
+        hist[:, 0] = init
+        return hist, par
+
+    def _relax_global(self, initf: np.ndarray, Ef: np.ndarray,
+                      sti: np.ndarray, lo: Optional[int],
+                      D: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Multi-host relax: every process contributes its own (ragged)
+        shard.  Hosts agree on a uniform per-device row count (the max any
+        host needs — one tiny allgather), pad their local stacks to it,
+        assemble the global sharded arrays without any cross-host data
+        movement, run the SPMD program, and read back only their own
+        addressable shards."""
+        from jax.experimental import multihost_utils
+        _, N, Gp1 = initf.shape
+        L = Ef.shape[1]
+        counts = np.asarray(
+            multihost_utils.process_allgather(np.asarray([D])),
+            dtype=np.int64).reshape(-1)
+        rows = max(1, int(-(-counts.max() // self._n_local)))
+        pad = rows * self._n_local - D
         if pad:
             initf = np.concatenate(
                 [initf, np.full((pad, N, Gp1), np.inf, np.float32)])
             Ef = np.concatenate(
                 [Ef, np.full((pad, L, N, N), np.inf, np.float32)])
             sti = np.concatenate([sti, np.zeros((pad, L, N, N), np.int32)])
-        dev = jax.device_put(jnp.asarray(initf), self._sharding)
-        Ed = jax.device_put(jnp.asarray(Ef), self._sharding)
-        sd = jax.device_put(jnp.asarray(sti), self._sharding)
-        hist, par = _mesh_relax(dev, Ed, sd, lo)
-        hist = np.asarray(hist, np.float64)[:D]
-        par = np.asarray(par).astype(np.int64)[:D]
-        # layer-0 history: the exact float64 init (parity with the jnp
-        # engine, whose callers read hist[0] as the untouched init grid)
-        hist[:, 0] = init
-        return hist, par
+
+        def mk(x):
+            return jax.make_array_from_process_local_data(
+                self._sharding, x)
+
+        h, p = _mesh_relax(mk(initf), mk(Ef), mk(sti), lo)
+
+        def local(arr, dtype):
+            shards = sorted(arr.addressable_shards,
+                            key=lambda s: s.index[0].start or 0)
+            return np.concatenate(
+                [np.asarray(s.data, dtype) for s in shards])[:D]
+
+        return local(h, np.float64), local(p, np.int64).astype(np.int64)

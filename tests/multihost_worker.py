@@ -1,0 +1,57 @@
+"""One process of the simulated multi-host mesh smoke (not a test module —
+launched by tests/test_stream_subprocess.py and the CI multihost step).
+
+Each process exposes 2 host-platform devices, joins a ``jax.distributed``
+cluster over the loopback coordinator, and relaxes a RAGGED per-host shard
+(3 + 2 * process_id chains) through the global ``"users"`` mesh.  The
+result must match a single-host MeshRelaxer over this process's own local
+devices exactly: the multi-host path changes data placement, never the
+arithmetic.
+
+Usage: multihost_worker.py <process_id> <num_processes> <coordinator_port>
+"""
+import os
+import sys
+
+pid, nproc, port = int(sys.argv[1]), int(sys.argv[2]), sys.argv[3]
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=2")
+
+import jax  # noqa: E402
+
+# CPU cross-process collectives need the gloo transport (see README)
+jax.config.update("jax_cpu_collectives_implementation", "gloo")
+jax.distributed.initialize(coordinator_address=f"127.0.0.1:{port}",
+                           num_processes=nproc, process_id=pid)
+
+import numpy as np  # noqa: E402
+from jax.sharding import Mesh  # noqa: E402
+
+from repro.sharding.population import MeshRelaxer, population_mesh  # noqa: E402
+
+assert jax.process_count() == nproc
+mesh = population_mesh()
+mr = MeshRelaxer(mesh)
+assert mr.multihost
+assert mr.n_devices == 2 * nproc, mr.n_devices
+
+rng = np.random.default_rng(42 + pid)
+D = 3 + 2 * pid                       # ragged: hosts disagree on shard size
+L, N, Gp1 = 3, 5, 11
+steep = np.where(rng.random((D, L, N, N)) < 0.5,
+                 rng.integers(0, 10, (D, L, N, N)).astype(float), np.inf)
+E = rng.random((D, L, N, N))
+init = np.where(rng.random((D, N, Gp1)) < 0.3,
+                rng.random((D, N, Gp1)), np.inf)
+
+hist, par = mr.relax(init, E, steep, None)
+assert hist.shape == (D, L + 1, N, Gp1)
+assert par.shape == (D, L, N, Gp1)
+
+local = MeshRelaxer(Mesh(np.asarray(jax.local_devices()),
+                         axis_names=("users",)))
+assert not local.multihost
+hl, pl = local.relax(init, E, steep, None)
+assert np.array_equal(hist, hl)
+assert np.array_equal(par, pl)
+print(f"proc {pid}: D={D} global==local exact", flush=True)

@@ -1,0 +1,87 @@
+"""MeshRelaxer shaping contract: pad-and-strip for ragged scenario counts,
+clear ValueErrors for malformed stacks, and f32 agreement with the float64
+reference on every branch.
+
+Runs against however many devices are visible; the pad-branch tests need a
+multi-device mesh and are exercised with 4 host devices via
+``tests/test_stream_subprocess.py`` (the main pytest process keeps the
+default single CPU device).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.bellman_ford import batched_banded_relax_minarg
+from repro.sharding.population import MeshRelaxer, population_mesh
+
+
+def _case(D, seed=0, L=3, N=5, Gp1=11):
+    rng = np.random.default_rng(seed)
+    steep = np.where(rng.random((D, L, N, N)) < 0.5,
+                     rng.integers(0, Gp1 - 1, (D, L, N, N)).astype(float),
+                     np.inf)
+    E = rng.random((D, L, N, N))
+    init = np.where(rng.random((D, N, Gp1)) < 0.3,
+                    rng.random((D, N, Gp1)), np.inf)
+    return init, E, steep
+
+
+def _check(mr, D, seed=0):
+    init, E, steep = _case(D, seed)
+    h, p = mr.relax(init, E, steep, None)
+    assert h.shape == (D, 4, 5, 11)
+    assert p.shape == (D, 3, 5, 11)
+    h64, _ = batched_banded_relax_minarg(
+        init, np.where(np.isfinite(steep), E, np.inf), steep, None)
+    fin = np.isfinite(h64)
+    assert np.array_equal(np.isfinite(h), fin)
+    np.testing.assert_allclose(h[fin], h64[fin], rtol=1e-6)
+    assert np.array_equal(h[:, 0], init)      # exact f64 init row
+
+
+def test_divisible_counts_no_padding():
+    mr = MeshRelaxer(population_mesh())
+    _check(mr, 2 * mr.n_devices, seed=1)
+
+
+def test_ragged_counts_pad_and_strip():
+    mr = MeshRelaxer(population_mesh())
+    for D in (1, mr.n_devices + 1, 3 * mr.n_devices - 1):
+        _check(mr, D, seed=D)
+
+
+@pytest.mark.skipif(jax.device_count() < 4,
+                    reason="pad branch needs a multi-device mesh")
+def test_pad_branch_on_multi_device_mesh():
+    mr = MeshRelaxer(population_mesh(4))
+    assert mr.n_devices == 4
+    for D in (1, 3, 5, 7):                    # all force padding
+        assert D % mr.n_devices != 0
+        _check(mr, D, seed=10 + D)
+    _check(mr, 8, seed=99)                    # and the exact-fit branch
+
+
+def test_malformed_stacks_raise():
+    mr = MeshRelaxer(population_mesh())
+    init, E, steep = _case(4)
+    with pytest.raises(ValueError, match="init must be"):
+        mr.relax(init[:, 0], E, steep, None)
+    with pytest.raises(ValueError, match="E/steep"):
+        mr.relax(init, E[:, :, :4], steep, None)
+    with pytest.raises(ValueError, match="E/steep"):
+        mr.relax(init, E, steep[:2], None)
+    with pytest.raises(ValueError, match="E/steep"):
+        mr.relax(init, E[:2], steep[:2], None)
+
+
+def test_zero_layer_chain_short_circuits():
+    mr = MeshRelaxer(population_mesh())
+    init, _, _ = _case(3)
+    h, p = mr.relax(init, np.empty((3, 0, 5, 5)), np.empty((3, 0, 5, 5)),
+                    None)
+    assert np.array_equal(h[:, 0], init) and p.shape == (3, 0, 5, 11)
+
+
+def test_population_mesh_device_trim_validation():
+    with pytest.raises(ValueError, match="visible"):
+        population_mesh(jax.device_count() + 1)

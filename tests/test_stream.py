@@ -1,0 +1,355 @@
+"""Streaming tick pipeline, fused/chunked newborn relaxation, and bounded
+re-relaxation: every fast path must be bit-exact vs the PR-7 synchronous
+machinery on identical churn traces.
+
+Covers the PR-8 tentpole pieces that run on a single device:
+  * ``ChurnOrchestrator.run_arrays`` (double-buffered ticks) vs the
+    synchronous ``step_arrays`` loop — reports, ledgers and incumbents.
+  * ``Population.solve_begin``/``solve_finish`` vs ``solve``.
+  * fused newborn launches falling back to the chunked path under tiny
+    ``REPRO_RELAX_CHUNK_BYTES`` budgets, bit-exact either way.
+  * bounded re-relaxation (population parent-resume and the Plan delta
+    stash) vs full relaxes, plus mask-share reuse of a parent's grids.
+  * per-tick timing breakdown plumbing (zero-cost when disabled).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (ChurnOrchestrator, Plan, Population, paper_profile,
+                        population_cohorts)
+from repro.core.multiapp import PAPER_MULTIAPP_REQS
+from repro.core.scenarios import paper_scenario
+
+U = 240
+T = 5
+
+
+@pytest.fixture(scope="module")
+def network():
+    return paper_scenario(n_extra_edge=2)
+
+
+def _trace(seed=7, users=U, ticks=T):
+    rng = np.random.default_rng(seed)
+    qual = np.clip(0.55 + 0.25 * rng.standard_normal((ticks, users)),
+                   0.05, 1.0)
+    att = rng.integers(0, 3, size=(ticks, users))
+    return qual, att
+
+
+def _orch(**pop_kwargs):
+    pops = population_cohorts(U, n_extra_edge=2, **pop_kwargs)
+    return ChurnOrchestrator(population=pops, hysteresis=0.05)
+
+
+def _assert_reports_equal(a, b):
+    for ra, rb in zip(a, b):
+        assert ra.energy == rb.energy, (ra.tick, ra.energy, rb.energy)
+        assert ra.n_resolved == rb.n_resolved
+        assert ra.n_held == rb.n_held
+        assert ra.n_failed == rb.n_failed
+        assert ra.n_migrations == rb.n_migrations
+        assert ra.blocks_moved == rb.blocks_moved
+        assert ra.migration_bits == rb.migration_bits
+
+
+def _assert_incumbents_equal(o1, o2):
+    for p1, p2 in zip(o1.pops, o2.pops):
+        assert np.array_equal(p1.inc_found, p2.inc_found)
+        assert np.array_equal(p1._inc_place, p2._inc_place)
+        assert np.array_equal(p1._inc_exit, p2._inc_exit)
+        f = p1.inc_found
+        assert np.array_equal(p1._inc_energy[f], p2._inc_energy[f])
+
+
+# ---------------------------------------------------------------------------
+# streaming pipeline vs the synchronous loop
+# ---------------------------------------------------------------------------
+
+def test_run_arrays_stream_matches_sync():
+    qual, att = _trace()
+    sync = _orch()
+    stream = _orch()
+    reps_sync = [sync.step_arrays(qual[t], att[t]) for t in range(T)]
+    reps_str = stream.run_arrays(qual, att, stream=True)
+    assert len(reps_str) == T
+    _assert_reports_equal(reps_sync, reps_str)
+    _assert_incumbents_equal(sync, stream)
+
+
+def test_run_arrays_stream_false_takes_sync_path():
+    qual, att = _trace(seed=11)
+    a = _orch().run_arrays(qual, att, stream=False)
+    b = _orch().run_arrays(qual, att, stream=True)
+    _assert_reports_equal(a, b)
+
+
+def test_run_arrays_quality_only_and_resumable():
+    """No attach matrix, and a second run_arrays continues the tick
+    counter — the pipeline holds no state across calls."""
+    qual, _ = _trace(seed=3)
+    ob = _orch()
+    r1 = ob.run_arrays(qual[:2])
+    r2 = ob.run_arrays(qual[2:])
+    ticks = [r.tick for r in r1 + r2]
+    assert ticks == list(range(T))
+    ob2 = _orch()
+    _assert_reports_equal(r1 + r2,
+                          [ob2.step_arrays(qual[t]) for t in range(T)])
+    _assert_incumbents_equal(ob, ob2)
+
+
+def test_run_arrays_always_resolve_matches():
+    qual, att = _trace(seed=13, users=120)
+    pops = population_cohorts(120, n_extra_edge=2)
+    sync = ChurnOrchestrator(population=pops, always_resolve=True)
+    pops2 = population_cohorts(120, n_extra_edge=2)
+    stream = ChurnOrchestrator(population=pops2, always_resolve=True)
+    reps_sync = [sync.step_arrays(qual[t], att[t]) for t in range(T)]
+    reps_str = stream.run_arrays(qual, att)
+    _assert_reports_equal(reps_sync, reps_str)
+    _assert_incumbents_equal(sync, stream)
+
+
+def test_run_arrays_validation():
+    qual, att = _trace()
+    ob = _orch()
+    with pytest.raises(ValueError, match="qualities"):
+        ob.run_arrays(qual[:, :10])
+    with pytest.raises(ValueError, match="attaches"):
+        ob.run_arrays(qual, att[:, :10])
+    nw = paper_scenario(n_extra_edge=2)
+    plain = ChurnOrchestrator(
+        [Plan(nw, paper_profile("h1"), PAPER_MULTIAPP_REQS["h1"])])
+    with pytest.raises(ValueError, match="population"):
+        plain.run_arrays(qual)
+
+
+def test_solve_begin_finish_equals_solve(network):
+    prof = paper_profile("h1")
+    req = PAPER_MULTIAPP_REQS["h1"]
+    rng = np.random.default_rng(5)
+    p1 = Population(network, prof, req, 8)
+    p2 = Population(network, prof, req, 8)
+    for t in range(4):
+        q = rng.uniform(0.3, 1.0, 8) * 1e9
+        p1.ingest(q, requant=False)
+        p2.ingest(q, requant=False)
+        a = p1.solve()
+        pend = p2.solve_begin(stream=True)
+        b = p2.solve_finish(pend)
+        for sa, sb in zip(a, b):
+            assert sa.found == sb.found
+            if sa.found:
+                assert sa.config.placement == sb.config.placement
+                assert sa.energy == sb.energy
+
+
+# ---------------------------------------------------------------------------
+# fused newborn launch vs the chunked residency fallback (S3)
+# ---------------------------------------------------------------------------
+
+def _newborn_solve(network, users=10):
+    prof = paper_profile("h4")
+    req = PAPER_MULTIAPP_REQS["h4"]
+    pop = Population(network, prof, req, users)
+    vec = np.linspace(0.3, 1.0, users)[:, None] * 1e9 \
+        * np.linspace(0.5, 1.5, network.n_nodes)[None, :]
+    pop.ingest(vec)          # distinct packs: one newborn state per user
+    sols = pop.solve()
+    return pop, [(s.found, tuple(s.config.placement) if s.found else None,
+                  s.energy) for s in sols]
+
+
+def test_fused_newborn_single_launch(network):
+    pop, _ = _newborn_solve(network)
+    assert pop.stats.fused_relaxes >= 1
+    assert pop.stats.chunked_relaxes == 0
+
+
+def test_tiny_chunk_budget_forces_chunked_fallback(network, monkeypatch):
+    pop_f, sols_f = _newborn_solve(network)
+    monkeypatch.setenv("REPRO_RELAX_CHUNK_BYTES", "1")
+    pop_c, sols_c = _newborn_solve(network)
+    assert pop_c.stats.chunked_relaxes >= 1
+    assert pop_c.stats.fused_relaxes == 0
+    assert sols_f == sols_c          # bit-exact across the residency split
+
+
+def test_invalid_chunk_budget_still_raises(network, monkeypatch):
+    for bad in ("bogus", "-5", "0"):
+        monkeypatch.setenv("REPRO_RELAX_CHUNK_BYTES", bad)
+        with pytest.raises(ValueError, match="REPRO_RELAX_CHUNK_BYTES"):
+            _newborn_solve(network)
+
+
+# ---------------------------------------------------------------------------
+# bounded re-relaxation: population parent-resume + mask-share
+# ---------------------------------------------------------------------------
+
+def _churn_pop(network, bounded, seed=19):
+    prof = paper_profile("h2")
+    req = PAPER_MULTIAPP_REQS["h2"]
+    rng = np.random.default_rng(seed)
+    pop = Population(network, prof, req, 12, bounded_rerelax=bounded)
+    out = []
+    base = rng.uniform(0.4, 1.0, 12) * 1e9
+    pop.ingest(base)
+    out.append([s.energy for s in pop.solve()])
+    for t in range(10):
+        # small AR(1)-style fades: most quantized pack rows stay in-cell,
+        # so the rows that DO move often map to deep layers only
+        base *= np.exp(rng.normal(0.0, 0.04, 12))
+        pop.ingest(base)
+        if t == 4:
+            pop.mask_node(4)
+        if t == 7:
+            pop.unmask_node(4)
+        out.append([s.energy for s in pop.solve()])
+    return pop, out
+
+
+def test_population_bounded_rerelax_bitexact(network):
+    pop_b, sols_b = _churn_pop(network, True)
+    pop_f, sols_f = _churn_pop(network, False)
+    assert sols_b == sols_f
+    assert pop_f.stats.bounded_relaxes == 0
+    assert pop_b.stats.bounded_relaxes > 0
+    assert pop_b.stats.layers_skipped > 0
+    # bounded runs strictly fewer full relax launches
+    assert pop_b.stats.dp_relaxes == pop_f.stats.dp_relaxes
+
+
+def test_population_mask_share_reuses_parent_grids():
+    """Masking a node that no state can ever host (its compute slice is
+    ~zero, so its grid column is all-inf) must be served by re-wrapping the
+    parent's relaxed grids — zero new relax launches for those states."""
+    nw = paper_scenario(n_extra_edge=2)
+    compute = nw.compute.copy()
+    compute[4] = 1e-6                    # node 4 can host nothing
+    nw2 = dataclasses.replace(nw, compute=compute)
+    prof = paper_profile("h1")
+    req = PAPER_MULTIAPP_REQS["h1"]
+    pop = Population(nw2, prof, req, 6, bounded_rerelax=True)
+    pop.ingest(np.linspace(0.4, 1.0, 6) * 1e9)
+    before = [s.energy for s in pop.solve()]
+    launches = pop.stats.fused_relaxes + pop.stats.chunked_relaxes
+    pop.mask_node(4)
+    after = [s.energy for s in pop.solve()]
+    assert pop.stats.mask_reuses > 0
+    assert before == after               # node 4 never hosted anything
+    # the shared states re-wrapped the parent grids: no new relax launch
+    assert pop.stats.fused_relaxes + pop.stats.chunked_relaxes == launches
+
+    # reference: the unbounded engine reaches the same answers
+    pop2 = Population(nw2, prof, req, 6, bounded_rerelax=False)
+    pop2.ingest(np.linspace(0.4, 1.0, 6) * 1e9)
+    pop2.solve()
+    pop2.mask_node(4)
+    assert after == [s.energy for s in pop2.solve()]
+    assert pop2.stats.mask_reuses == 0
+
+
+# ---------------------------------------------------------------------------
+# bounded re-relaxation: Plan delta stash
+# ---------------------------------------------------------------------------
+
+def _plan_churn(app, resume, seed=0, ticks=30):
+    nw = paper_scenario(n_extra_edge=2)
+    rng = np.random.default_rng(seed)
+    p = Plan(nw, paper_profile(app), PAPER_MULTIAPP_REQS[app])
+    N = nw.n_nodes
+    p.solve()
+    sols = []
+    for t in range(ticks):
+        kind = t % 3
+        if kind == 0:
+            sc = np.ones((N, N))
+            n1, n2 = rng.integers(1, N, 2)
+            sc[n1, n2] = sc[n2, n1] = 0.6 + 0.8 * rng.random()
+            p.update_backhaul(sc)
+        elif kind == 1:
+            p.update_slice(0.7 + 0.6 * rng.random(),
+                           nodes=[int(rng.integers(0, N))])
+        else:
+            p.update_uplink(np.full(N, 1e6 * (0.3 + rng.random())))
+        if not resume:
+            p._dp_resume = None
+        s = p.solve()
+        sols.append((tuple(s.config.placement) if s.config else None,
+                     s.config.final_exit if s.config else None, s.energy))
+    return p, sols
+
+
+@pytest.mark.parametrize("app", ["h1", "h5"])
+def test_plan_bounded_resume_bitexact(app):
+    p1, a = _plan_churn(app, True)
+    p2, b = _plan_churn(app, False)
+    assert a == b
+    assert p1.stats.bounded_relaxes > 0
+    assert p1.stats.layers_skipped > 0
+    assert p2.stats.bounded_relaxes == 0
+
+
+def test_plan_resume_chains_and_invalidates():
+    """Consecutive deltas between solves chain to the min affected layer;
+    a masked-node flip (whole chain touched) kills the stash."""
+    nw = paper_scenario(n_extra_edge=2)
+    p = Plan(nw, paper_profile("h3"), PAPER_MULTIAPP_REQS["h3"])
+    p.solve()
+    N = nw.n_nodes
+    sc = np.ones((N, N))
+    sc[2, 3] = sc[3, 2] = 0.9
+    p.update_backhaul(sc)
+    sc[2, 3] = sc[3, 2] = 0.8
+    p.update_backhaul(sc)            # chains against the SAME parent grids
+    if p._dp_resume is not None:
+        assert p._dp_resume[1] >= 1
+    s_resumed = p.solve()
+    q = Plan(nw, paper_profile("h3"), PAPER_MULTIAPP_REQS["h3"])
+    q.update_backhaul(sc)
+    s_cold = q.solve()
+    assert s_resumed.energy == s_cold.energy
+    assert (s_resumed.config is None) == (s_cold.config is None)
+    if s_resumed.config is not None:
+        assert s_resumed.config.placement == s_cold.config.placement
+
+    p.update_backhaul(np.ones((N, N)))
+    p.mask_node(4)                   # bumps quant version past any stash
+    assert p._try_resume_dp() is None
+    s_masked = p.solve()
+    q2 = Plan(nw, paper_profile("h3"), PAPER_MULTIAPP_REQS["h3"])
+    q2.mask_node(4)
+    assert s_masked.energy == q2.solve().energy
+
+
+# ---------------------------------------------------------------------------
+# per-tick timing breakdown (S2)
+# ---------------------------------------------------------------------------
+
+def test_timing_breakdown_populated_when_enabled():
+    qual, att = _trace(seed=23, users=120)
+    pops = population_cohorts(120, n_extra_edge=2, timing=True)
+    ob = ChurnOrchestrator(population=pops, hysteresis=0.05)
+    reps = ob.run_arrays(qual, att)
+    assert all(p._timing for p in ob.pops)
+    total = sum(r.t_ingest_ms + r.t_relax_ms + r.t_post_ms for r in reps)
+    assert total > 0.0
+    agg = ob.pops[0].stats
+    assert agg.t_ingest_ms >= 0.0 and agg.t_post_ms > 0.0
+
+
+def test_timing_breakdown_zero_when_disabled():
+    qual, att = _trace(seed=23, users=120)
+    pops = population_cohorts(120, n_extra_edge=2)
+    ob = ChurnOrchestrator(population=pops, hysteresis=0.05)
+    reps = [ob.step_arrays(qual[t], att[t]) for t in range(T)]
+    for r in reps:
+        assert r.t_ingest_ms == r.t_relax_ms == r.t_post_ms == 0.0
+        assert r.t_reprice_ms == 0.0
+    for p in ob.pops:
+        assert p.stats.t_ingest_ms == 0.0
+        assert p.stats.t_relax_ms == 0.0
+        assert p.stats.t_post_ms == 0.0
