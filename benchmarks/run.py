@@ -21,6 +21,10 @@ CI perf-regression smoke job.  Benches match the paper artifacts:
             population path on self-calibrated over-subscription
   failover  contingency-library hits vs warm mask+re-solve vs cold rebuild
             (bit-exact, zero-relaxation), + tier-outage trace hit rate
+  faults    crash consistency: boundary-checkpoint overhead (asserted
+            bit-identical to the uncheckpointed run), cold restore+replay
+            latency, and quarantine-policy throughput under injected
+            telemetry corruption
   stream    streaming tick pipeline: double-buffered ticks vs the sync
             loop, fused vs chunked newborn relax, bounded re-relaxation
             (all asserted bit-exact), + 1e6/1e7-user scale rows
@@ -46,6 +50,7 @@ BENCHES = [
     "bench_online",
     "bench_congestion",
     "bench_failover",
+    "bench_faults",
     "bench_stream",
     "bench_kernels",
     "bench_engine",

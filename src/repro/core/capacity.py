@@ -302,6 +302,10 @@ class CongestionController:
         # base * step**(-k*w) — slice churn must route through
         # :meth:`renegotiate_slice` while a controller owns the cohorts
         self._base_slice = [np.ones(N) for _ in self.pops]
+        #: has the controller EVER written cohort pi's slice?  Restore must
+        #: not install ``base_slice`` (ones) over a cohort whose original
+        #: plan carried a non-unit slice the controller never touched.
+        self._slice_set = [False] * len(self.pops)
         # canonical loads of the current incumbent set (admission's cheap
         # screening state; refreshed by every tracked reduction)
         self._load_n: Optional[np.ndarray] = None
@@ -345,6 +349,7 @@ class CongestionController:
                     * self.step ** (-self.node_k.astype(np.float64) * w)
                 p.update_slice(frac)
                 self._applied_node[pi] = nk
+                self._slice_set[pi] = True
             if link_moved:
                 scale = self.step ** (-self.link_k.astype(np.float64) * w)
                 p.update_backhaul(scale)
@@ -383,6 +388,70 @@ class CongestionController:
             p.update_slice(
                 base * self.step ** (-self.node_k.astype(np.float64) * w))
             self._applied_node[pi] = self.node_k.tobytes()
+            self._slice_set[pi] = True
+
+    # --------------------------------------------------------- checkpointing
+    def state_dict(self) -> dict:
+        """The controller's crash-consistent state as plain arrays: the
+        price exponents, the per-cohort applied price cells, the
+        renegotiated base slices and the activity flag.  The running load
+        totals (``_load_n``/``_load_l``) are derived state — the next
+        ``run_tick`` recomputes them from the incumbents and the admission
+        screen safely falls through to the canonical check while they are
+        unset."""
+        N = len(self.node_cap)
+        return {
+            "node_k": self.node_k.copy(),
+            "link_k": self.link_k.copy(),
+            "applied_node": np.stack([np.frombuffer(b, dtype=np.int64)
+                                      for b in self._applied_node]),
+            "applied_link": np.stack(
+                [np.frombuffer(b, dtype=np.int64).reshape(N, N)
+                 for b in self._applied_link]),
+            "base_slice": np.stack(self._base_slice),
+            "slice_set": np.asarray(self._slice_set, dtype=bool),
+            "active": np.asarray(self._active),
+        }
+
+    def restore_state(self, d: dict) -> None:
+        """Restore :meth:`state_dict` and RE-INSTALL the crash-time priced
+        tensors into every cohort.  The applied factors are absolute with
+        respect to the construction-time snapshots (``update_slice`` writes
+        the fraction, ``update_backhaul`` scales the pristine bandwidths),
+        so one application of the composed final factors reproduces the
+        crash-time tensors bit-exactly — the caller then restores each
+        cohort's SoA state on top (``Population.restore_state``), whose
+        re-relaxations read these tensors."""
+        P = len(self.pops)
+        N = len(self.node_cap)
+        an = np.ascontiguousarray(np.asarray(d["applied_node"],
+                                             dtype=np.int64))
+        al = np.ascontiguousarray(np.asarray(d["applied_link"],
+                                             dtype=np.int64))
+        bs = np.asarray(d["base_slice"], dtype=np.float64)
+        ss = np.asarray(d["slice_set"], dtype=bool)
+        if an.shape != (P, N) or al.shape != (P, N, N) \
+                or bs.shape != (P, N) or ss.shape != (P,):
+            raise ValueError(
+                f"congestion checkpoint shaped for {an.shape[0]} cohorts x "
+                f"{an.shape[-1]} nodes, controller has {P} x {N}")
+        self.node_k[:] = np.asarray(d["node_k"], dtype=np.int64)
+        self.link_k[:] = np.asarray(d["link_k"], dtype=np.int64)
+        self._applied_node = [an[pi].tobytes() for pi in range(P)]
+        self._applied_link = [al[pi].tobytes() for pi in range(P)]
+        self._base_slice = [bs[pi].copy() for pi in range(P)]
+        self._slice_set = [bool(x) for x in ss]
+        self._active = bool(np.asarray(d["active"]))
+        self._load_n = self._load_l = None
+        for pi, p in enumerate(self.pops):
+            w = self.weights[pi]
+            if self._slice_set[pi]:
+                p.update_slice(self._base_slice[pi]
+                               * self.step ** (-an[pi].astype(np.float64)
+                                               * w))
+            if (al[pi] != 0).any():
+                p.update_backhaul(
+                    self.step ** (-al[pi].astype(np.float64) * w))
 
     # -------------------------------------------------------------- loads
     def loads(self, return_groups: bool = False):

@@ -287,6 +287,36 @@ class ContingencyLibrary:
         self.stats.hits += 1
         return entry
 
+    # ----------------------------------------------------------- checkpointing
+    def state_dict(self) -> dict:
+        """The observed-mask counters as plain arrays (insertion order —
+        part of the tie-break of ``most_common``).  Entries themselves are
+        NOT serialized: they are derived state, rebuilt bit-exactly by
+        ``refill()`` against the restored plan."""
+        keys = list(self._observed.keys())
+        N = self.plan.network.n_nodes
+        masks = (np.stack([self._observed_masks[k] for k in keys])
+                 if keys else np.zeros((0, N), dtype=bool))
+        counts = np.asarray([self._observed[k] for k in keys],
+                            dtype=np.int64)
+        return {"obs_masks": masks, "obs_counts": counts}
+
+    def restore_state(self, d: dict) -> None:
+        """Restore :meth:`state_dict`; call ``refill()`` afterwards to
+        rebuild the entries around the restored plan state."""
+        masks = np.asarray(d["obs_masks"], dtype=bool)
+        counts = np.asarray(d["obs_counts"], dtype=np.int64)
+        if masks.ndim != 2 or masks.shape[0] != len(counts):
+            raise ValueError(f"observed-mask checkpoint shapes "
+                             f"{masks.shape} / {counts.shape} disagree")
+        self._observed = Counter()
+        self._observed_masks = {}
+        for m, c in zip(masks, counts):
+            key = m.tobytes()
+            self._observed[key] = int(c)
+            self._observed_masks[key] = m.copy()
+        self._env_version = -1     # entries are stale until the next refill
+
     # ---------------------------------------------------------------- refill
     @staticmethod
     def _toggle_to(plan: Plan, target: np.ndarray) -> None:
@@ -303,11 +333,16 @@ class ContingencyLibrary:
             return plan._dp_cache[1]
         return None
 
-    def refill(self, base_config: Optional[Config] = None) -> int:
+    def refill(self, base_config: Optional[Config] = None, *,
+               extra_masks: Sequence[np.ndarray] = ()) -> int:
         """Rebuild every entry around the plan's CURRENT (mask, channel)
         state.  ``base_config`` is the currently deployed placement the
         migration costs are priced against (defaults to the plan's
-        incumbent).  Returns the number of entries built.
+        incumbent).  ``extra_masks`` adds operator-supplied absolute
+        failure masks to the candidates ahead of the observed ones (a
+        maintenance window, a forecast outage); they count against
+        ``max_masks`` like any candidate.  Returns the number of entries
+        built.
 
         This is the background half of the protocol: the engine runs it
         off the failover critical path (deferred to the next serving step
@@ -321,7 +356,8 @@ class ContingencyLibrary:
         snap_argmin = plan._argmin_solution
         snap_solves = plan.stats.solves
 
-        obs = [self._observed_masks[k] for k, _c in
+        obs = [np.asarray(m, dtype=bool).copy() for m in extra_masks] \
+            + [self._observed_masks[k] for k, _c in
                self._observed.most_common(self.policy.top_observed)]
         cands = candidate_masks(
             base_mask, plan.network.source_node,
@@ -435,16 +471,49 @@ class PopulationContingency:
         self.stats.misses += misses
         return hits, misses
 
+    # ----------------------------------------------------------- checkpointing
+    def state_dict(self) -> dict:
+        """The observed-mask counters as plain arrays, in INSERTION order —
+        ``Counter.most_common`` breaks count ties by insertion, so the
+        order is part of which masks the next refill covers."""
+        keys = list(self._observed.keys())
+        N = self.pop.N
+        masks = (np.stack([self._observed_masks[k] for k in keys])
+                 if keys else np.zeros((0, N), dtype=bool))
+        counts = np.asarray([self._observed[k] for k in keys],
+                            dtype=np.int64)
+        return {"obs_masks": masks, "obs_counts": counts}
+
+    def restore_state(self, d: dict) -> None:
+        """Restore :meth:`state_dict` (the prebuilt states themselves ride
+        the cohort's own checkpoint — ``Population.state_dict`` saves every
+        cohort state plus the pin set, so no refill is needed here)."""
+        masks = np.asarray(d["obs_masks"], dtype=bool)
+        counts = np.asarray(d["obs_counts"], dtype=np.int64)
+        if masks.ndim != 2 or masks.shape[0] != len(counts) \
+                or (len(masks) and masks.shape[1] != self.pop.N):
+            raise ValueError(f"observed-mask checkpoint shapes "
+                             f"{masks.shape} / {counts.shape} do not fit "
+                             f"a {self.pop.N}-node population")
+        self._observed = Counter()
+        self._observed_masks = {}
+        for m, c in zip(masks, counts):
+            key = m.tobytes()
+            self._observed[key] = int(c)
+            self._observed_masks[key] = m.copy()
+
     # ---------------------------------------------------------------- refill
-    def refill(self) -> int:
+    def refill(self, *, extra_masks: Sequence[np.ndarray] = ()) -> int:
         """Prebuild the candidate failover states of every live cohort
         state: find-or-add each (pack, candidate-mask) signature, relax
         every newborn in ONE chained batched relaxation (prebuilt counter,
         zero ``dp_relaxes``), build the vectorized-post-pass fast tables,
-        and pin the whole set through compaction.  Returns the number of
-        states relaxed (0 = full coverage already)."""
+        and pin the whole set through compaction.  ``extra_masks`` adds
+        operator-supplied absolute masks ahead of the observed candidates.
+        Returns the number of states relaxed (0 = full coverage already)."""
         pop = self.pop
-        obs = [self._observed_masks[k] for k, _c in
+        obs = [np.asarray(m, dtype=bool).copy() for m in extra_masks] \
+            + [self._observed_masks[k] for k, _c in
                self._observed.most_common(self.policy.top_observed)]
         pinned: set = set()
         for sid in np.unique(pop._user_state):

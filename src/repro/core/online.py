@@ -38,8 +38,10 @@ benchmark drive.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Sequence, Union
+from typing import (Callable, Dict, Iterable, List, Optional, Sequence,
+                    Union)
 
 import numpy as np
 
@@ -89,6 +91,13 @@ class TickReport:
     contingency_hits: int = 0    # affected states whose mask was prebuilt
     contingency_misses: int = 0  # affected states that had to relax
     contingency_prebuilt: int = 0  # states prebuilt by this tick's refill
+    # fault-tolerance accounting (zero unless a TelemetryPolicy, a mesh
+    # backend or a straggler detector is configured)
+    n_quarantined: int = 0       # users newly quarantined this tick
+    n_recovered: int = 0         # users released from quarantine
+    n_mesh_retries: int = 0      # mesh collective dispatch retries
+    n_mesh_demotions: int = 0    # mesh demotion-ladder rungs taken
+    n_stragglers: int = 0        # workers flagged by the straggler detector
     # per-phase wall-ms breakdown (zero unless every cohort was built with
     # ``Population(..., timing=True)``; reprice is timed by the
     # orchestrator).  Streaming ticks overlap phases, so a tick's relax
@@ -152,7 +161,8 @@ class ChurnOrchestrator:
                  frontier_k: int = 4,
                  shared_capacity: Optional[SharedCapacity] = None,
                  price_weights: Optional[Sequence[float]] = None,
-                 contingency: Union[bool, ContingencyPolicy, None] = None):
+                 contingency: Union[bool, ContingencyPolicy, None] = None,
+                 straggler: object = None):
         if (plans is None) == (population is None):
             raise ValueError("pass exactly one of plans= or population=")
         if shared_capacity is not None and population is None:
@@ -191,6 +201,19 @@ class ChurnOrchestrator:
             contingency if isinstance(contingency, ContingencyPolicy)
             else ContingencyPolicy() if contingency else None)
         self.contingency_libs: Optional[List[PopulationContingency]] = None
+        #: straggler mitigation (runtime/straggler.py): ``True`` builds a
+        #: default StragglerDetector on first use, or pass a configured
+        #: detector.  Each tick's per-worker relax times feed ``update``;
+        #: flagged workers demote every cohort's mesh relaxer one rung
+        #: (symmetric across hosts — all hosts see the same gathered
+        #: times, so they shrink together).  Times come from
+        #: ``TickReport.t_relax_ms`` (requires ``Population(timing=True)``)
+        #: unless :attr:`straggler_times` injects a provider.
+        self._straggler_cfg = straggler
+        self._straggler_det = None
+        #: injectable per-tick worker step-time provider (tests, external
+        #: schedulers): a callable ``TickReport -> (H,) times``
+        self.straggler_times: Optional[Callable] = None
         if population is not None:
             self._init_population(population)
             if shared_capacity is not None:
@@ -258,6 +281,8 @@ class ChurnOrchestrator:
         self.attached = np.zeros(U, dtype=np.int64)
         self._ref_energy = np.full(U, np.inf)
         self._cur_energy = np.full(U, np.inf)
+        #: running (retries, demotions) cursor for the per-tick mesh deltas
+        self._mesh_cursor = (0, 0)
         for p in pops:
             fresh = np.nonzero(~p._solved)[0]
             if len(fresh):
@@ -542,6 +567,7 @@ class ChurnOrchestrator:
                          dirty_mask: np.ndarray,
                          requant: bool = True) -> None:
         snap = self._timing_snapshot()
+        q0 = self._quar_counters()
         # channel + mobility funnel: one vectorized ingest per cohort.
         # Dense ticks (every user dirty — the step_arrays common case)
         # skip the per-cohort membership scans and the (U, N) staging
@@ -575,6 +601,9 @@ class ChurnOrchestrator:
                         changed_total += int(np.count_nonzero(changed))
                 rep.n_uplink_updates = len(up_idx)
                 rep.n_quant_changed = changed_total
+        q1 = self._quar_counters()
+        rep.n_quarantined = q1[0] - q0[0]
+        rep.n_recovered = q1[1] - q0[1]
 
         # hysteresis gate: vectorized exact incumbent re-check
         all_dirty = dense and bool(dirty_mask.all())
@@ -670,12 +699,17 @@ class ChurnOrchestrator:
 
         fin = np.isfinite(self._cur_energy)
         rep.energy = float(self._cur_energy[fin].sum())
-        self._timing_fill(rep, snap)
+        self._tick_fill(rep, snap)
 
     # ------------------------------------------------------- streaming ticks
     def run_arrays(self, qualities: np.ndarray,
                    attaches: Optional[np.ndarray] = None, *,
-                   stream: bool = True) -> List[TickReport]:
+                   stream: bool = True,
+                   checkpoint_dir: Optional[str] = None,
+                   checkpoint_every: int = 0,
+                   checkpoint_keep: int = 3,
+                   fault_plan: object = None,
+                   _trace_offset: int = 0) -> List[TickReport]:
         """Run a whole array-form churn trace (population mode only).
 
         ``qualities`` is (T, U) per-tick channel draws; ``attaches`` an
@@ -690,6 +724,20 @@ class ChurnOrchestrator:
         and the frontier policy serialize each tick around shared state,
         so those configurations (and ``stream=False``) take the
         synchronous path.
+
+        Crash consistency: with ``checkpoint_dir`` set, the full serving
+        state (:meth:`checkpoint`) is written atomically after every
+        ``checkpoint_every`` completed ticks (counted in ABSOLUTE trace
+        position, so a resumed run checkpoints on the same boundaries as
+        the run it continues) and always after the final tick.  At a
+        boundary the streaming pipeline first drains its in-flight tick,
+        so a checkpoint never contains lookahead ingest state — a process
+        killed anywhere and resumed via :meth:`resume` replays the lost
+        tail bit-identically.  ``fault_plan`` (``core/faults.py``) injects
+        deterministic mid-tick crashes: ``ingest`` fires before a tick's
+        channel ingest, ``relax`` while its relaxation is in flight (on
+        the synchronous path, together with ``ingest``), ``post`` after
+        the tick fully completed; hook ticks are absolute positions too.
         """
         if self.pops is None:
             raise ValueError("run_arrays requires population mode")
@@ -704,15 +752,47 @@ class ChurnOrchestrator:
                 raise ValueError(
                     f"attaches must match qualities shape "
                     f"{qualities.shape}, got {attaches.shape}")
+        if checkpoint_every and checkpoint_dir is None:
+            raise ValueError("checkpoint_every= needs checkpoint_dir=")
+        T = len(qualities)
+        off = int(_trace_offset)
+        every = int(checkpoint_every)
         if not stream or self.congestion is not None \
                 or self.placement_policy == "frontier":
-            return [self.step_arrays(
-                        qualities[t],
-                        None if attaches is None else attaches[t])
-                    for t in range(len(qualities))]
+            reports = []
+            for t in range(T):
+                pos = off + t
+                if fault_plan is not None:
+                    fault_plan.crash_hook("ingest", pos)
+                    fault_plan.crash_hook("relax", pos)
+                rep = self.step_arrays(
+                    qualities[t],
+                    None if attaches is None else attaches[t])
+                reports.append(rep)
+                if fault_plan is not None:
+                    fault_plan.crash_hook("post", pos)
+                if checkpoint_dir is not None and every > 0 \
+                        and (pos + 1) % every == 0 and t + 1 < T:
+                    self.checkpoint(checkpoint_dir, trace_pos=pos + 1,
+                                    keep=checkpoint_keep)
+            if checkpoint_dir is not None and T:
+                self.checkpoint(checkpoint_dir, trace_pos=off + T,
+                                keep=checkpoint_keep)
+            return reports
         reports: List[TickReport] = []
-        prev = None                # in-flight tick: (rep, pendings, snap)
-        for t in range(len(qualities)):
+        prev = None          # in-flight tick: (rep, pendings, snap, pos)
+        for t in range(T):
+            pos = off + t
+            if prev is not None and checkpoint_dir is not None \
+                    and every > 0 and pos % every == 0:
+                # boundary: drain the in-flight tick BEFORE this tick's
+                # ingest, so the checkpoint holds exactly ticks < pos
+                self._drain_tick(reports, prev, fault_plan)
+                prev = None
+                self.checkpoint(checkpoint_dir, trace_pos=pos,
+                                keep=checkpoint_keep)
+            if fault_plan is not None:
+                fault_plan.crash_hook("ingest", pos)
             rep = TickReport(tick=self._tick)
             self._tick += 1
             snap = self._timing_snapshot()
@@ -728,23 +808,182 @@ class ChurnOrchestrator:
             # its begin-time snapshot
             self._stream_ingest(rep)
             if prev is not None:
-                self._finish_tick(*prev)
-                reports.append(prev[0])
-            prev = (rep, self._gate_and_begin(rep), snap)
+                self._drain_tick(reports, prev, fault_plan)
+            prev = (rep, self._gate_and_begin(rep), snap, pos)
+            if fault_plan is not None:
+                fault_plan.crash_hook("relax", pos)
         if prev is not None:
-            self._finish_tick(*prev)
-            reports.append(prev[0])
+            self._drain_tick(reports, prev, fault_plan)
+        if checkpoint_dir is not None and T:
+            self.checkpoint(checkpoint_dir, trace_pos=off + T,
+                            keep=checkpoint_keep)
         return reports
+
+    def _drain_tick(self, reports: List[TickReport], prev,
+                    fault_plan) -> None:
+        """Finish the pipeline's in-flight tick and fire its ``post``
+        crash point."""
+        rep, pendings, snap, pos = prev
+        self._finish_tick(rep, pendings, snap)
+        reports.append(rep)
+        if fault_plan is not None:
+            fault_plan.crash_hook("post", pos)
+
+    # --------------------------------------------------- checkpoint / restore
+    def checkpoint(self, ckpt_dir: str, *, trace_pos: int = 0,
+                   keep: int = 3) -> str:
+        """Atomically write the orchestrator's full serving state
+        (population mode only) as checkpoint step ``self._tick`` under
+        ``ckpt_dir`` (``runtime/checkpoint.py`` layout: temp dir + atomic
+        rename, zstd when available).
+
+        The tree covers every input the next tick reads: the orchestrator
+        ledgers (quality, attachments, hysteresis baselines), each
+        cohort's SoA state including the cohort-state table and pin set
+        (``Population.state_dict``), the congestion controller's price
+        state and the contingency libraries' observed-mask counters.
+        ``trace_pos`` records how many trace rows were consumed, so
+        :meth:`resume` knows where to continue.
+        """
+        if self.pops is None:
+            raise ValueError("checkpointing requires population mode")
+        from ..runtime import checkpoint as ckpt
+        return ckpt.save(ckpt_dir, self._tick, self._checkpoint_tree(),
+                         keep=keep,
+                         extra={"trace_pos": int(trace_pos),
+                                "tick": int(self._tick),
+                                "n_users": int(self.n_users)})
+
+    def restore(self, ckpt_dir: str,
+                step: Optional[int] = None) -> int:
+        """Restore the orchestrator from ``ckpt_dir`` (newest undamaged
+        checkpoint unless ``step`` pins one — damaged or partial step
+        directories are skipped like ``checkpoint.restore_latest``) and
+        return the saved trace position.  The orchestrator must be built
+        from the same cohorts/configuration as the one that saved."""
+        if self.pops is None:
+            raise ValueError("checkpointing requires population mode")
+        from ..runtime import checkpoint as ckpt
+        if step is not None:
+            flat, manifest = ckpt.load_arrays(ckpt_dir, step)
+        else:
+            flat = manifest = None
+            err: Optional[Exception] = None
+            for s in reversed(ckpt.available_steps(ckpt_dir)):
+                try:
+                    flat, manifest = ckpt.load_arrays(ckpt_dir, s)
+                    break
+                except Exception as e:     # damaged: fall back one step
+                    err = e
+            if manifest is None:
+                raise FileNotFoundError(
+                    f"no restorable checkpoint under {ckpt_dir!r}"
+                    + (f" (last error: {err})" if err is not None else ""))
+        self._restore_tree(flat, manifest)
+        return int(manifest.get("extra", {}).get("trace_pos", 0))
+
+    def resume(self, ckpt_dir: str, qualities: np.ndarray,
+               attaches: Optional[np.ndarray] = None, *,
+               step: Optional[int] = None, stream: bool = True,
+               checkpoint_dir: Optional[str] = None,
+               checkpoint_every: int = 0, checkpoint_keep: int = 3,
+               fault_plan: object = None) -> List[TickReport]:
+        """Restore from ``ckpt_dir`` and continue the FULL original trace
+        from the saved position: pass the same ``qualities``/``attaches``
+        the interrupted run was given, and the returned reports are the
+        bit-identical tail the crash swallowed.  With ``checkpoint_every``
+        set, checkpointing continues into ``checkpoint_dir`` (default:
+        ``ckpt_dir``) on the same absolute boundaries."""
+        pos = self.restore(ckpt_dir, step=step)
+        qualities = np.asarray(qualities, dtype=np.float64)
+        if pos > len(qualities):
+            raise ValueError(f"checkpoint consumed {pos} trace rows but "
+                             f"the trace has only {len(qualities)}")
+        if checkpoint_dir is None and checkpoint_every > 0:
+            checkpoint_dir = ckpt_dir
+        return self.run_arrays(
+            qualities[pos:],
+            None if attaches is None else attaches[pos:],
+            stream=stream, checkpoint_dir=checkpoint_dir,
+            checkpoint_every=checkpoint_every,
+            checkpoint_keep=checkpoint_keep, fault_plan=fault_plan,
+            _trace_offset=pos)
+
+    def _checkpoint_tree(self) -> Dict:
+        tree: Dict[str, object] = {
+            "orch": {
+                "quality": self.quality.copy(),
+                "attached": self.attached.copy(),
+                "ref_energy": self._ref_energy.copy(),
+                "cur_energy": self._cur_energy.copy(),
+            },
+            "pops": [p.state_dict() for p in self.pops],
+        }
+        if self.congestion is not None:
+            tree["congestion"] = self.congestion.state_dict()
+        if self.contingency_libs is not None:
+            tree["contingency"] = [lib.state_dict()
+                                   for lib in self.contingency_libs]
+        return tree
+
+    def _restore_tree(self, flat: Dict[str, np.ndarray],
+                      manifest: Dict) -> None:
+        extra = manifest.get("extra", {})
+        if int(extra.get("n_users", self.n_users)) != self.n_users:
+            raise ValueError(f"checkpoint holds {extra['n_users']} users, "
+                             f"orchestrator has {self.n_users}")
+
+        def sub(prefix: str) -> Dict[str, np.ndarray]:
+            pre = prefix + "/"
+            return {k[len(pre):]: v for k, v in flat.items()
+                    if k.startswith(pre)}
+
+        # 1) congestion prices FIRST: restore_state re-installs the
+        #    crash-time slice/backhaul factors into the cohorts' proto
+        #    tensors, which the cohort restores below re-relax against
+        cong = sub("congestion")
+        if self.congestion is not None:
+            if not cong:
+                raise ValueError("checkpoint has no congestion state but "
+                                 "this orchestrator has shared_capacity=")
+            self.congestion.restore_state(cong)
+        elif cong:
+            raise ValueError("checkpoint has congestion state; rebuild "
+                             "the orchestrator with the original "
+                             "shared_capacity= before restoring")
+        # 2) per-cohort SoA state (arrays, cohort-state table, pin set)
+        for pi, p in enumerate(self.pops):
+            p.restore_state(sub(f"pops/{pi}"))
+        # 3) orchestrator ledgers
+        orch = sub("orch")
+        self.quality[:] = orch["quality"]
+        self.attached[:] = orch["attached"]
+        self._ref_energy[:] = orch["ref_energy"]
+        self._cur_energy[:] = orch["cur_energy"]
+        self._tick = int(extra.get("tick", manifest.get("step", 0)))
+        self._fac = None            # factor cache re-derives from attached
+        self._fac_attached = None
+        self._mesh_cursor = (0, 0)  # fresh relaxers start at zero
+        # 4) contingency observed-mask counters — the prebuilt states and
+        #    the pin set themselves rode the cohort checkpoints, so the
+        #    restored table serves the same hits without any refill
+        if self.contingency_libs is not None:
+            for li, lib in enumerate(self.contingency_libs):
+                lib.restore_state(sub(f"contingency/{li}"))
 
     def _stream_ingest(self, rep: TickReport) -> None:
         """Dense fused ingest of the current quality/attachment state into
         every cohort (requantization deferred to the resolve gather)."""
+        q0 = self._quar_counters()
         fac = self._factors()
         for pi, p in enumerate(self.pops):
             scale = self.uplink_bps * self.quality[p.user_ids]
             p.ingest_factors(scale, fac[pi], requant=False)
         rep.n_uplink_updates = self.n_users
         rep.n_dirty = self.n_users
+        q1 = self._quar_counters()
+        rep.n_quarantined = q1[0] - q0[0]
+        rep.n_recovered = q1[1] - q0[1]
 
     def _gate_and_begin(self, rep: TickReport) -> list:
         """Hysteresis-gate every cohort and launch its newborn relaxation
@@ -799,7 +1038,81 @@ class ChurnOrchestrator:
         rep.migration_bits = mb
         fin = np.isfinite(self._cur_energy)
         rep.energy = float(self._cur_energy[fin].sum())
+        self._tick_fill(rep, snap)
+
+    def _tick_fill(self, rep: TickReport, snap) -> None:
+        """Close a tick's accounting: the timing deltas, the straggler
+        check (which may demote), then the mesh retry/demotion deltas
+        since the LAST fill — a running cursor rather than a begin-of-tick
+        snapshot, because streaming ticks overlap (tick t's ingest runs
+        inside tick t-1's window) and fills happen strictly in report
+        order, so cursor windows partition the counters exactly."""
         self._timing_fill(rep, snap)
+        self._straggler_tick(rep)
+        mr, md = self._mesh_counters()
+        rep.n_mesh_retries = mr - self._mesh_cursor[0]
+        rep.n_mesh_demotions = md - self._mesh_cursor[1]
+        self._mesh_cursor = (mr, md)
+
+    def _quar_counters(self):
+        """(quarantines, recoveries) summed over the cohorts' telemetry
+        screens — deltas are taken tightly around each tick's ingest, so
+        the attribution is exact on both the sync and streaming paths."""
+        q = r = 0
+        for p in self.pops:
+            if p._telemetry is not None:
+                q += p.stats.quarantines
+                r += p.stats.recoveries
+        return (q, r)
+
+    def _mesh_counters(self):
+        mr = md = 0
+        for rx in self._relaxers():
+            mr += rx.retries
+            md += rx.demotions
+        return (mr, md)
+
+    def _relaxers(self):
+        """The cohorts' live mesh relaxers (lazily built by the mesh
+        backend; empty on every other backend)."""
+        return [p._mesh_relaxer for p in self.pops
+                if p._mesh_relaxer is not None]
+
+    def _straggler_tick(self, rep: TickReport) -> None:
+        if not self._straggler_cfg:
+            return
+        if self.straggler_times is not None:
+            times = np.asarray(self.straggler_times(rep), dtype=np.float64)
+        else:
+            if not all(p._timing for p in self.pops):
+                return          # no clock to feed the detector
+            times = self._gather_relax_times(rep)
+        from ..runtime.straggler import StragglerDetector
+        if self._straggler_det is None:
+            self._straggler_det = (
+                self._straggler_cfg
+                if isinstance(self._straggler_cfg, StragglerDetector)
+                else StragglerDetector(len(times)))
+        flagged = self._straggler_det.update(times)
+        rep.n_stragglers = len(flagged)
+        if flagged:
+            # a persistently slow worker holds every collective hostage:
+            # demote the mesh one rung (all hosts see the same gathered
+            # times, so the shrink is symmetric) — bit-exactness across
+            # rungs is the relaxer's per-scenario shard-independence
+            # contract
+            for rx in self._relaxers():
+                rx.demote()
+
+    def _gather_relax_times(self, rep: TickReport) -> np.ndarray:
+        """This tick's relax wall time, gathered across hosts when a
+        multi-host mesh is live (every host sees the same vector)."""
+        t = float(rep.t_relax_ms)
+        if any(rx.multihost for rx in self._relaxers()):
+            from jax.experimental import multihost_utils
+            return np.asarray(multihost_utils.process_allgather(
+                np.asarray([t]))).reshape(-1)
+        return np.asarray([t])
 
     def _timing_snapshot(self):
         """Sums of the cohorts' phase clocks, or None when any cohort has

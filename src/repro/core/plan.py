@@ -1054,6 +1054,46 @@ def _validate_population_bps(bps: Union[float, np.ndarray], U: int,
     return arr
 
 
+def _validate_bps_values(arr=None, *, bad: Optional[np.ndarray] = None,
+                         users: Optional[np.ndarray] = None,
+                         src: Optional[int] = None,
+                         what: str = "bps") -> None:
+    """Reject NaN/Inf/negative bandwidth readings, naming the offenders.
+
+    The shape checks (``_validate_population_bps``) guarantee the array
+    broadcasts; this guards the *values* — a NaN or negative reading fed
+    to the requantizer would silently solve on garbage (and, in the
+    population engine, poison a shared cohort state).  Pass ``arr`` (a
+    scalar, (U,) vector or (U, N) matrix; ``src`` excludes the self-loop
+    column, which is legitimately infinite) or a precomputed boolean
+    ``bad`` entry set.  ``users`` maps row positions to user indices for
+    the message.  Raises ``ValueError`` listing up to 10 offending users.
+    """
+    if bad is None:
+        a = np.asarray(arr, dtype=np.float64)
+        if a.ndim == 0:
+            if not np.isfinite(a) or a < 0:
+                raise ValueError(
+                    f"{what} is {float(a)!r}: bandwidth readings must be "
+                    f"finite and >= 0")
+            return
+        bad = ~np.isfinite(a) | (a < 0)
+        if a.ndim == 2 and src is not None:
+            bad[:, src] = False
+    bad_user = bad if bad.ndim == 1 else bad.any(axis=1)
+    if not bad_user.any():
+        return
+    idx = np.nonzero(bad_user)[0]
+    ids = idx if users is None else np.asarray(users)[idx]
+    shown = ", ".join(str(int(u)) for u in ids[:10])
+    more = f" (+{len(ids) - 10} more)" if len(ids) > 10 else ""
+    raise ValueError(
+        f"{what}: NaN/Inf/negative reading(s) for {len(ids)} user(s) "
+        f"[{shown}]{more} — bandwidth must be finite and >= 0; configure "
+        f"a TelemetryPolicy (clamp/quarantine) to absorb corrupt "
+        f"telemetry instead of raising")
+
+
 def update_uplinks(plans: Sequence[Plan],
                    bps: Union[float, np.ndarray]) -> List[bool]:
     """Batched :meth:`Plan.update_uplink` across a user population.
@@ -1085,6 +1125,8 @@ def update_uplinks(plans: Sequence[Plan],
         for pos, j in enumerate(idxs):
             vec[pos] = arr[j]
         vec[:, src] = np.inf             # self-loop stays infinite
+        _validate_bps_values(vec, src=src, users=np.asarray(idxs),
+                             what="update_uplinks bps")
         for pos, j in enumerate(idxs):
             p = plans[j]
             p._bw[src, :] = vec[pos]

@@ -57,12 +57,50 @@ from .fin import (DP_BACKENDS, _BandedArgDP, _backtrack, _best_feasible,
                   _exit_dmin)
 from .frontier import (ParetoFrontier, eval_config_users, frontier_from_rows,
                        scan_state_users)
-from .plan import Plan, _validate_population_bps
+from .plan import Plan, _validate_bps_values, _validate_population_bps
 from .problem import AppRequirements, Config, ConfigEval, Solution
 from .system_model import Network
 from .tolerances import dist_tol
 
-__all__ = ["Population", "PopulationStats"]
+__all__ = ["Population", "PopulationStats", "TelemetryPolicy"]
+
+
+@dataclass(frozen=True)
+class TelemetryPolicy:
+    """What :meth:`Population.ingest` does with corrupt channel readings.
+
+    Without a policy the engine fails LOUDLY: NaN/Inf/negative bandwidth
+    raises a ``ValueError`` naming the offending users — garbage must
+    never silently key a shared cohort state.  With a policy the reading
+    is absorbed instead:
+
+    ``mode="clamp"``       bad *entries* are replaced by the user's
+                           current stored value (entry-wise last known
+                           good); the rest of the row ingests normally.
+    ``mode="quarantine"``  a user with ANY bad entry (or a stuck sensor,
+                           below) holds their entire last-known-good
+                           uplink vector — they keep serving their
+                           incumbent and rejoin automatically on the
+                           first clean reading.  Per-tick transitions are
+                           counted in ``PopulationStats.quarantines`` /
+                           ``recoveries`` (the orchestrator surfaces them
+                           on ``TickReport``).
+    ``mode="raise"``       the loud default, as a policy object.
+
+    ``stuck_window > 0`` adds frozen-sensor detection to the quarantine
+    mode: a user whose raw reading row repeats EXACTLY for that many
+    consecutive ingests is quarantined until the reading moves again.
+    """
+
+    mode: str = "quarantine"
+    stuck_window: int = 0
+
+    def __post_init__(self):
+        if self.mode not in ("raise", "clamp", "quarantine"):
+            raise ValueError(f"TelemetryPolicy.mode must be raise/clamp/"
+                             f"quarantine, got {self.mode!r}")
+        if self.stuck_window < 0:
+            raise ValueError("TelemetryPolicy.stuck_window must be >= 0")
 
 
 @dataclass
@@ -86,6 +124,10 @@ class PopulationStats:
     bounded_relaxes: int = 0     # states relaxed from a parent's layer slice
     layers_skipped: int = 0      # relax layers skipped by bounded resumes
     mask_reuses: int = 0         # masked states served by a parent's grids
+    telemetry_bad: int = 0       # corrupt (user, link) readings seen
+    telemetry_clamped: int = 0   # entries clamped to last known good
+    quarantines: int = 0         # users entering quarantine
+    recoveries: int = 0          # users leaving quarantine
     # per-phase wall clock (accumulated only when the Population was built
     # with timing=True — the counters stay zero-cost when disabled)
     t_ingest_ms: float = 0.0     # channel ingest + requantize
@@ -117,6 +159,24 @@ def _group_runs(keys: np.ndarray
     order = np.argsort(inv, kind="stable")
     bounds = np.searchsorted(inv[order], np.arange(len(uniq) + 1))
     return uniq, first, order, bounds
+
+
+def _enc_int16(q: np.ndarray) -> np.ndarray:
+    """Checkpoint encoding of the inf-capable integral quantization arrays
+    (qpack / state stq): values are either integers in [0, gamma] or +inf
+    (gamma < int16 max is a ctor invariant), stored as int16 with -1 for
+    inf — 4x smaller than float64 and exactly invertible."""
+    e = np.empty(q.shape, dtype=np.int16)
+    fin = np.isfinite(q)
+    np.copyto(e, q, casting="unsafe", where=fin)
+    e[~fin] = -1
+    return e
+
+
+def _dec_int16(e: np.ndarray) -> np.ndarray:
+    out = e.astype(np.float64)
+    out[e < 0] = np.inf
+    return out
 
 
 class _BwCols:
@@ -256,7 +316,8 @@ class Population:
                  backend: str = "minplus", check_aggregate_load: bool = False,
                  user_ids: Optional[Sequence[int]] = None,
                  max_states: int = 65536, vector_postpass: bool = True,
-                 bounded_rerelax: bool = True, timing: bool = False):
+                 bounded_rerelax: bool = True, timing: bool = False,
+                 telemetry: Optional[TelemetryPolicy] = None):
         if n_users <= 0:
             raise ValueError(f"n_users must be positive, got {n_users}")
         if backend != "mesh" and DP_BACKENDS.get(backend) is None:
@@ -323,6 +384,19 @@ class Population:
         self._inc_exit = np.full(self.U, -1, dtype=np.int32)
         self._inc_energy = np.full(self.U, np.inf)
         self._solutions: List[Optional[Solution]] = [None] * self.U
+
+        # telemetry sanitization (see :class:`TelemetryPolicy`): quarantine
+        # flags and frozen-sensor counters are always allocated (cheap);
+        # the raw-reading history only when stuck detection is on
+        self._telemetry = telemetry
+        self._quarantined = np.zeros(self.U, dtype=bool)
+        self._stuck_count = np.zeros(self.U, dtype=np.int32)
+        self._last_raw = (np.full((self.U, N), np.nan)
+                          if telemetry is not None
+                          and telemetry.stuck_window > 0 else None)
+        #: internal re-ingests (``update_slice`` replaying the stored
+        #: bandwidths) must not look like telemetry ticks
+        self._suspend_telemetry = False
 
         # cohort-state table (the cross-user DP dedupe)
         self._states: List[_CohortState] = []
@@ -417,6 +491,8 @@ class Population:
             (np.broadcast_to(np.asarray(arr, dtype=np.float64)
                              .reshape(-1, 1), (Us, self.N)))
         vec[:, self.src] = np.inf                # self-loop (Sec. II-A)
+        if not self._suspend_telemetry:
+            self._screen_rows(users, vec)
         self._bw_vec[users] = vec
         self.stats.ingests += 1
         self.stats.uplink_updates += Us
@@ -449,8 +525,20 @@ class Population:
                 f"({self.U}, {self.N}); got {scale.shape} and "
                 f"{factors.shape}")
         t0 = time.perf_counter() if self._timing else 0.0
-        np.multiply(scale[:, None], factors, out=self._bw_vec)
-        self._bw_vec[:, self.src] = np.inf       # self-loop (Sec. II-A)
+        if self._telemetry is None or self._telemetry.mode == "raise":
+            # loud default: a corrupt fading scale must not reach the store
+            # (factors are orchestrator-owned link patterns, not telemetry)
+            _validate_bps_values(scale, what="ingest_factors scale")
+            np.multiply(scale[:, None], factors, out=self._bw_vec)
+            self._bw_vec[:, self.src] = np.inf   # self-loop (Sec. II-A)
+        else:
+            # screened path: stage the product so quarantined/clamped rows
+            # can be substituted before they land in the store — values are
+            # bit-identical to the fused multiply
+            vec = scale[:, None] * factors
+            vec[:, self.src] = np.inf
+            self._screen_rows(np.arange(self.U), vec)
+            self._bw_vec[:] = vec
         self.stats.ingests += 1
         self.stats.uplink_updates += self.U
         if not requant:
@@ -463,6 +551,58 @@ class Population:
         if self._timing:
             self.stats.t_ingest_ms += (time.perf_counter() - t0) * 1e3
         return changed
+
+    def _screen_rows(self, users: np.ndarray, vec: np.ndarray) -> None:
+        """Telemetry screening over a staging ingest batch (in place).
+
+        ``vec`` is the (Us, N) staging matrix about to be written into the
+        bandwidth store (src column already inf).  Corrupt entries are
+        NaN/Inf/negative outside the src column.  Without a policy (or in
+        ``raise`` mode) any corruption raises a ``ValueError`` naming the
+        offending users; ``clamp`` substitutes bad entries with the user's
+        stored value; ``quarantine`` substitutes the WHOLE row of any
+        offender (incl. stuck sensors) with their stored last-known-good
+        vector — the subsequent wholesale store + requantize then treats a
+        quarantined user exactly like a user whose channel froze, so no
+        cohort state is ever keyed on a corrupt pack and held users keep
+        serving their incumbent bit-exactly.
+        """
+        pol = self._telemetry
+        bad_ent = ~np.isfinite(vec) | (vec < 0)
+        bad_ent[:, self.src] = False
+        any_bad = bool(bad_ent.any())
+        if any_bad:
+            self.stats.telemetry_bad += int(np.count_nonzero(bad_ent))
+        if pol is None or pol.mode == "raise":
+            if any_bad:
+                _validate_bps_values(None, bad=bad_ent, users=users,
+                                     what="ingest bps")
+            return
+        if pol.mode == "clamp":
+            if any_bad:
+                np.copyto(vec, self._bw_vec[users], where=bad_ent)
+                self.stats.telemetry_clamped += \
+                    int(np.count_nonzero(bad_ent))
+            return
+        # quarantine: row-level hold on corrupt or frozen readings
+        bad_user = bad_ent.any(axis=1)
+        if pol.stuck_window > 0:
+            rep = (vec == self._last_raw[users]).all(axis=1)
+            cnt = np.where(rep, self._stuck_count[users] + 1, 0)
+            self._stuck_count[users] = cnt
+            self._last_raw[users] = vec
+            bad_user |= cnt >= pol.stuck_window
+        was_q = self._quarantined[users]
+        newly = bad_user & ~was_q
+        healed = was_q & ~bad_user
+        if newly.any():
+            self._quarantined[users[newly]] = True
+            self.stats.quarantines += int(np.count_nonzero(newly))
+        if healed.any():
+            self._quarantined[users[healed]] = False
+            self.stats.recoveries += int(np.count_nonzero(healed))
+        if bad_user.any():
+            np.copyto(vec, self._bw_vec[users], where=bad_user[:, None])
 
     def _refresh_states(self, users: np.ndarray) -> None:
         """Flush deferred requantizations (lazy ingest) for these users."""
@@ -555,8 +695,15 @@ class Population:
         self._fallback_plan = None
         # requantize every user's pack against the new compute terms (the
         # ingest re-keys the users whose pack moved), then re-key the rest
-        # — their packs kept their values but the state table was cleared
-        self.ingest(self._bw_vec.copy())
+        # — their packs kept their values but the state table was cleared.
+        # This replays the stored (already-screened) bandwidths, so it
+        # must not look like a telemetry tick: quarantine/stuck state and
+        # counters stay untouched.
+        self._suspend_telemetry = True
+        try:
+            self.ingest(self._bw_vec.copy())
+        finally:
+            self._suspend_telemetry = False
         self._stale[:] = False
         self._assign_states(np.arange(self.U))
         return self
@@ -1620,6 +1767,127 @@ class Population:
                 feas[members] = f
                 energy[members] = en
         return no_inc, feas, energy
+
+    # ---------------------------------------------------------- checkpointing
+    def state_dict(self) -> Dict[str, np.ndarray]:
+        """Snapshot the full SoA + cohort-state-table state as a flat dict
+        of arrays (the checkpoint leaf set — ``runtime/checkpoint.py``
+        saves it verbatim).
+
+        DP grids, candidate caches, fast tables and the exact-energy memo
+        are NOT saved: they are deterministic functions of the saved
+        (pack, mask) signatures and the proto tensors, so
+        :meth:`restore_state` rebuilds them bit-exactly on demand.
+        ``state_relaxed`` records WHICH states held relaxed grids so the
+        restore re-relaxes exactly those — off-tick probes (contingency
+        ``coverage``) and the next tick's ``dp_relaxes`` delta then behave
+        identically to the uninterrupted run.
+        """
+        S = len(self._states)
+        M, K2, N = self.M, 2 * self.L - 1, self.N
+        pinned = np.zeros(S, dtype=bool)
+        if self._pinned:
+            pinned[list(self._pinned)] = True
+        d = {
+            "bw_vec": self._bw_vec.copy(),
+            "qpack": _enc_int16(self._qpack),
+            "masked": self._masked.copy(),
+            "stale": self._stale.copy(),
+            "user_state": self._user_state.copy(),
+            "solved": self._solved.copy(),
+            "inc_place": self._inc_place.copy(),
+            "inc_exit": self._inc_exit.copy(),
+            "inc_energy": self._inc_energy.copy(),
+            "user_ids": self.user_ids.copy(),
+            "quarantined": self._quarantined.copy(),
+            "stuck_count": self._stuck_count.copy(),
+            "state_stq": (_enc_int16(np.stack([s.stq for s in self._states]))
+                          if S else np.zeros((0, M, K2, N), dtype=np.int16)),
+            "state_mask": (np.stack([s.mask for s in self._states])
+                           if S else np.zeros((0, N), dtype=bool)),
+            "state_relaxed": np.array([s.dps is not None
+                                       for s in self._states], dtype=bool),
+            "state_parent": np.array([s.parent for s in self._states],
+                                     dtype=np.int64),
+            "state_pinned": pinned,
+        }
+        if self._last_raw is not None:
+            d["last_raw"] = self._last_raw.copy()
+        return d
+
+    def restore_state(self, d: Dict[str, np.ndarray]) -> "Population":
+        """Restore a :meth:`state_dict` snapshot in place.
+
+        The cohort must match the snapshot (same users and solver
+        parameterization), and any structural deltas the snapshot was
+        taken under (compute-slice / backhaul repricings — e.g. the
+        congestion controller's composed price factors) must be re-applied
+        BEFORE restoring, so the proto tensors the rebuilt states scatter
+        into equal the snapshot-time ones.  The cohort-state table is
+        rebuilt in saved order (state ids are preserved verbatim, so
+        ``user_state`` and the pinned set stay valid) and the states that
+        held relaxed DP grids are re-relaxed in one launch — bit-exact,
+        because the grids are deterministic in (pack, mask, proto
+        tensors).
+        """
+        ids = np.asarray(d["user_ids"], dtype=np.int64)
+        if ids.shape != self.user_ids.shape or \
+                not np.array_equal(ids, self.user_ids):
+            raise ValueError("state_dict user_ids do not match this cohort "
+                             f"({ids.shape} vs {self.user_ids.shape})")
+        U, N = self.U, self.N
+        bw = np.asarray(d["bw_vec"], dtype=np.float64)
+        if bw.shape != (U, N):
+            raise ValueError(f"bw_vec shape {bw.shape} != ({U}, {N})")
+        qp = _dec_int16(np.asarray(d["qpack"]))
+        if qp.shape != self._qpack.shape:
+            raise ValueError(f"qpack shape {qp.shape} != "
+                             f"{self._qpack.shape}")
+        self._bw_vec[:] = bw
+        self._qpack[:] = qp
+        self._masked[:] = d["masked"]
+        self._mask_count = int(np.count_nonzero(self._masked))
+        self._stale[:] = d["stale"]
+        self._solved[:] = d["solved"]
+        self._inc_place[:] = d["inc_place"]
+        self._inc_exit[:] = d["inc_exit"]
+        self._inc_energy[:] = d["inc_energy"]
+        self._quarantined[:] = d.get("quarantined", False)
+        self._stuck_count[:] = d.get("stuck_count", 0)
+        if self._last_raw is not None:
+            self._last_raw[:] = d.get("last_raw", np.nan)
+        self._solutions = [None] * U
+        # rebuild the cohort-state table in saved order: every state keys
+        # through the same scalar signature encoding, so probes against
+        # the restored table return the snapshot-time ids
+        self._states = []
+        self._state_ids = {}
+        self._pinned = set()
+        self._cfg_energy = {}
+        self._fallback_plan = None
+        stq_all = _dec_int16(np.asarray(d["state_stq"]))
+        mask_all = np.asarray(d["state_mask"], dtype=bool)
+        parent = np.asarray(d["state_parent"], dtype=np.int64)
+        for i in range(len(stq_all)):
+            key = self._state_key(stq_all[i], mask_all[i])
+            sid = self._add_state(key, stq_all[i].copy(),
+                                  mask_all[i].copy(),
+                                  parent=int(parent[i]))
+            if sid != i:
+                raise ValueError(f"duplicate cohort-state signature at "
+                                 f"snapshot index {i} (got id {sid})")
+        us = np.asarray(d["user_state"], dtype=np.int64)
+        if len(us) != U or (len(self._states)
+                            and us.max(initial=-1) >= len(self._states)):
+            raise ValueError("user_state does not index the saved table")
+        self._user_state[:] = us
+        self._pinned = {int(s) for s in np.nonzero(
+            np.asarray(d["state_pinned"], dtype=bool))[0]}
+        relaxed = np.nonzero(np.asarray(d["state_relaxed"],
+                                        dtype=bool))[0]
+        if len(relaxed):
+            self._relax_states([int(s) for s in relaxed], prebuilt=True)
+        return self
 
     def _eval_config_users(self, config: Config, bwv: np.ndarray
                            ) -> Tuple[float, np.ndarray, np.ndarray]:

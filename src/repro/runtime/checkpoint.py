@@ -121,9 +121,13 @@ def available_steps(ckpt_dir: str) -> List[int]:
     return out
 
 
-def restore(ckpt_dir: str, step: int, like):
-    """Restore into the structure of ``like`` (a pytree of arrays/shapes)."""
-    base = pathlib.Path(ckpt_dir) / f"step_{step:012d}"
+def _read_arrays(base: pathlib.Path) -> Tuple[Dict[str, np.ndarray], Dict]:
+    """Read and verify one ``step_<N>`` directory → (arrays, manifest).
+
+    Raises on any damage: truncated/corrupt ``arrays.npz.zst``, keys or
+    shapes that disagree with the manifest, unreadable manifest.  Callers
+    that must survive damage (``restore_latest``) catch and skip.
+    """
     raw = (base / ARRAYS).read_bytes()
     if raw[:4] == _ZSTD_MAGIC:
         if zstandard is None:
@@ -134,12 +138,44 @@ def restore(ckpt_dir: str, step: int, like):
         raw = zstandard.ZstdDecompressor().decompress(raw)
     arrays = dict(np.load(io.BytesIO(raw)))
     manifest = json.loads((base / MANIFEST).read_text())
+    keys = manifest.get("keys", [])
+    missing = [k for k in keys if k not in arrays]
+    if missing:
+        raise KeyError(f"checkpoint {base}: arrays missing manifest keys "
+                       f"{missing[:5]}")
+    for k in keys:
+        want = manifest.get("shapes", {}).get(k)
+        if want is not None and list(arrays[k].shape) != list(want):
+            raise ValueError(f"checkpoint {base}: {k} shape "
+                             f"{list(arrays[k].shape)} != manifest {want}")
+        arrays[k] = _from_storable(arrays[k],
+                                   manifest.get("dtypes", {}).get(k, ""))
+    return arrays, manifest
+
+
+def load_arrays(ckpt_dir: str, step: int) -> Tuple[Dict[str, np.ndarray],
+                                                   Dict]:
+    """Load a checkpoint as a flat ``{key: array}`` dict plus its manifest.
+
+    Unlike :func:`restore` this needs no shape-matched ``like`` tree, so it
+    suits state whose leaf shapes vary run-to-run (e.g. a cohort-state
+    table whose row count depends on churn history).  Keys are the
+    ``/``-joined pytree paths produced by :func:`save`.
+    """
+    base = pathlib.Path(ckpt_dir) / f"step_{step:012d}"
+    return _read_arrays(base)
+
+
+def restore(ckpt_dir: str, step: int, like):
+    """Restore into the structure of ``like`` (a pytree of arrays/shapes)."""
+    base = pathlib.Path(ckpt_dir) / f"step_{step:012d}"
+    arrays, _ = _read_arrays(base)
     flat, treedef = _flatten(like)
     leaves = []
     for key, ref in flat:
         if key not in arrays:
             raise KeyError(f"checkpoint missing leaf {key!r}")
-        arr = _from_storable(arrays[key], manifest["dtypes"].get(key, ""))
+        arr = arrays[key]
         if list(arr.shape) != list(ref.shape):
             raise ValueError(f"{key}: shape {arr.shape} != {ref.shape}")
         leaves.append(arr)

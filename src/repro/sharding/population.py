@@ -36,7 +36,8 @@ relax) and on the jit dispatch itself.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+import time
+from typing import Callable, Optional, Tuple
 
 import numpy as np
 
@@ -94,8 +95,31 @@ class MeshRelaxer:
     hides dispatch overhead.
     """
 
-    def __init__(self, mesh: Optional[Mesh] = None):
-        self.mesh = mesh if mesh is not None else population_mesh()
+    #: dispatch failures the retry/demotion ladder absorbs: simulated and
+    #: real collective timeouts, socket-level host losses, and runtime
+    #: errors out of the distributed XLA client (XlaRuntimeError is a
+    #: RuntimeError subclass) — shape/value errors raise before dispatch
+    #: and are never retried
+    RECOVERABLE = (TimeoutError, OSError, RuntimeError)
+
+    def __init__(self, mesh: Optional[Mesh] = None, *,
+                 timeout_s: Optional[float] = None, max_retries: int = 2,
+                 backoff_s: float = 0.25):
+        self._build(mesh if mesh is not None else population_mesh())
+        #: per-collective dispatch timeout (None = wait forever; a hung
+        #: multi-host collective otherwise blocks ``run_arrays`` for good)
+        self.timeout_s = timeout_s
+        #: bounded retries per mesh rung, with exponential backoff
+        self.max_retries = int(max_retries)
+        self.backoff_s = float(backoff_s)
+        #: test seam: called with the attempt index before every dispatch
+        #: (``FaultPlan.stall_hook`` raises simulated stalls through it)
+        self.fault_hook: Optional[Callable[[int], None]] = None
+        self.retries = 0             # dispatch attempts beyond the first
+        self.demotions = 0           # mesh-ladder rungs taken
+
+    def _build(self, mesh: Mesh) -> None:
+        self.mesh = mesh
         self._sharding = NamedSharding(self.mesh, P("users"))
         procs = {d.process_index for d in self.mesh.devices.flat}
         #: the mesh spans several jax.distributed processes: inputs are
@@ -109,6 +133,32 @@ class MeshRelaxer:
             raise ValueError("multi-process mesh has no devices on this "
                              "host — every participating process must "
                              "contribute devices")
+
+    def demote(self) -> bool:
+        """Take one rung down the mesh demotion ladder.
+
+        multi-host mesh -> this host's local devices; multi-device local
+        mesh -> a single device (numerically the single-host numpy-driven
+        jit path).  Returns False at the bottom (nothing left to shed).
+        Per-scenario relaxation chains are shard-independent, so results
+        at every rung are bit-exact with the full mesh — demotion sheds
+        capacity, never accuracy.  NOTE: on a multi-host mesh every
+        surviving process must demote symmetrically (the straggler vector
+        is allgathered for exactly this reason) or the survivors hang in
+        the next collective.
+        """
+        if self.multihost:
+            me = jax.process_index()
+            local = [d for d in self.mesh.devices.flat
+                     if d.process_index == me]
+            self._build(Mesh(np.asarray(local), axis_names=("users",)))
+        elif self.n_devices > 1:
+            keep = list(self.mesh.devices.flat)[:1]
+            self._build(Mesh(np.asarray(keep), axis_names=("users",)))
+        else:
+            return False
+        self.demotions += 1
+        return True
 
     @property
     def n_devices(self) -> int:
@@ -132,30 +182,87 @@ class MeshRelaxer:
         sti = np.where(finite, steep, 0).astype(np.int32)
         Ef = np.where(finite, E, np.inf).astype(np.float32)
         initf = np.asarray(init, np.float32)
-        if self.multihost:
-            hist, par = self._relax_global(initf, Ef, sti, lo, D)
-        else:
-            # scenario counts not divisible by the device count pad with
-            # empty (all-inf) chains and strip them from the outputs —
-            # callers never pre-shape
-            n = self.n_devices
-            pad = (-D) % n
-            if pad:
-                initf = np.concatenate(
-                    [initf, np.full((pad, N, Gp1), np.inf, np.float32)])
-                Ef = np.concatenate(
-                    [Ef, np.full((pad, L, N, N), np.inf, np.float32)])
-                sti = np.concatenate(
-                    [sti, np.zeros((pad, L, N, N), np.int32)])
-            dev = jax.device_put(jnp.asarray(initf), self._sharding)
-            Ed = jax.device_put(jnp.asarray(Ef), self._sharding)
-            sd = jax.device_put(jnp.asarray(sti), self._sharding)
-            h, p = _mesh_relax(dev, Ed, sd, lo)
-            hist = np.asarray(h, np.float64)[:D]
-            par = np.asarray(p).astype(np.int64)[:D]
+        while True:
+            try:
+                hist, par = self._dispatch(initf, Ef, sti, lo, D)
+                break
+            except self.RECOVERABLE:
+                # the retry budget at this rung is spent: shed capacity
+                # and try the smaller mesh (bit-exact per-scenario), or
+                # give up at the bottom of the ladder
+                if not self.demote():
+                    raise
         # layer-0 history: the exact float64 init (parity with the jnp
         # engine, whose callers read hist[0] as the untouched init grid)
         hist[:, 0] = init
+        return hist, par
+
+    def _dispatch(self, initf: np.ndarray, Ef: np.ndarray,
+                  sti: np.ndarray, lo: Optional[int],
+                  D: int) -> Tuple[np.ndarray, np.ndarray]:
+        """One mesh rung's dispatch with bounded retry + backoff."""
+        last: Optional[BaseException] = None
+        for attempt in range(self.max_retries + 1):
+            if attempt:
+                self.retries += 1
+                time.sleep(self.backoff_s * (2 ** (attempt - 1)))
+            try:
+                if self.fault_hook is not None:
+                    self.fault_hook(attempt)
+                return self._relax_once(initf, Ef, sti, lo, D)
+            except self.RECOVERABLE as e:
+                last = e
+        raise last
+
+    def _relax_once(self, initf: np.ndarray, Ef: np.ndarray,
+                    sti: np.ndarray, lo: Optional[int],
+                    D: int) -> Tuple[np.ndarray, np.ndarray]:
+        if self.timeout_s is not None:
+            # run the collective on a watchdog thread: a dead peer host
+            # otherwise blocks the allgather/jit dispatch forever.  A
+            # fresh single-use thread per dispatch — a hung worker must
+            # not poison a shared pool.
+            from concurrent.futures import ThreadPoolExecutor
+            from concurrent.futures import TimeoutError as FutTimeout
+            pool = ThreadPoolExecutor(max_workers=1,
+                                      thread_name_prefix="mesh-relax")
+            try:
+                fut = pool.submit(self._relax_run, initf, Ef, sti, lo, D)
+                try:
+                    return fut.result(timeout=self.timeout_s)
+                except FutTimeout:
+                    raise TimeoutError(
+                        f"mesh collective exceeded {self.timeout_s}s "
+                        f"(suspected dead or straggling host)")
+            finally:
+                pool.shutdown(wait=False)
+        return self._relax_run(initf, Ef, sti, lo, D)
+
+    def _relax_run(self, initf: np.ndarray, Ef: np.ndarray,
+                   sti: np.ndarray, lo: Optional[int],
+                   D: int) -> Tuple[np.ndarray, np.ndarray]:
+        _, N, Gp1 = initf.shape
+        L = Ef.shape[1]
+        if self.multihost:
+            return self._relax_global(initf, Ef, sti, lo, D)
+        # scenario counts not divisible by the device count pad with
+        # empty (all-inf) chains and strip them from the outputs —
+        # callers never pre-shape
+        n = self.n_devices
+        pad = (-D) % n
+        if pad:
+            initf = np.concatenate(
+                [initf, np.full((pad, N, Gp1), np.inf, np.float32)])
+            Ef = np.concatenate(
+                [Ef, np.full((pad, L, N, N), np.inf, np.float32)])
+            sti = np.concatenate(
+                [sti, np.zeros((pad, L, N, N), np.int32)])
+        dev = jax.device_put(jnp.asarray(initf), self._sharding)
+        Ed = jax.device_put(jnp.asarray(Ef), self._sharding)
+        sd = jax.device_put(jnp.asarray(sti), self._sharding)
+        h, p = _mesh_relax(dev, Ed, sd, lo)
+        hist = np.asarray(h, np.float64)[:D]
+        par = np.asarray(p).astype(np.int64)[:D]
         return hist, par
 
     def _relax_global(self, initf: np.ndarray, Ef: np.ndarray,

@@ -1,0 +1,52 @@
+"""Serving worker for the SIGKILL-resume smoke (not a test module —
+launched by tests/test_faults_subprocess.py and the CI fault-tolerance
+step).
+
+Runs the shared checkpoint scenario (seeded, identical to the parent's
+reference run) with boundary checkpointing, then SIGKILLs itself at tick 6
+through the orchestrator's ``fault_plan`` duck-typed crash hook — a real
+uncatchable kill, no atexit or cleanup handlers run.  The parent resumes
+from the surviving checkpoints and compares against an uninterrupted run.
+
+Usage: ckpt_kill_worker.py <checkpoint_dir>
+"""
+import os
+import signal
+import sys
+
+import numpy as np
+
+from repro.core.online import ChurnOrchestrator, population_cohorts
+
+T, U, SEED = 12, 24, 7
+KILL_TICK = 6
+
+
+def build():
+    pops = population_cohorts(U, n_extra_edge=1, gamma=8)
+    return ChurnOrchestrator(population=pops, hysteresis=0.05)
+
+
+def trace():
+    rng = np.random.default_rng(SEED)
+    Q = 0.4 + 0.6 * rng.random((T, U))
+    A = rng.integers(0, 3, size=(T, U))
+    return Q, A
+
+
+class KillSelf:
+    """Duck-typed FaultPlan: SIGKILL instead of raising InjectedCrash."""
+
+    def crash_hook(self, stage, tick):
+        if stage == "ingest" and tick == KILL_TICK:
+            print(f"worker: SIGKILL at tick {tick}", flush=True)
+            os.kill(os.getpid(), signal.SIGKILL)
+
+
+if __name__ == "__main__":
+    ckpt_dir = sys.argv[1]
+    Q, A = trace()
+    build().run_arrays(Q, A, checkpoint_dir=ckpt_dir, checkpoint_every=3,
+                       fault_plan=KillSelf())
+    print("worker: survived past the kill tick", flush=True)
+    sys.exit(3)        # reaching here means the kill never fired

@@ -1,0 +1,88 @@
+"""The perf-regression gate must be robust to damaged bench documents:
+malformed rows, non-numeric metrics, and metrics dropped from a fresh run
+are skipped with named warnings — nonzero exit is reserved for real
+regressions (and for the nothing-compared misconfiguration).
+"""
+import importlib.util
+import json
+import pathlib
+import sys
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "check_regression",
+    pathlib.Path(__file__).resolve().parents[1] / "benchmarks" /
+    "check_regression.py")
+cr = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(cr)
+
+
+def _doc(rows):
+    return {"benches": {"b": rows}}
+
+
+def _run(tmp_path, monkeypatch, base_rows, fresh_rows, *extra):
+    b = tmp_path / "base.json"
+    f = tmp_path / "fresh.json"
+    b.write_text(json.dumps(_doc(base_rows)))
+    f.write_text(json.dumps(_doc(fresh_rows)))
+    monkeypatch.setattr(sys, "argv",
+                        ["check_regression", str(f), "--baseline", str(b),
+                         "--key", "speedup", *extra])
+    return cr.main()
+
+
+def test_gate_passes_and_fails_on_ratio(tmp_path, monkeypatch):
+    base = [{"name": "a", "speedup": 2.0}]
+    assert _run(tmp_path, monkeypatch, base,
+                [{"name": "a", "speedup": 1.9}]) == 0
+    assert _run(tmp_path, monkeypatch, base,
+                [{"name": "a", "speedup": 1.0}]) == 1
+
+
+def test_malformed_rows_warn_but_do_not_fail(tmp_path, monkeypatch, capsys):
+    base = [{"name": "a", "speedup": 2.0}, "not-a-dict", {"no_name": 1}]
+    fresh = [{"name": "a", "speedup": 2.0}, 42]
+    assert _run(tmp_path, monkeypatch, base, fresh) == 0
+    err = capsys.readouterr().err
+    assert "skipping malformed row b[1]" in err
+    assert "skipping malformed row b[2]" in err
+
+
+def test_non_numeric_metric_warns_and_skips(tmp_path, monkeypatch, capsys):
+    base = [{"name": "a", "speedup": 2.0},
+            {"name": "b", "speedup": "oops"}]
+    fresh = [{"name": "a", "speedup": None},
+             {"name": "b", "speedup": 2.0}]
+    # both rows skip -> nothing compared -> misconfiguration exit
+    assert _run(tmp_path, monkeypatch, base, fresh) == 2
+    err = capsys.readouterr().err
+    assert "baseline speedup='oops' is not numeric" in err
+    assert "fresh speedup=None is not numeric" in err
+
+
+def test_dropped_metric_warns_but_does_not_fail(tmp_path, monkeypatch,
+                                                capsys):
+    base = [{"name": "a", "speedup": 2.0}, {"name": "c", "speedup": 3.0}]
+    fresh = [{"name": "a", "speedup": 2.0}, {"name": "c"}]
+    assert _run(tmp_path, monkeypatch, base, fresh) == 0
+    assert "fresh run dropped the metric" in capsys.readouterr().err
+
+
+def test_self_baseline_refused(tmp_path, monkeypatch):
+    b = tmp_path / "same.json"
+    b.write_text(json.dumps(_doc([{"name": "a", "speedup": 1.0}])))
+    monkeypatch.setattr(sys, "argv",
+                        ["check_regression", str(b), "--baseline", str(b)])
+    assert cr.main() == 2
+
+
+def test_rows_filter(tmp_path, monkeypatch):
+    base = [{"name": "channel_x", "speedup": 2.0},
+            {"name": "micro_y", "speedup": 5.0}]
+    fresh = [{"name": "channel_x", "speedup": 2.0},
+             {"name": "micro_y", "speedup": 0.1}]   # would fail unfiltered
+    assert _run(tmp_path, monkeypatch, base, fresh,
+                "--rows", "channel_") == 0
+    assert _run(tmp_path, monkeypatch, base, fresh) == 1

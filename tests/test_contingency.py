@@ -373,3 +373,65 @@ def test_churn_trace_iid_mode_unchanged():
     b = churn_trace(3, 20, seed=7, p_fail=0.2, fail_nodes=(1, 2),
                     failure_mode="iid")
     assert a == b
+
+
+# ---------------------------------------------------------------------------
+# operator-supplied extra masks + observed-counter serialization
+# ---------------------------------------------------------------------------
+
+def test_library_refill_extra_masks_become_hits(plan):
+    lib = ContingencyLibrary(plan, k_per_exit=4)
+    # a joint edge+cloud outage is neither a single toggle nor a tier
+    # group, so the stock candidate generator never proposes it
+    window = np.zeros(plan.network.n_nodes, dtype=bool)
+    window[[2, 3]] = True
+    lib.refill()
+    assert lib.lookup(window) is None            # miss without the hint
+    lib.refill(extra_masks=[window])
+    entry = lib.lookup(window)
+    assert entry is not None and entry.feasible
+
+
+def test_library_observed_state_roundtrip(plan):
+    lib = ContingencyLibrary(plan)
+    m1 = np.zeros(plan.network.n_nodes, dtype=bool); m1[1] = True
+    m2 = np.zeros(plan.network.n_nodes, dtype=bool); m2[3] = True
+    for m in (m1, m2, m2):
+        lib.observe(m)
+    lib2 = ContingencyLibrary(plan)
+    lib2.restore_state(lib.state_dict())
+    assert lib2._observed == lib._observed
+    assert [k for k in lib2._observed] == [k for k in lib._observed]
+    assert lib2.stale                            # entries rebuilt by refill
+    # restore validates shape agreement
+    with pytest.raises(ValueError, match="disagree"):
+        lib2.restore_state({"obs_masks": np.zeros((2, 4), dtype=bool),
+                            "obs_counts": np.zeros(3, dtype=np.int64)})
+
+
+def test_population_refill_extra_masks_prebuild_states(scenario):
+    pop = Population(scenario, paper_profile("h2"), REQ, n_users=6)
+    pc = PopulationContingency(pop)
+    window = np.zeros(pop.N, dtype=bool)
+    window[[2, 3]] = True
+    pc.refill(extra_masks=[window])
+    # every live cohort state has a pinned, relaxed sibling at the window
+    for sid in np.unique(pop._user_state):
+        st = pop._states[int(sid)]
+        s2 = pop._state_ids.get(pop._state_key(st.stq, window))
+        assert s2 is not None
+        assert pop._states[int(s2)].dps is not None
+        assert int(s2) in pop._pinned
+
+
+def test_population_observed_state_roundtrip(scenario):
+    pop = Population(scenario, paper_profile("h2"), REQ, n_users=6)
+    pc = PopulationContingency(pop)
+    pc.coverage(1, "fail")                       # feeds the counter
+    pc2 = PopulationContingency(pop)
+    pc2.restore_state(pc.state_dict())
+    assert pc2._observed == pc._observed
+    with pytest.raises(ValueError, match="do not fit"):
+        pc2.restore_state(
+            {"obs_masks": np.zeros((1, pop.N + 1), dtype=bool),
+             "obs_counts": np.ones(1, dtype=np.int64)})

@@ -1,0 +1,193 @@
+"""Deterministic fault injection (core/faults.py) and its wiring through
+the serving pipeline: telemetry quarantine accounting on TickReport, the
+quarantined-users-serve-last-known-good oracle, and straggler detection
+driving the mesh demotion ladder.
+"""
+import numpy as np
+import pytest
+
+from repro.core.faults import (FaultPlan, FaultSpec, InjectedCrash,
+                               corrupt_specs)
+from repro.core.online import ChurnOrchestrator, population_cohorts
+from repro.core.population import TelemetryPolicy
+from repro.runtime.straggler import StragglerDetector
+
+T, U = 10, 18
+
+
+def _trace(seed=3):
+    rng = np.random.default_rng(seed)
+    return 0.4 + 0.6 * rng.random((T, U))
+
+
+def build(**pop_kw):
+    pops = population_cohorts(U, n_extra_edge=1, gamma=8, **pop_kw)
+    return ChurnOrchestrator(population=pops)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan mechanics
+# ---------------------------------------------------------------------------
+
+def test_corrupt_is_seeded_and_deterministic():
+    Q = _trace()
+    plan = FaultPlan(seed=5, specs=corrupt_specs([2, 4], kind="nan",
+                                                 users_per_tick=2))
+    qa, ia = plan.corrupt(Q)
+    qb, ib = plan.corrupt(Q)
+    np.testing.assert_array_equal(qa, qb)
+    assert ia == ib and len(ia) == 4
+    # a different seed picks different users
+    qc, ic = FaultPlan(seed=6, specs=plan.specs).corrupt(Q)
+    assert ic != ia
+    # the original trace is untouched
+    assert np.isfinite(Q).all()
+
+
+def test_corrupt_kinds_land_as_specified():
+    Q = _trace()
+    plan = FaultPlan(specs=[FaultSpec(kind="nan", tick=1, user=3),
+                            FaultSpec(kind="inf", tick=2, user=4),
+                            FaultSpec(kind="negative", tick=3, user=5,
+                                      value=7.0)])
+    q, info = plan.corrupt(Q)
+    assert np.isnan(q[1, 3]) and np.isinf(q[2, 4]) and q[3, 5] == -7.0
+    assert set(info) == {(1, 3, "nan"), (2, 4, "inf"), (3, 5, "negative")}
+
+
+def test_stuck_freezes_one_user_for_count_ticks():
+    Q = _trace()
+    plan = FaultPlan(specs=[FaultSpec(kind="stuck", tick=2, user=7,
+                                      count=3)])
+    q, info = plan.corrupt(Q)
+    assert (q[2:5, 7] == Q[2, 7]).all()
+    assert info == [(2, 7, "stuck"), (3, 7, "stuck"), (4, 7, "stuck")]
+    # only one user is frozen even without an explicit user
+    _, info2 = FaultPlan(specs=[FaultSpec(kind="stuck", tick=0,
+                                          count=4)]).corrupt(Q)
+    assert len({u for _, u, _k in info2}) == 1 and len(info2) == 4
+
+
+def test_out_of_range_specs_are_ignored():
+    Q = _trace()
+    plan = FaultPlan(specs=[FaultSpec(kind="nan", tick=T + 5, user=0)])
+    q, info = plan.corrupt(Q)
+    np.testing.assert_array_equal(q, Q)
+    assert info == []
+
+
+def test_mangle_trace_drop_then_dup_original_numbering():
+    Q = _trace()
+    plan = FaultPlan(specs=[FaultSpec(kind="drop_tick", tick=2),
+                            FaultSpec(kind="dup_tick", tick=5)])
+    Qm = plan.mangle_trace(Q)
+    assert len(Qm) == T                  # one drop + one dup
+    np.testing.assert_array_equal(Qm[1], Q[1])
+    np.testing.assert_array_equal(Qm[2], Q[3])    # tick 2 never arrived
+    np.testing.assert_array_equal(Qm[4], Q[5])    # tick 5 came twice
+    np.testing.assert_array_equal(Qm[5], Q[5])
+
+
+def test_crash_hook_fires_only_on_matching_stage_and_tick():
+    plan = FaultPlan(specs=[FaultSpec(kind="crash", tick=4,
+                                      stage="relax")])
+    plan.crash_hook("ingest", 4)
+    plan.crash_hook("relax", 3)
+    with pytest.raises(InjectedCrash, match="tick 4"):
+        plan.crash_hook("relax", 4)
+    assert plan.crash_ticks() == [(4, "relax")]
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec(kind="gamma_ray", tick=0)
+    with pytest.raises(ValueError, match="stage"):
+        FaultSpec(kind="crash", tick=0, stage="warmup")
+    with pytest.raises(ValueError, match="count"):
+        FaultSpec(kind="nan", tick=0, count=0)
+
+
+def test_stall_hook_counts_across_calls():
+    hook = FaultPlan.stall_hook(2)
+    with pytest.raises(TimeoutError):
+        hook(0)
+    with pytest.raises(TimeoutError):
+        hook(1)
+    hook(2)                              # budget spent: no-op from here
+    hook(3)
+
+
+# ---------------------------------------------------------------------------
+# telemetry quarantine through the orchestrator
+# ---------------------------------------------------------------------------
+
+def test_quarantine_counters_and_last_known_good_oracle():
+    Q = _trace()
+    plan = FaultPlan(seed=1, specs=[FaultSpec(kind="nan", tick=4, user=5),
+                                    FaultSpec(kind="negative", tick=5,
+                                              user=5),
+                                    FaultSpec(kind="inf", tick=4, user=11)])
+    Qc, info = plan.corrupt(Q)
+    o = build(telemetry=TelemetryPolicy(mode="quarantine"))
+    reps = o.run_arrays(Qc)
+    # user 5 corrupt on ticks 4-5, user 11 on tick 4 only
+    assert reps[4].n_quarantined == 2
+    assert reps[5].n_recovered == 1      # user 11 reads clean again
+    assert reps[6].n_recovered == 1      # user 5 reads clean again
+    assert sum(r.n_quarantined for r in reps) == \
+        sum(r.n_recovered for r in reps)
+
+    # oracle: identical to a clean run where the corrupted entries are
+    # replaced by each user's last good reading
+    Qfix = Qc.copy()
+    Qfix[4, 5] = Q[3, 5]
+    Qfix[5, 5] = Q[3, 5]
+    Qfix[4, 11] = Q[3, 11]
+    o_ref = build()
+    r_ref = o_ref.run_arrays(Qfix)
+    for a, b in zip(reps, r_ref):
+        assert abs(a.energy - b.energy) < 1e-12, a.tick
+    for p, p2 in zip(o.pops, o_ref.pops):
+        np.testing.assert_array_equal(p._inc_place, p2._inc_place)
+        np.testing.assert_array_equal(p._inc_energy, p2._inc_energy)
+
+
+def test_quarantine_counters_zero_without_faults():
+    reps = build(telemetry=TelemetryPolicy(mode="quarantine")) \
+        .run_arrays(_trace())
+    assert all(r.n_quarantined == 0 and r.n_recovered == 0 for r in reps)
+
+
+def test_raise_mode_rejects_corrupt_trace():
+    Q = _trace()
+    Qc, _ = FaultPlan(specs=[FaultSpec(kind="nan", tick=2,
+                                       user=0)]).corrupt(Q)
+    with pytest.raises(ValueError):
+        build(telemetry=TelemetryPolicy(mode="raise")).run_arrays(Qc)
+
+
+# ---------------------------------------------------------------------------
+# straggler detection wired to per-tick relax timings
+# ---------------------------------------------------------------------------
+
+def test_straggler_flags_via_injected_times():
+    o = build()
+    o._straggler_cfg = StragglerDetector(n_workers=4, warmup=2)
+
+    def times(rep):
+        t = np.ones(4)
+        t[1] = 10.0                      # worker 1 persistently slow
+        return t
+
+    o.straggler_times = times
+    reps = o.run_arrays(_trace()[:5])
+    flags = [r.n_stragglers for r in reps]
+    assert any(flags)                    # flagged once warmup passes
+    assert flags[0] == 0                 # not before
+    # no mesh backend configured: nothing to demote
+    assert all(r.n_mesh_demotions == 0 for r in reps)
+
+
+def test_straggler_disabled_by_default():
+    reps = build().run_arrays(_trace()[:3])
+    assert all(r.n_stragglers == 0 for r in reps)

@@ -85,3 +85,65 @@ def test_zero_layer_chain_short_circuits():
 def test_population_mesh_device_trim_validation():
     with pytest.raises(ValueError, match="visible"):
         population_mesh(jax.device_count() + 1)
+
+
+# ---------------------------------------------------------------------------
+# host-dropout recovery: bounded retry, then the demotion ladder
+# ---------------------------------------------------------------------------
+
+def test_retry_within_budget_no_demotion():
+    from repro.core.faults import FaultPlan
+    mr = MeshRelaxer(population_mesh(), max_retries=2, backoff_s=0.0)
+    clean = MeshRelaxer(population_mesh())
+    init, E, steep = _case(3, seed=21)
+    hc, pc = clean.relax(init, E, steep, None)
+    mr.fault_hook = FaultPlan.stall_hook(2)   # fails 2 of 3 attempts
+    h, p = mr.relax(init, E, steep, None)
+    assert mr.retries == 2 and mr.demotions == 0
+    assert np.array_equal(h, hc) and np.array_equal(p, pc)
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="demotion needs a multi-device local mesh")
+def test_retry_budget_spent_demotes_bit_exact():
+    from repro.core.faults import FaultPlan
+    mr = MeshRelaxer(population_mesh(), max_retries=0, backoff_s=0.0)
+    n0 = mr.n_devices
+    clean = MeshRelaxer(population_mesh())
+    init, E, steep = _case(5, seed=22)
+    hc, pc = clean.relax(init, E, steep, None)
+    mr.fault_hook = FaultPlan.stall_hook(1)   # kill the only attempt
+    h, p = mr.relax(init, E, steep, None)
+    assert mr.demotions == 1 and mr.n_devices == 1 < n0
+    assert np.array_equal(h, hc) and np.array_equal(p, pc)
+    # the relaxer stays usable on the demoted rung
+    init2, E2, steep2 = _case(2, seed=23)
+    h2, _ = mr.relax(init2, E2, steep2, None)
+    h2c, _ = clean.relax(init2, E2, steep2, None)
+    assert np.array_equal(h2, h2c)
+
+
+def test_bottom_of_ladder_reraises():
+    from repro.core.faults import FaultPlan
+    mr = MeshRelaxer(population_mesh(), max_retries=0, backoff_s=0.0)
+    n0 = mr.n_devices
+    init, E, steep = _case(2, seed=24)
+    mr.fault_hook = FaultPlan.stall_hook(10 ** 6)   # never heals
+    with pytest.raises(TimeoutError, match="injected host stall"):
+        mr.relax(init, E, steep, None)
+    # ladder fully taken before giving up
+    assert mr.n_devices == 1
+    assert mr.demotions == (1 if n0 > 1 else 0)
+
+
+def test_nonrecoverable_errors_are_not_retried():
+    mr = MeshRelaxer(population_mesh(), max_retries=3, backoff_s=0.0)
+    init, E, steep = _case(2, seed=25)
+
+    def bomb(attempt):
+        raise KeyError("not in RECOVERABLE")
+
+    mr.fault_hook = bomb
+    with pytest.raises(KeyError):
+        mr.relax(init, E, steep, None)
+    assert mr.retries == 0 and mr.demotions == 0

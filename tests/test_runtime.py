@@ -64,6 +64,62 @@ def test_checkpoint_atomicity_no_partial_dirs(tmp_ckpt):
     assert all(not n.startswith(".tmp_") for n in names)
 
 
+def test_checkpoint_truncated_arrays_fall_back(tmp_ckpt):
+    tree = _tree()
+    ckpt.save(tmp_ckpt, 1, tree)
+    ckpt.save(tmp_ckpt, 2, tree)
+    p = pathlib.Path(tmp_ckpt) / "step_000000000002" / ckpt.ARRAYS
+    p.write_bytes(p.read_bytes()[:30])      # cut mid-frame
+    step, _ = ckpt.restore_latest(tmp_ckpt, tree)
+    assert step == 1
+
+
+def test_checkpoint_manifest_mismatch_falls_back(tmp_ckpt):
+    import json
+    tree = _tree()
+    ckpt.save(tmp_ckpt, 1, tree)
+    ckpt.save(tmp_ckpt, 2, tree)
+    mpath = pathlib.Path(tmp_ckpt) / "step_000000000002" / ckpt.MANIFEST
+    man = json.loads(mpath.read_text())
+    man["shapes"]["a"] = [9, 9]             # arrays no longer match
+    mpath.write_text(json.dumps(man))
+    step, _ = ckpt.restore_latest(tmp_ckpt, tree)
+    assert step == 1
+    # a manifest claiming keys the payload lacks is damage too
+    man["shapes"]["a"] = [4, 8]
+    man["keys"].append("ghost/leaf")
+    mpath.write_text(json.dumps(man))
+    with pytest.raises(KeyError, match="ghost"):
+        ckpt.load_arrays(tmp_ckpt, 2)
+    step, _ = ckpt.restore_latest(tmp_ckpt, tree)
+    assert step == 1
+
+
+def test_checkpoint_partial_tmp_dir_is_ignored(tmp_ckpt):
+    tree = _tree()
+    ckpt.save(tmp_ckpt, 3, tree)
+    # simulate a crash mid-save: an abandoned temp dir with a manifest
+    leftover = pathlib.Path(tmp_ckpt) / ".tmp_abandoned"
+    leftover.mkdir()
+    (leftover / ckpt.MANIFEST).write_text("{}")
+    # and an empty step dir missing its arrays payload
+    (pathlib.Path(tmp_ckpt) / "step_000000000009").mkdir()
+    assert ckpt.available_steps(tmp_ckpt) == [3]
+    step, _ = ckpt.restore_latest(tmp_ckpt, tree)
+    assert step == 3
+
+
+def test_load_arrays_roundtrip_flat_keys(tmp_ckpt):
+    tree = _tree()
+    ckpt.save(tmp_ckpt, 4, tree, extra={"trace_pos": 11})
+    arrays, manifest = ckpt.load_arrays(tmp_ckpt, 4)
+    assert manifest["extra"]["trace_pos"] == 11
+    # keys are the "/"-joined pytree paths
+    assert set(arrays) == {"a", "nested/b", "nested/c/0", "nested/c/1"}
+    np.testing.assert_array_equal(arrays["nested/b"], np.arange(10))
+    assert str(arrays["nested/c/1"].dtype) == "bfloat16"
+
+
 def test_data_stream_determinism_and_sharding():
     cfg = LMStreamConfig(vocab_size=128, seq_len=32, global_batch=8, seed=3)
     full = SyntheticLMStream(cfg)
