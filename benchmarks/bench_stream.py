@@ -10,6 +10,9 @@ Rows:
                          synchronous ``step_arrays`` loop on the same
                          draws; every tick's energy/resolve/migration
                          accounting is asserted identical.
+  ``fused_gate_signature`` the fused ingest→quantize→signature kernel
+                         (PR 10) on a 2e5-row batch — numpy oracle vs the
+                         jitted jnp program, output bytes asserted equal.
   ``fused_newborn_relax`` a cohort's newborn states relaxed in ONE chained
                          launch vs the chunked fallback forced by a 1-byte
                          ``REPRO_RELAX_CHUNK_BYTES`` budget (bit-exact).
@@ -34,6 +37,8 @@ from repro.core import (ChurnOrchestrator, Plan, Population, paper_profile,
                         population_cohorts)
 from repro.core.multiapp import PAPER_MULTIAPP_REQS
 from repro.core.scenarios import paper_scenario
+from repro.kernels.ee_gate.population import (quant_signature_jnp,
+                                              quant_signature_np)
 
 from .bench_online import _ar1_draws
 from .common import Row, kv, smoke
@@ -161,6 +166,37 @@ def _bounded_rerelax_row(*, ticks: int, trials: int) -> Row:
                   layers_skipped=stats_b.layers_skipped, agree=1))
 
 
+def _fused_gate_row(*, users: int, trials: int) -> Row:
+    """The fused ingest→quantize→signature kernel on a full cohort batch:
+    one pass from raw bandwidth rows to int16 signature rows.  Both
+    backends (host numpy and the jitted jnp program) run on identical
+    draws and their output bytes are asserted equal — ``agree=1`` is the
+    in-bench proof, not a separate test."""
+    nw = paper_scenario(n_extra_edge=2)
+    pop = Population(nw, paper_profile("h4"), PAPER_MULTIAPP_REQS["h4"], 2)
+    c = pop._quant()
+    rng = np.random.default_rng(7)
+    vec = rng.uniform(0.1, 2.0, (users, pop.N)) * 1e9
+    vec[rng.random((users, pop.N)) < 0.05] = 0.0
+    vec[:, pop.src] = np.inf
+    quant_signature_jnp(vec[:2], c)        # JIT warm-up off the clock
+    best_np = best_j = float("inf")
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        enc_np = quant_signature_np(vec, c)
+        best_np = min(best_np, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        enc_j = quant_signature_jnp(vec, c)
+        best_j = min(best_j, time.perf_counter() - t0)
+        assert enc_np.tobytes() == enc_j.tobytes(), \
+            "jnp signature kernel diverged from the numpy oracle"
+    best = min(best_np, best_j)
+    return Row("fused_gate_signature", best / users * 1e6,
+               kv(users=users, numpy_ms=best_np * 1e3,
+                  jnp_ms=best_j * 1e3, users_per_s=users / best,
+                  agree=1))
+
+
 def _stream_scale_row(name: str, *, users: int, ticks: int,
                       baseline_tps: float = 0.0) -> Row:
     """Streaming scale row: ``run_arrays`` over precomputed AR(1) draws.
@@ -203,6 +239,8 @@ def run() -> Iterable[Row]:
         scales = [("stream_scale_1e6", 1_000_000, 4),
                   ("stream_scale_1e7", 10_000_000, 3)]
     yield _stream_vs_sync_row(users=sv_users, ticks=ticks)
+    yield _fused_gate_row(users=2_000 if smoke() else 200_000,
+                          trials=trials)
     yield _fused_newborn_row(states=newborn_states, trials=trials)
     yield _bounded_rerelax_row(ticks=12 if smoke() else 30, trials=trials)
     base = _stream_scale_row(scales[0][0], users=scales[0][1],

@@ -60,8 +60,9 @@ def _num(row: dict, key: str, name: str, which: str) -> Optional[float]:
     return v
 
 
-def default_baseline() -> Optional[Path]:
-    """Newest committed ``BENCH_PR<n>.json`` (highest n) in the repo root.
+def committed_baselines():
+    """Every committed ``BENCH_PR<n>.json`` in the repo root as a sorted
+    ``[(n, Path), ...]``.
 
     Candidates come from ``git ls-files`` so an uncommitted fresh run
     dumped at the repo root cannot silently become its own baseline; when
@@ -76,21 +77,74 @@ def default_baseline() -> Optional[Path]:
         names = [n for n in out.splitlines() if n]
     except (OSError, subprocess.CalledProcessError):
         names = [p.name for p in root.glob("BENCH_PR*.json")]
-    best: Optional[Path] = None
-    best_n = -1
+    found = []
     for name in names:
         m = re.fullmatch(r"BENCH_PR(\d+)\.json", name)
-        if m is None:
-            continue
-        n = int(m.group(1))
-        if n > best_n:
-            best, best_n = root / name, n
-    return best
+        if m is not None:
+            found.append((int(m.group(1)), root / name))
+    return sorted(found)
+
+
+def default_baseline() -> Optional[Path]:
+    """Newest committed ``BENCH_PR<n>.json`` (highest n) in the repo
+    root (see :func:`committed_baselines`)."""
+    found = committed_baselines()
+    return found[-1][1] if found else None
+
+
+def history(key: str, rows_filter: Optional[str] = None) -> int:
+    """Per-metric trajectory across every committed ``BENCH_PR<n>.json``:
+    one table per row name carrying ``key``, each line a PR's value and
+    its delta vs the previous PR that had the row.  Rows or metrics
+    missing from a PR print as gaps (the benches grew over time), and
+    unreadable documents warn-and-skip — history must render even when an
+    old baseline predates a row's introduction."""
+    files = committed_baselines()
+    docs = []
+    for n, path in files:
+        try:
+            with open(path) as f:
+                docs.append((n, _rows(json.load(f))))
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"warning: skipping {path.name}: {e}", file=sys.stderr)
+    if not docs:
+        print("error: no committed BENCH_PR<n>.json found",
+              file=sys.stderr)
+        return 2
+    names = sorted({name for _, rs in docs for name, row in rs.items()
+                    if key in row})
+    if rows_filter is not None:
+        names = [n for n in names if rows_filter in n]
+    if not names:
+        print(f"error: no rows with key {key!r} in any committed "
+              f"baseline", file=sys.stderr)
+        return 2
+    for name in names:
+        print(f"\n{name} · {key}")
+        prev = None
+        for n, rs in docs:
+            row = rs.get(name)
+            if row is None or key not in row:
+                print(f"  PR{n:<3} --")
+                continue
+            v = _num(row, key, name, f"PR{n}")
+            if v is None:
+                continue       # non-numeric: warned by _num, keep prev
+            delta = ("" if prev in (None, 0.0)
+                     else f"  ({(v - prev) / prev * 100.0:+.1f}%)")
+            print(f"  PR{n:<3} {v:<12.6g}{delta}")
+            prev = v
+    return 0
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("fresh", help="fresh benchmarks.run --json output")
+    ap.add_argument("fresh", nargs="?", default=None,
+                    help="fresh benchmarks.run --json output "
+                         "(omit with --history)")
+    ap.add_argument("--history", action="store_true",
+                    help="print the --key trajectory across every "
+                         "committed BENCH_PR<n>.json instead of gating")
     ap.add_argument("--baseline", default=None,
                     help="committed baseline JSON (e.g. BENCH_PR4.json); "
                          "default: the newest committed BENCH_PR<n>.json")
@@ -103,7 +157,17 @@ def main() -> int:
                     help="only gate rows whose name contains this "
                          "substring (e.g. channel_ for the stable "
                          "warm-vs-cold rows; microbench rows are noisier)")
+    ap.add_argument("--invert", action="store_true",
+                    help="gate a smaller-is-better metric (e.g. init_s): "
+                         "the ratio becomes baseline/fresh, so "
+                         "--min-ratio 5.0 means 'fresh must be >=5x "
+                         "smaller than baseline'")
     args = ap.parse_args()
+
+    if args.history:
+        return history(args.key, args.rows)
+    if args.fresh is None:
+        ap.error("fresh is required unless --history is given")
 
     baseline = args.baseline
     if baseline is None:
@@ -147,7 +211,10 @@ def main() -> int:
         if f_ is None:
             continue
         compared += 1
-        ratio = f_ / b if b else float("inf")
+        if args.invert:
+            ratio = b / f_ if f_ else float("inf")
+        else:
+            ratio = f_ / b if b else float("inf")
         status = "OK " if ratio >= args.min_ratio else "FAIL"
         print(f"{status} {name}: {args.key} {f_:.3f} vs baseline {b:.3f} "
               f"(ratio {ratio:.2f}, floor {args.min_ratio:.2f})")

@@ -107,6 +107,12 @@ class TickReport:
     t_relax_ms: float = 0.0      # banded relaxation launches
     t_post_ms: float = 0.0       # exact post-pass
     t_reprice_ms: float = 0.0    # congestion fixed point (run_tick)
+    # post-pass sub-breakdown (subsets of t_post_ms — see PopulationStats):
+    # stacked candidate scans / shared fast-table broadcasts / per-user
+    # fallbacks.  Attributes the fused-kernel wins per phase.
+    t_post_scan_ms: float = 0.0
+    t_post_fast_ms: float = 0.0
+    t_post_fallback_ms: float = 0.0
 
 
 @dataclass
@@ -162,7 +168,8 @@ class ChurnOrchestrator:
                  shared_capacity: Optional[SharedCapacity] = None,
                  price_weights: Optional[Sequence[float]] = None,
                  contingency: Union[bool, ContingencyPolicy, None] = None,
-                 straggler: object = None):
+                 straggler: object = None,
+                 stream_overlap: str = "auto"):
         if (plans is None) == (population is None):
             raise ValueError("pass exactly one of plans= or population=")
         if shared_capacity is not None and population is None:
@@ -211,6 +218,18 @@ class ChurnOrchestrator:
         #: unless :attr:`straggler_times` injects a provider.
         self._straggler_cfg = straggler
         self._straggler_det = None
+        if stream_overlap not in ("auto", "always", "never"):
+            raise ValueError(f"stream_overlap must be 'auto', 'always' or "
+                             f"'never', got {stream_overlap!r}")
+        #: streaming-overlap policy: ``"auto"`` overlaps tick t's ingest
+        #: with tick t-1's relax only when it can pay off — more than one
+        #: core to run the background relax on AND the relax EWMA is above
+        #: the thread-handoff cost.  Reports are bit-identical either way
+        #: (overlap only moves WHEN the relax runs, never what it computes).
+        self.stream_overlap = stream_overlap
+        self._overlap_relax_s = 0.0   # EWMA of per-tick relax wall time
+        self._overlap_used = False    # what the last begin decided
+        self._n_cores: Optional[int] = None
         #: injectable per-tick worker step-time provider (tests, external
         #: schedulers): a callable ``TickReport -> (H,) times``
         self.straggler_times: Optional[Callable] = None
@@ -229,6 +248,8 @@ class ChurnOrchestrator:
                             if spec.tier == "edge"
                             and n != nw.source_node]
         self.attached = np.zeros(U, dtype=np.int64)   # edge-slot per user
+        self._att_ver = 0
+        self._fac_ver = -1
         self._ref_energy = np.full(U, np.inf)          # energy at last solve
         self._cur_energy = np.full(U, np.inf)
         # cold-start placement for plans that were not solved yet
@@ -270,6 +291,22 @@ class ChurnOrchestrator:
         #: cached per-cohort local index ranges (dense ticks touch every
         #: user, so the per-tick pop_of scans collapse to these)
         self._loc_all = [np.arange(p.U, dtype=np.int64) for p in pops]
+        #: per-cohort global-id slices: ``population_cohorts`` deals users
+        #: round-robin, so a cohort's user_ids is an arithmetic progression
+        #: and the dense tick's (U,) ledger gathers become strided VIEWS —
+        #: zero-copy reads and writes on the hot gate path (values
+        #: identical; fancy-index fallback when a caller hand-rolled ids)
+        self._gl_sl: List[Optional[slice]] = []
+        for p in pops:
+            gids = p.user_ids
+            sl: Optional[slice] = None
+            if len(gids) == 1:
+                sl = slice(int(gids[0]), int(gids[0]) + 1)
+            elif len(gids) >= 2:
+                st = int(gids[1]) - int(gids[0])
+                if st > 0 and (np.diff(gids) == st).all():
+                    sl = slice(int(gids[0]), int(gids[-1]) + 1, st)
+            self._gl_sl.append(sl)
         #: per-cohort uplink factor matrices for the fused dense ingest
         #: (lazily built; rows self-heal against attachment moves)
         self._fac: Optional[List[np.ndarray]] = None
@@ -279,6 +316,8 @@ class ChurnOrchestrator:
                             and n != nw.source_node]
         self.quality = np.ones(U)
         self.attached = np.zeros(U, dtype=np.int64)
+        self._att_ver = 0           # bumped on every attachment write
+        self._fac_ver = -1          # _att_ver the factor cache reflects
         self._ref_energy = np.full(U, np.inf)
         self._cur_energy = np.full(U, np.inf)
         #: running (retries, demotions) cursor for the per-tick mesh deltas
@@ -329,6 +368,7 @@ class ChurnOrchestrator:
                 slot = int(ev.value) % max(1, len(self._edge_nodes))
                 if self.attached[ev.user] != slot:
                     self.attached[ev.user] = slot
+                    self._att_ver += 1
                     uplink_users.add(ev.user)
                     dirty.add(ev.user)
             elif ev.kind in ("fail", "recover"):
@@ -455,6 +495,7 @@ class ChurnOrchestrator:
                 slot = int(ev.value) % max(1, len(self._edge_nodes))
                 if self.attached[ev.user] != slot:
                     self.attached[ev.user] = slot
+                    self._att_ver += 1
                     uplink_mask[ev.user] = True
                     dirty_mask[ev.user] = True
             elif ev.kind in ("fail", "recover"):
@@ -556,7 +597,9 @@ class ChurnOrchestrator:
                                  f"{attach.shape}")
             slots = attach % max(1, len(self._edge_nodes))
             moved = slots != self.attached
-            self.attached[moved] = slots[moved]
+            if moved.any():
+                self.attached[moved] = slots[moved]
+                self._att_ver += 1
             uplink_mask |= moved
             dirty_mask |= moved
             rep.n_events += int(moved.sum())
@@ -801,8 +844,11 @@ class ChurnOrchestrator:
             if attaches is not None:
                 slots = attaches[t] % max(1, len(self._edge_nodes))
                 moved = slots != self.attached
-                self.attached[moved] = slots[moved]
-                rep.n_events += int(np.count_nonzero(moved))
+                n_moved = int(np.count_nonzero(moved))
+                if n_moved:
+                    self.attached[moved] = slots[moved]
+                    self._att_ver += 1
+                rep.n_events += n_moved
             # ingest(t) overlaps relax(t-1): writes only the bandwidth
             # store + stale flags, while the in-flight post-pass reads
             # its begin-time snapshot
@@ -958,6 +1004,7 @@ class ChurnOrchestrator:
         orch = sub("orch")
         self.quality[:] = orch["quality"]
         self.attached[:] = orch["attached"]
+        self._att_ver += 1
         self._ref_energy[:] = orch["ref_energy"]
         self._cur_energy[:] = orch["cur_energy"]
         self._tick = int(extra.get("tick", manifest.get("step", 0)))
@@ -977,8 +1024,9 @@ class ChurnOrchestrator:
         q0 = self._quar_counters()
         fac = self._factors()
         for pi, p in enumerate(self.pops):
-            scale = self.uplink_bps * self.quality[p.user_ids]
-            p.ingest_factors(scale, fac[pi], requant=False)
+            sl = self._gl_sl[pi]
+            q = self.quality[p.user_ids] if sl is None else self.quality[sl]
+            p.ingest_factors(self.uplink_bps * q, fac[pi], requant=False)
         rep.n_uplink_updates = self.n_users
         rep.n_dirty = self.n_users
         q1 = self._quar_counters()
@@ -990,30 +1038,43 @@ class ChurnOrchestrator:
         in flight (``solve_begin(stream=True)``); returns the per-cohort
         pending handles for :meth:`_finish_tick`."""
         pendings = []
+        overlap = self._overlap_used = self._use_overlap()
         for pi, p in enumerate(self.pops):
             gl = p.user_ids
+            sl = self._gl_sl[pi]
             loc = self._loc_all[pi]
             if self.always_resolve:
                 gl_res, loc_res = gl, loc
             else:
                 no_inc, feas, energy = p.evaluate_incumbents(None)
-                thresh = self._ref_energy[gl] * (1.0 + self.hysteresis)
-                res = no_inc | ~feas | (energy > thresh)
+                ref = self._ref_energy[gl] if sl is None \
+                    else self._ref_energy[sl]
+                res = energy > ref * (1.0 + self.hysteresis)
+                res |= ~feas
+                res |= no_inc
                 n_res = int(np.count_nonzero(res))
                 rep.n_held += p.U - n_res
+                cur = self._cur_energy if sl is None else \
+                    self._cur_energy[sl]
                 if n_res == 0:
-                    self._cur_energy[gl] = energy
+                    if sl is None:
+                        self._cur_energy[gl] = energy
+                    else:
+                        cur[:] = energy
                     pendings.append(None)
                     continue
                 held = ~res
                 if held.any():
-                    self._cur_energy[gl[held]] = energy[held]
+                    if sl is None:
+                        self._cur_energy[gl[held]] = energy[held]
+                    else:
+                        cur[held] = energy[held]
                 gl_res = gl[res] if n_res < p.U else gl
                 loc_res = loc[res] if n_res < p.U else loc
-            old_found = p.inc_found[loc_res].copy()
+            old_found = p._inc_exit[loc_res] >= 0
             old_place = p._inc_place[loc_res].copy()
             pend = p.solve_begin(loc_res, build_solutions=False,
-                                 stream=True)
+                                 stream=overlap)
             rep.n_resolved += len(loc_res)
             pendings.append((p, pend, gl_res, loc_res, old_found,
                              old_place))
@@ -1025,19 +1086,30 @@ class ChurnOrchestrator:
         accounting — identical arithmetic to the synchronous path."""
         moved_bits = np.zeros(self.n_users)
         migrated = np.zeros(self.n_users, dtype=bool)
+        relax_s = 0.0
         for item in pendings:
             if item is None:
                 continue
             p, pend, gl_res, loc_res, old_found, old_place = item
             p.solve_finish(pend)
+            relax_s += p._last_relax_s
             self._account_resolves(rep, p, gl_res, loc_res, old_found,
                                    old_place, migrated, moved_bits)
+        # the adaptive-overlap signal: what a background relax could hide
+        self._overlap_relax_s += 0.3 * (relax_s - self._overlap_relax_s)
         mb = 0.0
         for u in np.nonzero(migrated)[0]:
             mb += float(moved_bits[u])
         rep.migration_bits = mb
-        fin = np.isfinite(self._cur_energy)
-        rep.energy = float(self._cur_energy[fin].sum())
+        # all-finite fast path: the full contiguous sum partitions exactly
+        # like the all-True gathered sum (same pairwise tree), and any
+        # inf/nan poisons the total so the guard catches the mixed case
+        s = float(self._cur_energy.sum())
+        if np.isfinite(s):
+            rep.energy = s
+        else:
+            fin = np.isfinite(self._cur_energy)
+            rep.energy = float(self._cur_energy[fin].sum())
         self._tick_fill(rep, snap)
 
     def _tick_fill(self, rep: TickReport, snap) -> None:
@@ -1053,6 +1125,30 @@ class ChurnOrchestrator:
         rep.n_mesh_retries = mr - self._mesh_cursor[0]
         rep.n_mesh_demotions = md - self._mesh_cursor[1]
         self._mesh_cursor = (mr, md)
+
+    def _core_count(self) -> int:
+        if self._n_cores is None:
+            import os
+            try:
+                self._n_cores = len(os.sched_getaffinity(0))
+            except AttributeError:          # macOS / non-Linux
+                self._n_cores = os.cpu_count() or 1
+        return self._n_cores
+
+    def _use_overlap(self) -> bool:
+        """The adaptive overlap rule (see ``stream_overlap``): overlap is
+        pure overhead on one core (the background relax just preempts the
+        foreground ingest, plus the thread handoff — the measured
+        stream-slower-than-sync regression), and not worth the handoff
+        when the relax EWMA is negligible (steady warm ticks relax
+        nothing).  The decision never changes results, only scheduling."""
+        if self.stream_overlap == "always":
+            return True
+        if self.stream_overlap == "never":
+            return False
+        if self._core_count() < 2:
+            return False
+        return self._overlap_relax_s >= 1e-4
 
     def _quar_counters(self):
         """(quarantines, recoveries) summed over the cohorts' telemetry
@@ -1114,24 +1210,24 @@ class ChurnOrchestrator:
                 np.asarray([t]))).reshape(-1)
         return np.asarray([t])
 
+    _TIMING_FIELDS = ("t_ingest_ms", "t_relax_ms", "t_post_ms",
+                      "t_post_scan_ms", "t_post_fast_ms",
+                      "t_post_fallback_ms")
+
     def _timing_snapshot(self):
         """Sums of the cohorts' phase clocks, or None when any cohort has
         timing disabled (keeping the breakdown zero-cost by default)."""
         if self.pops is None or not all(p._timing for p in self.pops):
             return None
-        return (sum(p.stats.t_ingest_ms for p in self.pops),
-                sum(p.stats.t_relax_ms for p in self.pops),
-                sum(p.stats.t_post_ms for p in self.pops))
+        return tuple(sum(getattr(p.stats, f) for p in self.pops)
+                     for f in self._TIMING_FIELDS)
 
     def _timing_fill(self, rep: TickReport, snap) -> None:
         if snap is None:
             return
-        rep.t_ingest_ms = \
-            sum(p.stats.t_ingest_ms for p in self.pops) - snap[0]
-        rep.t_relax_ms = \
-            sum(p.stats.t_relax_ms for p in self.pops) - snap[1]
-        rep.t_post_ms = \
-            sum(p.stats.t_post_ms for p in self.pops) - snap[2]
+        for i, f in enumerate(self._TIMING_FIELDS):
+            setattr(rep, f,
+                    sum(getattr(p.stats, f) for p in self.pops) - snap[i])
 
     def _account_resolves(self, rep: TickReport, p: Population,
                           gl_res: np.ndarray, loc_res: np.ndarray,
@@ -1144,7 +1240,7 @@ class ChurnOrchestrator:
         present in only one config" a plain element mismatch, and the bits
         accumulate column-by-column in the same order as the scalar loop
         (adding 0.0 for unmoved blocks is exact)."""
-        new_found = p.inc_found[loc_res]
+        new_found = p._inc_exit[loc_res] >= 0
         new_place = p._inc_place[loc_res]
         new_energy = p._inc_energy[loc_res]
         failed = ~new_found
@@ -1238,7 +1334,10 @@ class ChurnOrchestrator:
         if self._fac is None:
             self._fac = [self._fac_rows(p.user_ids) for p in self.pops]
             self._fac_attached = self.attached.copy()
+            self._fac_ver = self._att_ver
             return self._fac
+        if self._fac_ver == self._att_ver:
+            return self._fac        # no attachment write since last build
         moved = np.nonzero(self.attached != self._fac_attached)[0]
         if len(moved):
             rows = self._fac_rows(moved)
@@ -1246,6 +1345,7 @@ class ChurnOrchestrator:
                 sel = self._pop_of[moved] == pi
                 self._fac[int(pi)][self._local_of[moved[sel]]] = rows[sel]
             self._fac_attached[moved] = self.attached[moved]
+        self._fac_ver = self._att_ver
         return self._fac
 
     def _fac_rows(self, gids: np.ndarray) -> np.ndarray:

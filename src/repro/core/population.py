@@ -10,13 +10,20 @@ profile, one requirements triple, one solver parameterization) owns its
 batched state as single contiguous arrays —
 
   * ``(U, N)`` per-user source-link bandwidth vectors,
-  * ``(U, M, 2L-1, N)`` quantized uplink packs (M quantizer passes),
   * ``(U, N)`` failure bitmaps,
   * ``(U, L)`` / ``(U,)`` incumbent placements, exits and energies,
 
-and the per-tick pipeline — channel ingest -> vectorized requantize ->
-in-cell cache check -> chained banded relaxation -> argmin/post-pass —
-runs as whole-array operations with NO per-user Python on the hot path.
+and the per-tick pipeline — channel ingest -> fused requantize+signature
+kernel -> in-cell cache check -> chained banded relaxation ->
+argmin/post-pass — runs as whole-array operations with NO per-user Python
+on the hot path.  Quantized uplink packs are NOT stored per user: a
+user's pack always equals their cohort state's ``stq`` (states are keyed
+BY the pack), so the engine keeps one int16 signature row per *state*
+(``_stq_enc``) and stale-row requantization compares fresh signatures
+against a gather from that table — the ``(U, M, 2L-1, N)`` float64 pack
+array (7 GB at 1e7 users) is gone, and re-keying touches exactly the
+rows whose encoding moved (``kernels/ee_gate/population.py`` holds the
+fused quantize->int16->signature launch, numpy oracle + jitted jnp).
 
 The DP layer exploits that quantization makes the relaxation tensors
 piecewise-constant in the channel *across the cohort*, not just across
@@ -49,10 +56,12 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.kernels.ee_gate.population import QuantConsts, quant_signature
+
 from .bellman_ford import (batched_banded_relax_argmin,
                            batched_banded_relax_minarg, relax_chunk_rows)
 from .dnn_profile import DNNProfile
-from .feasible_graph import _quant_raw
+from .feasible_graph import build_feasible_graph
 from .fin import (DP_BACKENDS, _BandedArgDP, _backtrack, _best_feasible,
                   _exit_dmin)
 from .frontier import (ParetoFrontier, eval_config_users, frontier_from_rows,
@@ -133,6 +142,13 @@ class PopulationStats:
     t_ingest_ms: float = 0.0     # channel ingest + requantize
     t_relax_ms: float = 0.0      # banded relaxation launches
     t_post_ms: float = 0.0       # exact post-pass (solve minus relax)
+    # post-pass sub-breakdown (subsets of t_post_ms): the general stacked
+    # candidate scans, the shared fast-table broadcasts, and the per-user
+    # Plan fallbacks.  A fallback issued from inside a scan's no-feasible
+    # branch counts in BOTH t_post_scan_ms and t_post_fallback_ms.
+    t_post_scan_ms: float = 0.0
+    t_post_fast_ms: float = 0.0
+    t_post_fallback_ms: float = 0.0
 
 
 def _group_runs(keys: np.ndarray
@@ -203,6 +219,32 @@ class _BwCols:
         s, n = key                       # only the bwv[:, n] access pattern
         assert s == slice(None)
         return self._bw[self._rows, n]
+
+
+class _LazyBwCols:
+    """Column view over the LAZY bandwidth store (see ``_bw_lazy``):
+    column ``n`` materializes as ``scale * factors[:, n]`` on demand —
+    per-element IEEE multiplies identical to the fused dense product's
+    column — without ever writing the (U, N) product.  Supports only the
+    ``bwv[:, n]`` / ``len(bwv)`` access pattern of ``eval_config_users``.
+    """
+
+    __slots__ = ("_sc", "_fac", "_src")
+
+    def __init__(self, sc: np.ndarray, fac: np.ndarray, src: int):
+        self._sc = sc
+        self._fac = fac
+        self._src = src
+
+    def __len__(self) -> int:
+        return len(self._sc)
+
+    def __getitem__(self, key) -> np.ndarray:
+        s, n = key
+        assert s == slice(None)
+        if n == self._src:
+            return np.full(len(self._sc), np.inf)
+        return self._sc * self._fac[:, n]
 
 
 class _PendingSolve:
@@ -295,6 +337,27 @@ class _CohortState:
         self.parent = parent
 
 
+class _TightenResult:
+    """Per-user outcome arrays of one batched tighten loop
+    (``Population._tighten_batch``)."""
+
+    __slots__ = ("found", "energy", "latency", "e_comp", "e_comm", "exit",
+                 "rounds", "delta_eff", "cfgs")
+
+    def __init__(self, n: int, max_tighten: int):
+        self.found = np.zeros(n, dtype=bool)
+        self.energy = np.full(n, np.inf)
+        self.latency = np.zeros(n)
+        self.e_comp = np.zeros(n)
+        self.e_comm = np.zeros(n)
+        self.exit = np.full(n, -1, dtype=np.int64)
+        #: failed-round count == the succeeding round's index (Plan's
+        #: ``meta["tighten_rounds"]``); max_tighten+1 when exhausted
+        self.rounds = np.full(n, max_tighten + 1, dtype=np.int64)
+        self.delta_eff = np.full(n, np.nan)
+        self.cfgs: List[Optional[Config]] = [None] * n
+
+
 class Population:
     """Struct-of-arrays engine for a cohort of same-shape users.
 
@@ -317,7 +380,8 @@ class Population:
                  user_ids: Optional[Sequence[int]] = None,
                  max_states: int = 65536, vector_postpass: bool = True,
                  bounded_rerelax: bool = True, timing: bool = False,
-                 telemetry: Optional[TelemetryPolicy] = None):
+                 telemetry: Optional[TelemetryPolicy] = None,
+                 fused_ingest: str = "numpy"):
         if n_users <= 0:
             raise ValueError(f"n_users must be positive, got {n_users}")
         if backend != "mesh" and DP_BACKENDS.get(backend) is None:
@@ -331,6 +395,9 @@ class Population:
         if gamma >= np.iinfo(np.int16).max:
             raise ValueError(f"gamma {gamma} overflows the int16 state "
                              f"encoding")
+        if fused_ingest not in ("numpy", "jnp"):
+            raise ValueError(f"unknown fused_ingest backend "
+                             f"{fused_ingest!r} (expected numpy or jnp)")
         self.backend = backend
         #: backend of the rare per-user Plan fallback (same engine family)
         self._plan_backend = "jnp" if backend == "mesh" else backend
@@ -370,12 +437,21 @@ class Population:
                          else np.asarray(user_ids, dtype=np.int64))
         assert len(self.user_ids) == self.U
 
-        # per-user SoA state
+        # per-user SoA state (quantized packs live on the cohort states —
+        # a user's pack IS their state's ``stq``, see the module doc)
         base_row = self._proto._bw[self.src].copy()
         base_row[self.src] = np.inf
         self._bw_vec = np.tile(base_row, (self.U, 1))          # (U, N)
-        self._qpack = np.tile(self._proto._qpack[None],
-                              (self.U, 1, 1, 1))               # (U, M, 2L-1, N)
+        #: lazy bandwidth store: when set to (scale, factors) the DENSE
+        #: ``_bw_vec`` contents are stale and the true store is the
+        #: deferred product ``scale[:, None] * factors`` (src column inf).
+        #: The dense-tick gate reads columns and the resolve subset reads
+        #: rows, so the full (U, N) multiply — the single biggest memory
+        #: pass of a steady tick — only happens if a dense consumer
+        #: (checkpoint, partial ingest, slice reprice) actually shows up.
+        #: All accessors (``_bw_dense``/``_bw_rows``/``_bw_cols``) produce
+        #: values bit-identical to the eager multiply.
+        self._bw_lazy: Optional[Tuple[np.ndarray, np.ndarray]] = None
         self._masked = np.zeros((self.U, N), dtype=bool)
         self._stale = np.zeros(self.U, dtype=bool)   # deferred requants
         self._user_state = np.full(self.U, -1, dtype=np.int64)
@@ -383,7 +459,14 @@ class Population:
         self._inc_place = np.full((self.U, L), -1, dtype=np.int32)
         self._inc_exit = np.full(self.U, -1, dtype=np.int32)
         self._inc_energy = np.full(self.U, np.inf)
-        self._solutions: List[Optional[Solution]] = [None] * self.U
+        self._solutions = np.full(self.U, None, dtype=object)
+        #: whether any Solution object is live (lets the incumbent-only
+        #: recording path skip the (U,) object-array clear entirely)
+        self._any_solutions = False
+        #: uniform-incumbent flag: the (exit, placement) every user is
+        #: solved with, or None when unknown/mixed — lets the dense
+        #: hysteresis gate skip the per-tick grouping key build
+        self._inc_single: Optional[Tuple] = None
 
         # telemetry sanitization (see :class:`TelemetryPolicy`): quarantine
         # flags and frozen-sensor counters are always allocated (cheap);
@@ -425,8 +508,32 @@ class Population:
         self._mask_count = 0
         self._timing = bool(timing)
         self._relax_executor = None      # lazy 1-thread pool (streaming)
+        #: wall seconds of the most recent relaxation launch — the
+        #: streaming pipeline's adaptive-overlap signal (see
+        #: ``online.run_arrays``); always recorded, timing flag or not
+        self._last_relax_s = 0.0
+        self._ingest_backend = fused_ingest
+        self._quant_consts: Optional[QuantConsts] = None
+        #: tighten-cell dedupe for the batched fallback (see
+        #: ``_tighten_batch``): relaxed single-mode states keyed by
+        #: (round, signature@delta_eff, mask) plus the per-round base
+        #: steepness stack.  Marginal users drift within a handful of
+        #: quantization cells, so steady-state ticks hit these caches and
+        #: the whole tighten herd costs scans, not relaxations.
+        self._tighten_cache: Dict[Tuple[int, bytes, bytes],
+                                  _CohortState] = {}
+        self._tighten_base: Dict[int, np.ndarray] = {}
         self.stats = PopulationStats()
-        self._assign_states(np.arange(self.U))
+        # uniform cold start: every user holds the proto pack and an empty
+        # failure mask, which is ONE cohort state — register it directly
+        # instead of encoding/hashing U identical signature rows (the 1e7
+        # cold start used to spend ~50 s here)
+        self._enc_w = self.M * (2 * L - 1) * N
+        self._stq_enc = np.empty((0, self._enc_w), dtype=np.int16)
+        stq0 = self._proto._qpack.copy()
+        mask0 = np.zeros(N, dtype=bool)
+        self._user_state[:] = self._add_state(self._state_key(stq0, mask0),
+                                              stq0, mask0)
 
     # ------------------------------------------------------------ properties
     @property
@@ -485,6 +592,7 @@ class Population:
         users = (np.arange(self.U) if users is None
                  else np.asarray(users, dtype=np.int64))
         Us = len(users)
+        self._bw_dense()      # partial write + last-known-good reads below
         arr = _validate_population_bps(bps, Us, self.N)
         vec = np.empty((Us, self.N))
         vec[:] = arr if arr.ndim == 2 else \
@@ -529,12 +637,19 @@ class Population:
             # loud default: a corrupt fading scale must not reach the store
             # (factors are orchestrator-owned link patterns, not telemetry)
             _validate_bps_values(scale, what="ingest_factors scale")
-            np.multiply(scale[:, None], factors, out=self._bw_vec)
-            self._bw_vec[:, self.src] = np.inf   # self-loop (Sec. II-A)
+            if not requant:
+                # defer the (U, N) product: the gate and resolve subset
+                # read through the lazy accessors (see ``_bw_lazy``)
+                self._bw_lazy = (scale, factors)
+            else:
+                np.multiply(scale[:, None], factors, out=self._bw_vec)
+                self._bw_vec[:, self.src] = np.inf   # self-loop (Sec. II-A)
+                self._bw_lazy = None
         else:
             # screened path: stage the product so quarantined/clamped rows
             # can be substituted before they land in the store — values are
             # bit-identical to the fused multiply
+            self._bw_dense()       # substitution reads last-known-good rows
             vec = scale[:, None] * factors
             vec[:, self.src] = np.inf
             self._screen_rows(np.arange(self.U), vec)
@@ -604,46 +719,78 @@ class Population:
         if bad_user.any():
             np.copyto(vec, self._bw_vec[users], where=bad_user[:, None])
 
+    # ---------------------------------------------- lazy bandwidth accessors
+    def _bw_dense(self) -> np.ndarray:
+        """The dense (U, N) bandwidth store, materializing a pending lazy
+        product first (one fused multiply — identical to the eager path)."""
+        lz = self._bw_lazy
+        if lz is not None:
+            sc, fac = lz
+            np.multiply(sc[:, None], fac, out=self._bw_vec)
+            self._bw_vec[:, self.src] = np.inf
+            self._bw_lazy = None
+        return self._bw_vec
+
+    def _bw_rows(self, users: np.ndarray) -> np.ndarray:
+        """Selected users' bandwidth rows — a gather-then-multiply under a
+        pending lazy store (per-element IEEE ops identical to multiplying
+        first and gathering after), a plain row gather otherwise."""
+        lz = self._bw_lazy
+        if lz is None:
+            return self._bw_vec[users]
+        sc, fac = lz
+        out = sc[users][:, None] * fac[users]
+        out[:, self.src] = np.inf
+        return out
+
+    def _bw_cols(self):
+        """Whole-store column view for ``eval_config_users`` (it touches
+        only ``bwv[:, n]`` / ``len``): the dense array, or a zero-copy
+        column materializer over the lazy (scale, factors) pair."""
+        lz = self._bw_lazy
+        if lz is None:
+            return self._bw_vec
+        return _LazyBwCols(lz[0], lz[1], self.src)
+
     def _refresh_states(self, users: np.ndarray) -> None:
         """Flush deferred requantizations (lazy ingest) for these users."""
         sel = users[self._stale[users]]
         if len(sel):
             t0 = time.perf_counter() if self._timing else 0.0
-            self._requant_users(sel, self._bw_vec[sel])
+            self._requant_users(sel, self._bw_rows(sel))
             self._stale[sel] = False
             if self._timing:
                 self.stats.t_ingest_ms += (time.perf_counter() - t0) * 1e3
 
+    def _quant(self) -> QuantConsts:
+        """The fused requantizer's constants bundle — snapshots the proto
+        packs, so compute-slice repricings must drop it (they rebuild the
+        packs); backhaul repricings are bandwidth-only and keep it."""
+        c = self._quant_consts
+        if c is None:
+            p = self._proto
+            c = self._quant_consts = QuantConsts(
+                bits_pack=p._bits_pack, C_pack=p._C_pack,
+                mask_pack=p._mask_pack, load_pack=p._load_pack,
+                modes=tuple(p._modes), gamma=self.gamma,
+                delta=self.req.delta)
+        return c
+
     def _requant_users(self, users: np.ndarray,
                        vec: np.ndarray) -> np.ndarray:
-        Us = len(users)
-        G = self.gamma
-        bwm = np.where(vec > 0, vec, np.nan)                   # (Us, N)
-        sc = self._proto._bits_pack[None] / bwm[:, None, :]    # (Us, 2L-1, N)
-        sc += self._proto._C_pack[None]
-        np.multiply(sc, G, out=sc)
-        sc /= self.req.delta
-        valid = np.isfinite(sc)
-        valid &= self._proto._mask_pack[None]
-        valid &= self._proto._load_pack[None] <= vec[:, None, :]
-        # quantize straight into the (Us, M, 2L-1, N) user-major layout —
-        # identical elementwise formulas to plan.update_uplinks, minus its
-        # (M, D, ...) staging buffer and the moveaxis copy
-        stq = np.empty((Us, self.M) + sc.shape[1:])
-        for mi, mode in enumerate(self._proto._modes):
-            q = stq[:, mi]
-            _quant_raw(sc, mode, out=q)
-            ok = q <= G
-            ok &= valid
-            np.copyto(q, np.inf, where=~ok)
-
-        old = self._qpack[users]
-        same = (stq == old).reshape(Us, -1).all(axis=1)
-        changed = ~same
+        """Fused requantize of the given users' bandwidth rows: ONE
+        quantize->int16->signature launch (``kernels/ee_gate/population``,
+        elementwise identical to ``plan.update_uplinks`` + the signature
+        encode), compared against a gather from the per-state signature
+        table — users whose encoding moved re-key through
+        ``_assign_states`` with the fresh rows, everyone else costs one
+        int16 row compare."""
+        enc = quant_signature(vec, self._quant(),
+                              backend=self._ingest_backend)
+        old = self._stq_enc[self._user_state[users]]
+        changed = (enc != old).any(axis=1)
         if changed.any():
-            ch = users[changed]
-            self._qpack[ch] = stq[changed]
-            self._assign_states(ch)
+            self._assign_states(users[changed], enc=enc[changed])
         self.stats.quant_changed += int(np.count_nonzero(changed))
         return changed
 
@@ -683,29 +830,38 @@ class Population:
         so model those as separate cohorts.
         """
         self._proto.update_slice(frac)
+        t0 = time.perf_counter() if self._timing else 0.0
         # the proto rebuilt its packs and base tensors in place or replaced
         # them; every cached cohort state quantized against the old compute
         # terms is now stale (incl. fast tables), the memoized exact
         # energies moved with the compute terms, and the fallback plan's
-        # compute base as well
+        # compute base as well.  Capture the pre-slice signatures first —
+        # the quant_changed counter compares against them, and the table
+        # (their backing store) is about to clear.
+        old_enc = self._stq_enc[self._user_state]
         self._states = []
         self._state_ids = {}
         self._pinned = set()
         self._cfg_energy = {}
         self._fallback_plan = None
-        # requantize every user's pack against the new compute terms (the
-        # ingest re-keys the users whose pack moved), then re-key the rest
-        # — their packs kept their values but the state table was cleared.
-        # This replays the stored (already-screened) bandwidths, so it
-        # must not look like a telemetry tick: quarantine/stuck state and
-        # counters stay untouched.
-        self._suspend_telemetry = True
-        try:
-            self.ingest(self._bw_vec.copy())
-        finally:
-            self._suspend_telemetry = False
+        self._quant_consts = None
+        self._tighten_cache = {}
+        self._tighten_base = {}
+        self._stq_enc = np.empty((0, self._enc_w), dtype=np.int16)
+        # requantize every user against the new compute terms in one fused
+        # launch and re-key everyone — the stored bandwidths were already
+        # screened, so this must not look like a telemetry tick
+        # (quarantine/stuck state and counters stay untouched)
+        enc = quant_signature(self._bw_dense(), self._quant(),
+                              backend=self._ingest_backend)
+        self.stats.ingests += 1
+        self.stats.uplink_updates += self.U
+        self.stats.quant_changed += \
+            int(np.count_nonzero((enc != old_enc).any(axis=1)))
+        self._assign_states(np.arange(self.U), enc=enc)
         self._stale[:] = False
-        self._assign_states(np.arange(self.U))
+        if self._timing:
+            self.stats.t_ingest_ms += (time.perf_counter() - t0) * 1e3
         return self
 
     def update_backhaul(self, scale: Union[float, np.ndarray]
@@ -715,49 +871,70 @@ class Population:
         pricing delta for shared links.
 
         The packed uplink requantizer constants are bandwidth-independent,
-        so every user's quantized pack keeps its value verbatim (no ingest
-        pass); but the proto's base steepness stack moved on the non-source
-        entries, so the cohort-state table is cleared and every user
-        re-keyed against it.  The memoized exact energies survive — Eq. (2)
-        has no bandwidth term — which is what keeps repeated link repricing
-        cheap for the fixed-point loop.
+        so every user's quantized pack keeps its value verbatim — and
+        therefore so does the whole (pack, mask) partition: the cohort
+        states are rebuilt IN PLACE (fresh steepness/init tensors against
+        the repriced base; DP grids, candidate caches and fast tables
+        dropped) with their ids, signature keys, user assignment and
+        pinned set all preserved.  No per-user pass at all — link
+        repricing costs O(states), not O(users), which is what keeps the
+        congestion fixed-point loop cheap at population scale.  The
+        memoized exact energies survive too — Eq. (2) has no bandwidth
+        term.
         """
         self._proto.update_backhaul(scale)
-        self._states = []
-        self._state_ids = {}
-        self._pinned = set()
+        for s in self._states:
+            s.steep, s.grid = self._state_tensors(s.stq, s.mask)
+            s.dps = None
+            s.cand = {}
+            s.fast = None
         self._fallback_plan = None
-        self._assign_states(np.arange(self.U))
+        # tighten states quantize the repriced non-source links too
+        self._tighten_cache = {}
+        self._tighten_base = {}
         return self
 
     # ------------------------------------------------------- state registry
-    def _assign_states(self, users: np.ndarray) -> None:
+    def _assign_states(self, users: np.ndarray,
+                       enc: Optional[np.ndarray] = None) -> None:
         """(Re)key the given users' (quantized pack, mask) signatures into
-        cohort states, materializing states never seen before."""
+        cohort states, materializing states never seen before — touching
+        ONLY the given rows and merging into the existing table (the
+        stale-subset re-key; callers pass exactly the users whose
+        signature may have moved).
+
+        ``enc`` is the users' freshly-quantized (Us, M*K2*N) int16 pack
+        encoding (the fused ingest kernel's output); None re-keys the
+        users' CURRENT packs (mask flips), read back from the per-state
+        signature table — per-user packs are never stored, a user's pack
+        always equals their state's."""
         Us = len(users)
         if Us == 0:
             return
         old_sids = self._user_state[users]       # bounded-resume hints
-        M, K2, N = self.M, 2 * self.L - 1, self.N
-        enc = np.empty((Us, M * K2 * N + N), dtype=np.int16)
-        q = self._qpack[users].reshape(Us, -1)
-        np.copyto(enc[:, :M * K2 * N], q, casting="unsafe",
-                  where=np.isfinite(q))
-        enc[:, :M * K2 * N][~np.isfinite(q)] = -1
-        enc[:, M * K2 * N:] = self._masked[users]
-        rows = np.ascontiguousarray(enc)
+        if enc is None:
+            enc = self._stq_enc[old_sids]
+        W = self._enc_w
+        rows = np.empty((Us, W + self.N), dtype=np.int16)
+        rows[:, :W] = enc
+        rows[:, W:] = self._masked[users]
         v = rows.view(np.dtype((np.void, rows.shape[1] * 2))).ravel()
+        K2 = 2 * self.L - 1
+
+        def materialize(j: int) -> int:
+            key = v[j].tobytes()
+            sid = self._state_ids.get(key)
+            if sid is None:
+                stq = _dec_int16(enc[j]).reshape(self.M, K2, self.N)
+                sid = self._add_state(key, stq,
+                                      self._masked[int(users[j])].copy(),
+                                      parent=int(old_sids[j]))
+            return sid
+
         if Us > 1 and bool((v == v[0]).all()):
             # one signature for the whole batch (cold start, uniform
             # scale moves): skip the million-row unique/argsort entirely
-            key = v[0].tobytes()
-            sid = self._state_ids.get(key)
-            if sid is None:
-                u = int(users[0])
-                sid = self._add_state(key, self._qpack[u].copy(),
-                                      self._masked[u].copy(),
-                                      parent=int(old_sids[0]))
-            self._user_state[users] = sid
+            self._user_state[users] = materialize(0)
             if len(self._states) > self.max_states:
                 self._compact_states()
             return
@@ -765,14 +942,7 @@ class Population:
                                      return_inverse=True)
         sids = np.empty(len(uniq), dtype=np.int64)
         for i, j in enumerate(first):
-            key = v[j].tobytes()
-            sid = self._state_ids.get(key)
-            if sid is None:
-                u = int(users[j])
-                sid = self._add_state(key, self._qpack[u].copy(),
-                                      self._masked[u].copy(),
-                                      parent=int(old_sids[j]))
-            sids[i] = sid
+            sids[i] = materialize(int(j))
         self._user_state[users] = sids[inv]
         if len(self._states) > self.max_states:
             self._compact_states()
@@ -791,18 +961,24 @@ class Population:
         enc[M * K2 * N:] = mask
         return enc.tobytes()
 
-    def _add_state(self, key: bytes, stq: np.ndarray,
-                   mask: np.ndarray, parent: int = -1) -> int:
-        """Materialize a cohort state: scatter the pack's source-node
+    def _state_tensors(self, stq: np.ndarray, mask: np.ndarray,
+                       base_steep: Optional[np.ndarray] = None
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        """A state's DP input tensors: scatter the pack's source-node
         rows/cols into a copy of the base steepness stack and rebuild the
         init grid — the exact formulas of ``Plan._apply_qpack``, with
-        ``Plan._quant_state``'s failure masking folded in."""
+        ``Plan._quant_state``'s failure masking folded in.  (Also the
+        backhaul-repricing rebuild: the base stack moved, the pack did
+        not.)  ``base_steep`` swaps in a different-width base — the
+        tighten fallback passes a single-mode delta_eff stack whose pack
+        carries only the main quantizer."""
         proto = self._proto
         L, G, src = self.L, self.gamma, self.src
-        steep = proto._steep.copy()                  # (M, L-1, N, N) base
+        steep = (proto._steep if base_steep is None
+                 else base_steep).copy()             # (M, L-1, N, N) base
         steep[:, :, src, :] = stq[:, :L - 1]
         steep[:, :, :, src] = stq[:, L:]
-        grid = np.full((self.M, self.N, G + 1), np.inf)
+        grid = np.full((stq.shape[0], self.N, G + 1), np.inf)
         d = stq[:, L - 1, :]                         # (M, N) init depths
         mi_i, n_i = np.nonzero(np.isfinite(d) & (d <= G))
         grid[mi_i, n_i, d[mi_i, n_i].astype(np.int64)] = \
@@ -811,10 +987,30 @@ class Population:
             steep[:, :, mask, :] = np.inf
             steep[:, :, :, mask] = np.inf
             grid[:, mask, :] = np.inf
+        return steep, grid
+
+    def _enc_push(self, enc_row: np.ndarray) -> None:
+        """Append a state's int16 signature row to the amortized-growing
+        ``_stq_enc`` table (valid rows = ``len(self._states)``)."""
+        n = len(self._states)
+        cap = len(self._stq_enc)
+        if n > cap:
+            grown = np.empty((max(16, 2 * cap, n), self._enc_w),
+                             dtype=np.int16)
+            grown[:cap] = self._stq_enc
+            self._stq_enc = grown
+        self._stq_enc[n - 1] = enc_row
+
+    def _add_state(self, key: bytes, stq: np.ndarray,
+                   mask: np.ndarray, parent: int = -1) -> int:
+        """Materialize a cohort state (see ``_state_tensors``) and record
+        its int16 signature row."""
+        steep, grid = self._state_tensors(stq, mask)
         sid = len(self._states)
         self._states.append(_CohortState(stq, mask, steep, grid,
                                          parent=parent))
         self._state_ids[key] = sid
+        self._enc_push(_enc_int16(stq).reshape(-1))
         return sid
 
     def _compact_states(self) -> None:
@@ -828,6 +1024,7 @@ class Population:
                 [live, np.fromiter(self._pinned, dtype=np.int64)]))
         remap = {int(s): i for i, s in enumerate(live)}
         self._states = [self._states[int(s)] for s in live]
+        self._stq_enc = self._stq_enc[live]
         self._state_ids = {k: remap[s] for k, s in self._state_ids.items()
                            if s in remap}
         self._user_state = np.searchsorted(live, self._user_state)
@@ -852,7 +1049,7 @@ class Population:
         states = [self._states[int(s)] for s in sids]
         if not states:
             return
-        t0 = time.perf_counter() if self._timing else 0.0
+        t0 = time.perf_counter()
         full: List[_CohortState] = []
         resume: Dict[int, List[Tuple[_CohortState, _CohortState]]] = {}
         if self._bounded:
@@ -881,8 +1078,9 @@ class Population:
             self.stats.prebuilt_states += len(states)
         else:
             self.stats.dp_relaxes += len(states)
+        self._last_relax_s = time.perf_counter() - t0
         if self._timing:
-            self.stats.t_relax_ms += (time.perf_counter() - t0) * 1e3
+            self.stats.t_relax_ms += self._last_relax_s * 1e3
 
     def _resume_hint(self, s: _CohortState
                      ) -> Optional[Tuple[str, _CohortState, int]]:
@@ -936,24 +1134,25 @@ class Population:
         the (D*M, L-1, N, N) stack fits the residency budget, the chunked
         loop when it does not (``REPRO_RELAX_CHUNK_BYTES`` shrinks the
         budget; tiny values force the fallback — see the chunking tests)."""
-        D, M = len(states), self.M
+        Ms = [s.steep.shape[0] for s in states]   # per-state mode counts
+        B = sum(Ms)                               # (tighten states carry 1)
         N, Gp1 = self.N, self.gamma + 1
-        steep = np.concatenate([s.steep for s in states])      # (D*M, ...)
+        steep = np.concatenate([s.steep for s in states])      # (B, ...)
         grid = np.concatenate([s.grid for s in states])
         E = np.broadcast_to(self._proto._ext.E[None],
-                            (D * M,) + self._proto._ext.E.shape)
+                            (B,) + self._proto._ext.E.shape)
         lo = self.depth_window_lo
         if self.backend == "mesh":
             hist, par = self._mesh().relax(grid, E, steep, lo)
             self.stats.fused_relaxes += 1
         else:
             chunk = relax_chunk_rows(N * N * Gp1 * 16)
-            if D * M <= chunk:
+            if B <= chunk:
                 hist, par = self._relax_batch(grid, E, steep, lo)
                 self.stats.fused_relaxes += 1
             else:
                 hists, pars = [], []
-                for start in range(0, D * M, chunk):
+                for start in range(0, B, chunk):
                     sl = slice(start, start + chunk)
                     h, p = self._relax_batch(grid[sl], E[sl], steep[sl], lo)
                     hists.append(h)
@@ -961,9 +1160,11 @@ class Population:
                 hist = np.concatenate(hists)
                 par = np.concatenate(pars)
                 self.stats.chunked_relaxes += 1
-        for i, s in enumerate(states):
-            s.dps = [_BandedArgDP(hist[i * M + mi], par[i * M + mi],
-                                  s.steep[mi]) for mi in range(M)]
+        off = 0
+        for s, m in zip(states, Ms):
+            s.dps = [_BandedArgDP(hist[off + mi], par[off + mi],
+                                  s.steep[mi]) for mi in range(m)]
+            off += m
 
     def _relax_batch(self, grid: np.ndarray, E: np.ndarray,
                      steep: np.ndarray, lo: Optional[int]
@@ -1113,18 +1314,34 @@ class Population:
         mi_ = np.zeros(Us, dtype=np.int64)
         used_ceil = np.zeros(Us, dtype=bool)
         fb_mask = ~s0.found & (self.max_tighten > 0)
-        for i in np.nonzero(fb_mask)[0]:
-            fb[i] = self._fallback_solve(bwv[i], state.mask)
-        rest = np.nonzero(~fb_mask)[0]
-        if self.quantize != "ceil" and len(rest):
-            bound = np.where(s0.found[rest], s0.energy[rest], np.nan)
+        fb_idx = np.nonzero(fb_mask)[0]
+        no_exit = not adm
+        tb = None
+        if len(fb_idx):
+            # batched Plan.solve tighten loop (round 0 already failed via
+            # the s0 scan above — bit-exact, same dp, same scan contract)
+            tF = time.perf_counter() if self._timing else 0.0
+            self.stats.fallbacks += len(fb_idx)
+            if not no_exit:
+                tb = self._tighten_batch(bwv[fb_idx], state)
+            if self._timing:
+                self.stats.t_post_fallback_ms += \
+                    (time.perf_counter() - tF) * 1e3
+        s1 = None
+        if self.quantize != "ceil" and (len(fb_idx) < Us or tb is not None):
+            # one ceil rescue scan for everyone: the non-fallback users
+            # bounded by their main-pass energies (the old subset scan),
+            # the fallback users bounded by their tighten energies —
+            # exactly Plan.solve's ``_scan(dps[1], best)``
+            bound = np.where(s0.found, s0.energy, np.nan)
+            if tb is not None:
+                bound[fb_idx] = np.where(tb.found, tb.energy, np.nan)
             s1 = scan_state_users(
                 state.dps[1], self.profile, adm,
                 lambda k, j: self._candidate(state, 1, k, j),
-                self._eval_users_factory(bwv[rest]), len(rest),
-                dist_tol=self._dist_tol, bound_energy=bound)
-            take = s1.found & (~s0.found[rest] | (s1.energy < s0.energy[rest]))
-            t = rest[take]
+                ev, Us, dist_tol=self._dist_tol, bound_energy=bound)
+            take = s1.found & (~s0.found | (s1.energy < energy)) & ~fb_mask
+            t = np.nonzero(take)[0]
             exit_[t] = s1.exit[take]
             cand_[t] = s1.cand[take]
             mi_[t] = 1
@@ -1133,10 +1350,12 @@ class Population:
             e_comp[t] = s1.e_comp[take]
             e_comm[t] = s1.e_comm[take]
             used_ceil[t] = True
-        for i in rest:
+        for i in np.nonzero(~fb_mask)[0]:
             if exit_[i] >= 0:
                 cfgs[i] = self._candidate(state, int(mi_[i]), int(exit_[i]),
                                           int(cand_[i]))[0]
+        if len(fb_idx):
+            self._tighten_assemble(fb, fb_idx, tb, s1, state, no_exit)
         return cfgs, energy, lat, e_comp, e_comm, used_ceil, exit_, fb
 
     def _scan_state(self, state: _CohortState, mi: int, network: Network,
@@ -1165,6 +1384,7 @@ class Population:
         plan cost microseconds where a fresh Plan build costs milliseconds
         — and users with no feasible placement hit this path every tick
         they stay dirty."""
+        t0 = time.perf_counter() if self._timing else 0.0
         plan = self._fallback_plan
         if plan is None:
             plan = self._fallback_plan = Plan(
@@ -1181,7 +1401,168 @@ class Population:
         for n in np.nonzero(have & ~mask)[0]:
             plan.unmask_node(int(n))
         self.stats.fallbacks += 1
-        return plan.solve()
+        sol = plan.solve()
+        if self._timing:
+            self.stats.t_post_fallback_ms += \
+                (time.perf_counter() - t0) * 1e3
+        return sol
+
+    def _tighten_consts(self, delta_eff: float) -> QuantConsts:
+        """Single-mode constants bundle for one tighten round: the same
+        bandwidth-independent packs as the base requantizer, quantized
+        against ``delta_eff`` with only the main quantizer mode."""
+        base = self._quant()
+        return QuantConsts(bits_pack=base.bits_pack, C_pack=base.C_pack,
+                           mask_pack=base.mask_pack,
+                           load_pack=base.load_pack,
+                           modes=(self.quantize,), gamma=self.gamma,
+                           delta=float(delta_eff))
+
+    def _tighten_state(self, round_: int, enc_row: np.ndarray,
+                       mask: np.ndarray, delta_eff: float) -> _CohortState:
+        """A (relaxable) single-mode cohort state for one tighten cell:
+        non-source steepness from a per-round ``build_feasible_graph`` at
+        ``delta_eff`` (shared by every user — those links' bandwidths are
+        cohort-wide), source rows/cols and init depths scattered from the
+        user pack, exactly ``Plan._feasible``'s tensors.  Cached by
+        (round, signature, mask) OUTSIDE the main state table — a
+        tightened signature must never collide with a base-delta key."""
+        key = (round_, enc_row.tobytes(), mask.tobytes())
+        st = self._tighten_cache.get(key)
+        if st is not None:
+            return st
+        base = self._tighten_base.get(round_)
+        if base is None:
+            self._proto._flush_ext()
+            fg = build_feasible_graph(self._proto._ext, self.gamma,
+                                      lam=self.lam, quantize=self.quantize,
+                                      delta_eff=delta_eff)
+            base = self._tighten_base[round_] = fg.steep[None].copy()
+        stq = _dec_int16(enc_row).reshape(1, 2 * self.L - 1, self.N)
+        steep, grid = self._state_tensors(stq, mask, base_steep=base)
+        st = _CohortState(stq, mask, steep, grid)
+        if len(self._tighten_cache) >= 8192:   # adversarial-churn bound
+            self._tighten_cache.clear()
+        self._tighten_cache[key] = st
+        return st
+
+    def _tighten_batch(self, bwv_fb: np.ndarray,
+                       state: _CohortState) -> "_TightenResult":
+        """``Plan.solve``'s tighten loop batched over every no-feasible
+        user of one cohort state.  Per round: ONE fused requantize of the
+        still-unsolved rows at the round's ``delta_eff``, dedupe into
+        tighten cells, ONE fused relaxation of the unseen cells, and one
+        vectorized scan per cell — per-user results bit-exact vs the
+        scalar per-user ``Plan.solve`` replay (rounds are per-user
+        independent, the dp for a signature is unique, and the scan
+        contract is the PR-5 one).  Steady-state churn revisits the same
+        cells, so the cache turns the whole herd into pure scans."""
+        F = len(bwv_fb)
+        res = _TightenResult(F, self.max_tighten)
+        adm = self._proto._admissible
+        alive = np.arange(F)
+        delta_eff = self.req.delta
+        for r in range(1, self.max_tighten + 1):
+            delta_eff *= self.tighten_factor    # Plan's own accumulation
+            if not len(alive):
+                break
+            enc = quant_signature(bwv_fb[alive],
+                                  self._tighten_consts(delta_eff),
+                                  backend=self._ingest_backend)
+            enc = np.ascontiguousarray(enc)
+            v = enc.view(np.dtype((np.void,
+                                   enc.shape[1] * enc.dtype.itemsize)))
+            _uniq, inv = np.unique(v.ravel(), return_inverse=True)
+            groups = [np.nonzero(inv == g)[0] for g in range(len(_uniq))]
+            sts = [self._tighten_state(r, enc[g[0]], state.mask, delta_eff)
+                   for g in groups]
+            fresh = [st for st in sts if st.dps is None]
+            if fresh:
+                self._relax_full(fresh)
+            still = []
+            for st, g in zip(sts, groups):
+                members = alive[g]
+                sc = scan_state_users(
+                    st.dps[0], self.profile, adm,
+                    lambda k, j, st=st: self._candidate(st, 0, k, j),
+                    self._eval_users_factory(bwv_fb[members]), len(members),
+                    dist_tol=self._dist_tol)
+                hit = sc.found
+                hu = members[hit]
+                res.found[hu] = True
+                res.energy[hu] = sc.energy[hit]
+                res.latency[hu] = sc.latency[hit]
+                res.e_comp[hu] = sc.e_comp[hit]
+                res.e_comm[hu] = sc.e_comm[hit]
+                res.exit[hu] = sc.exit[hit]
+                res.rounds[hu] = r
+                res.delta_eff[hu] = delta_eff
+                for p, k, c in zip(hu, sc.exit[hit], sc.cand[hit]):
+                    res.cfgs[p] = self._candidate(st, 0, int(k),
+                                                  int(c))[0]
+                still.append(members[~hit])
+            alive = (np.concatenate(still) if still
+                     else np.empty(0, dtype=np.int64))
+        if len(alive):
+            # Plan multiplies once more after the last failed round; the
+            # ceil rescue (if it lands) reports that final delta_eff
+            res.delta_eff[alive] = delta_eff * self.tighten_factor
+        return res
+
+    def _tighten_assemble(self, fb: List[Optional[Solution]],
+                          fb_idx: np.ndarray,
+                          tb: Optional["_TightenResult"], s1,
+                          state: _CohortState, no_exit: bool) -> None:
+        """Fold the batched tighten results and the shared ceil-rescue
+        scan into per-user ``Solution``s shaped like ``Plan.solve``'s
+        (config/eval bit-identical; meta carries the same tighten_rounds /
+        delta_eff / used_ceil_pass bookkeeping)."""
+        base_meta = {"gamma": self.gamma, "quantize": self.quantize,
+                     "backend": self._plan_backend, "warm": True,
+                     "population": True}
+        if no_exit:
+            m = {**base_meta, "tighten_rounds": 0,
+                 "reason": "no exit meets alpha (3c)"}
+            for i in fb_idx:
+                fb[i] = Solution(config=None, eval=None, solve_time=0.0,
+                                 solver="fin", meta=m)
+            return
+        sigma = self.req.sigma
+        for p, i in enumerate(fb_idx):
+            meta = {**base_meta, "tighten_rounds": int(tb.rounds[p])}
+            ceil_take = (s1 is not None and s1.found[i]
+                         and (not tb.found[p]
+                              or s1.energy[i] < tb.energy[p]))
+            if ceil_take:
+                k = int(s1.exit[i])
+                cfg = self._candidate(state, 1, k, int(s1.cand[i]))[0]
+                ev = ConfigEval(energy=float(s1.energy[i]),
+                                energy_comp=float(s1.e_comp[i]),
+                                energy_comm=float(s1.e_comm[i]),
+                                latency=float(s1.latency[i]),
+                                accuracy=self.profile.accuracy_of(k),
+                                feasible=True, violations=[])
+                meta["used_ceil_pass"] = True
+            elif tb.found[p]:
+                k = int(tb.exit[p])
+                cfg = tb.cfgs[p]
+                ev = ConfigEval(energy=float(tb.energy[p]),
+                                energy_comp=float(tb.e_comp[p]),
+                                energy_comm=float(tb.e_comm[p]),
+                                latency=float(tb.latency[p]),
+                                accuracy=self.profile.accuracy_of(k),
+                                feasible=True, violations=[])
+            else:
+                fb[i] = Solution(config=None, eval=None, solve_time=0.0,
+                                 solver="fin",
+                                 meta={**meta,
+                                       "reason": "no feasible path"})
+                continue
+            ev._energy_rate = sigma * ev.energy
+            meta["delta_eff"] = float(tb.delta_eff[p])
+            meta["n_feasible_states"] = 1
+            fb[i] = Solution(config=cfg, eval=ev, solve_time=0.0,
+                             solver="fin", meta=meta)
 
     def _solve_one(self, state: _CohortState, bw_row: np.ndarray
                    ) -> Tuple[Optional[Config], Optional[ConfigEval], dict]:
@@ -1231,6 +1612,30 @@ class Population:
         return self.solve_finish(
             self.solve_begin(users, build_solutions=build_solutions))
 
+    def attach_many(self, bps: Union[float, np.ndarray, None] = None,
+                    users: Optional[np.ndarray] = None, *,
+                    build_solutions: bool = False) -> "Population":
+        """Bulk cold-start attach: land the given users' source-link
+        bandwidths (scalar / (Us,) / (Us, N), like :meth:`ingest`; None
+        keeps the base-topology uplink every user is born with) and build
+        their signatures, cohort states, fast tables and incumbents in one
+        grouped pass — signature hashing runs only over the rows whose
+        encoding moved off the shared cold-start state, the newborn states
+        relax in one fused launch, and the incumbents land through the
+        shared fast tables with no per-user Python.  Defaults to
+        ``build_solutions=False`` (the incumbent arrays carry the result;
+        at 1e7 users materializing U Solution objects is the cold start).
+
+        Returns ``self`` — ``Population(...).attach_many(rates)`` is the
+        whole cold start.
+        """
+        users = (np.arange(self.U) if users is None
+                 else np.asarray(users, dtype=np.int64))
+        if bps is not None:
+            self.ingest(bps, users=users, requant=False)
+        self.solve(users, build_solutions=build_solutions)
+        return self
+
     def solve_begin(self, users: Optional[np.ndarray] = None,
                     build_solutions: bool = True, *,
                     stream: bool = False) -> "_PendingSolve":
@@ -1252,6 +1657,7 @@ class Population:
         if Us == 0:
             return pend
         self._refresh_states(users)
+        self._last_relax_s = 0.0     # this tick's relax only (EWMA signal)
         sids = self._user_state[users]
         uniq_sids = np.unique(sids)
         need = [int(s) for s in uniq_sids if self._states[int(s)].dps is None]
@@ -1265,7 +1671,7 @@ class Population:
         # unique (state, bandwidth) groups: identical inputs, one solve
         rows = np.empty((Us, 1 + self.N), dtype=np.float64)
         rows[:, 0] = sids
-        rows[:, 1:] = self._bw_vec[users]
+        rows[:, 1:] = self._bw_rows(users)
         v = np.ascontiguousarray(rows).view(
             np.dtype((np.void, rows.shape[1] * 8))).ravel()
         _, first, order, bounds = _group_runs(v)
@@ -1342,7 +1748,7 @@ class Population:
                 e, ec, em, _lat, _v = eval_config_users(
                     prof, self.req, self.network0.nodes, self._proto._bw,
                     self._proto._compute, self.src, cfgs[p],
-                    self._bw_vec[:1],
+                    self._bw_rows(np.arange(1)),
                     check_aggregate_load=self.check_aggregate_load)
                 ent = self._cfg_energy[keys[p]] = (e, ec, em)
             return ent
@@ -1405,6 +1811,7 @@ class Population:
         (``_scan_state_group``); both are bit-identical to the scalar
         per-group post-pass.
         """
+        tA = time.perf_counter() if self._timing else 0.0
         reps = users[first]
         rep_sids = sids[first]
         uniq_s, _f, s_order, s_bounds = _group_runs(rep_sids)
@@ -1429,7 +1836,7 @@ class Population:
                     tasks.append(cfg)
                     task_rpos.append([])
                 task_rpos[r].append(rpos)
-        bw_reps = self._bw_vec[reps] if bw is None else bw[first]
+        bw_reps = self._bw_rows(reps) if bw is None else bw[first]
         nR = len(reps)
         violM = np.ones((len(tasks), nR), dtype=bool)
         latM = np.empty((len(tasks), nR))
@@ -1442,6 +1849,10 @@ class Population:
                 bw_reps[cols], check_aggregate_load=self.check_aggregate_load)
             violM[r, cols] = viol
             latM[r, cols] = lat
+        if self._timing:
+            # shared-table machinery: fast-table builds + the stacked
+            # first-candidate feasibility evaluations
+            self.stats.t_post_fast_ms += (time.perf_counter() - tA) * 1e3
 
         base_meta = {"gamma": self.gamma, "quantize": self.quantize,
                      "tighten_rounds": 0, "backend": self.backend,
@@ -1499,8 +1910,12 @@ class Population:
                                            dt_share, build_solutions)
                 continue
             # general path: full vectorized scan for this state's reps
+            tS = time.perf_counter() if self._timing else 0.0
             cfgs, energy, lat, e_comp, e_comm, used_ceil_a, exit_, fb = \
                 self._scan_state_group(state, bw_reps[rpos])
+            if self._timing:
+                self.stats.t_post_scan_ms += \
+                    (time.perf_counter() - tS) * 1e3
             for pi, rp in enumerate(rpos):
                 members = users[order[bounds[rp]:bounds[rp + 1]]]
                 if fb[pi] is not None:
@@ -1532,6 +1947,21 @@ class Population:
                 else:
                     self._record_fast(members, cfg, float(energy[pi]))
 
+    def _note_incumbent(self, members: np.ndarray,
+                        cfg: Optional[Config]) -> None:
+        """Maintain the uniform-incumbent flag across a recording: a
+        whole-cohort record (re)establishes uniformity, a partial record
+        keeps it only when it installs the same configuration."""
+        if cfg is None:
+            if len(members) == self.U or self._inc_single is not None:
+                self._inc_single = None
+            return
+        key = (cfg.final_exit, tuple(int(n) for n in cfg.placement))
+        if len(members) == self.U:
+            self._inc_single = key
+        elif self._inc_single is not None and self._inc_single != key:
+            self._inc_single = None
+
     def _record_fast(self, members: np.ndarray, cfg: Config,
                      energy: float) -> None:
         """Incumbent-arrays-only recording (build_solutions=False path)."""
@@ -1541,8 +1971,9 @@ class Population:
         self._inc_place[members, nb:] = -1
         self._inc_exit[members] = cfg.final_exit
         self._inc_energy[members] = energy
-        for u in members:
-            self._solutions[u] = None
+        if self._any_solutions:
+            self._solutions[members] = None
+        self._note_incumbent(members, cfg)
 
     def _record_group(self, members: np.ndarray, cfg: Optional[Config],
                       ev: Optional[ConfigEval], meta: dict, dt: float,
@@ -1558,10 +1989,14 @@ class Population:
             self._inc_place[members, nb:] = -1
             self._inc_exit[members] = cfg.final_exit
             self._inc_energy[members] = ev.energy
-        sol = Solution(config=cfg, eval=ev, solve_time=dt, solver="fin",
-                       meta=meta) if build_solutions else None
-        for u in members:
-            self._solutions[u] = sol
+        if build_solutions:
+            self._solutions[members] = Solution(
+                config=cfg, eval=ev, solve_time=dt, solver="fin",
+                meta=meta)
+            self._any_solutions = True
+        elif self._any_solutions:
+            self._solutions[members] = None
+        self._note_incumbent(members, cfg)
 
     # -------------------------------------------------------------- frontier
     def frontiers(self, users: np.ndarray, *,
@@ -1595,7 +2030,7 @@ class Population:
         for gi in range(len(uniq_s)):
             pos = s_order[s_bounds[gi]:s_bounds[gi + 1]]
             state = self._states[int(uniq_s[gi])]
-            bwv = self._bw_vec[users[pos]]
+            bwv = self._bw_rows(users[pos])
             cfgs, energy, lat, e_comp, e_comm, _used_ceil, exit_, fb = \
                 self._scan_state_group(state, bwv)
             # candidate rows in the solver's scan order (exit asc, quantizer
@@ -1661,6 +2096,7 @@ class Population:
         next tick's hysteresis gate and migration accounting run against
         what is actually deployed."""
         users = np.asarray(users, dtype=np.int64)
+        self._inc_single = None      # externally mixed incumbents
         for u, cfg, e in zip(users, cfgs, energies):
             self._solved[u] = True
             if cfg is None:
@@ -1692,7 +2128,24 @@ class Population:
         views, the grouping key is radix-sorted int64 (one all-equal
         compare in the steady single-config state) and a single-group
         cohort reads the bandwidth store with zero per-user gathers.
+        When the uniform-incumbent flag is set (every user solved with one
+        configuration — the steady state at scale) even the grouping-key
+        build is skipped: one stacked evaluation against the bandwidth
+        store, results bit-identical to the single-group general path.
         """
+        if users is None and self._inc_single is not None:
+            k, place_t = self._inc_single
+            place = list(place_t)
+            cfg = Config(placement=place, final_exit=k)
+            e_sc, _lat, viol = self._eval_config_users(
+                cfg, self._bw_cols())
+            feas = ~viol
+            energy = np.full(self.U, e_sc)
+            if self._mask_count > 0:
+                dead = self._masked[:, place].any(axis=1)
+                feas[dead] = False
+                energy[dead] = np.inf
+            return np.zeros(self.U, dtype=bool), feas, energy
         whole = users is None
         if whole:
             exit_all = self._inc_exit
@@ -1710,6 +2163,47 @@ class Population:
         any_no = bool(no_inc.any())
         if any_no and no_inc.all():
             return no_inc, feas, energy
+        # pivot-majority fast path (dense gate at scale): sample the modal
+        # incumbent, compare positionally (L+1 cheap int passes — no int64
+        # key build, no radix sort), evaluate the pivot config ONCE over
+        # the full bandwidth store and re-run only the disagreeing rows
+        # through the grouped path below via a subset recursion.  Values
+        # are elementwise identical to the grouped evaluation: per-user
+        # terms never depend on the grouping, only on the (config, row).
+        if whole and Us >= 4096:
+            samp = np.arange(0, Us, max(1, Us // 31))
+            srows = np.empty((len(samp), 1 + self.L), dtype=np.int32)
+            srows[:, 0] = np.where(no_inc[samp], -2, exit_all[samp])
+            srows[:, 1:] = place_all[samp]
+            sv = np.ascontiguousarray(srows).view(
+                np.dtype((np.void, srows.shape[1] * 4))).ravel()
+            uniq, counts = np.unique(sv, return_counts=True)
+            pj = int(samp[np.nonzero(sv == uniq[np.argmax(counts)])[0][0]])
+            pk = int(exit_all[pj])
+            if pk >= 0 and solved[pj]:
+                pp = place_all[pj]
+                neq = exit_all != pk
+                for i in range(self.L):
+                    neq |= place_all[:, i] != pp[i]
+                neq |= no_inc
+                idx = np.nonzero(neq)[0]
+                if len(idx) * 8 <= Us:
+                    nb = self.profile.exits[pk].block + 1
+                    place = [int(n) for n in pp[:nb]]
+                    cfg = Config(placement=place, final_exit=pk)
+                    e_sc, _lat, viol = self._eval_config_users(
+                        cfg, self._bw_cols())
+                    feas = ~viol
+                    energy = np.full(Us, e_sc)
+                    if self._mask_count > 0:
+                        dead = self._masked[:, place].any(axis=1)
+                        feas[dead] = False
+                        energy[dead] = np.inf
+                    if len(idx):
+                        _, sub_f, sub_e = self.evaluate_incumbents(idx)
+                        feas[idx] = sub_f
+                        energy[idx] = sub_e
+                    return no_inc, feas, energy
         # group by incumbent configuration; an injective radix-sortable
         # int64 key (digits = shifted exit/placement columns, base N+2
         # covers the -1 padding) replaces the void-row lexsort whenever the
@@ -1746,11 +2240,11 @@ class Population:
             cfg = Config(placement=place, final_exit=k)
             if members is None:
                 gl = users if not whole else None
-                bwv = (self._bw_vec if gl is None
-                       else _BwCols(self._bw_vec, gl))
+                bwv = (self._bw_cols() if gl is None
+                       else self._bw_rows(gl))
             else:
                 gl = users[members] if not whole else members
-                bwv = _BwCols(self._bw_vec, gl)
+                bwv = self._bw_rows(gl)
             e_sc, lat, viol = self._eval_config_users(cfg, bwv)
             f = ~viol
             en = np.full(Us if members is None else len(members), e_sc)
@@ -1789,8 +2283,13 @@ class Population:
         if self._pinned:
             pinned[list(self._pinned)] = True
         d = {
-            "bw_vec": self._bw_vec.copy(),
-            "qpack": _enc_int16(self._qpack),
+            "bw_vec": self._bw_dense().copy(),
+            # a user's pack equals their state's stq (the table keys BY
+            # pack), so the per-user qpack leaf is a signature-table
+            # gather — byte-identical to the historical per-user encode,
+            # keeping old and new checkpoints interchangeable
+            "qpack": self._stq_enc[self._user_state].reshape(
+                self.U, M, K2, N),
             "masked": self._masked.copy(),
             "stale": self._stale.copy(),
             "user_state": self._user_state.copy(),
@@ -1839,12 +2338,15 @@ class Population:
         bw = np.asarray(d["bw_vec"], dtype=np.float64)
         if bw.shape != (U, N):
             raise ValueError(f"bw_vec shape {bw.shape} != ({U}, {N})")
-        qp = _dec_int16(np.asarray(d["qpack"]))
-        if qp.shape != self._qpack.shape:
-            raise ValueError(f"qpack shape {qp.shape} != "
-                             f"{self._qpack.shape}")
+        qp_shape = (U, self.M, 2 * self.L - 1, self.N)
+        qp = np.asarray(d["qpack"])
+        if qp.shape != qp_shape:
+            raise ValueError(f"qpack shape {qp.shape} != {qp_shape}")
+        # (the values are redundant — user packs are rebuilt from the
+        # saved state table + user_state below; the leaf stays in the
+        # checkpoint format for compatibility and shape validation)
         self._bw_vec[:] = bw
-        self._qpack[:] = qp
+        self._bw_lazy = None
         self._masked[:] = d["masked"]
         self._mask_count = int(np.count_nonzero(self._masked))
         self._stale[:] = d["stale"]
@@ -1856,7 +2358,8 @@ class Population:
         self._stuck_count[:] = d.get("stuck_count", 0)
         if self._last_raw is not None:
             self._last_raw[:] = d.get("last_raw", np.nan)
-        self._solutions = [None] * U
+        self._solutions = np.full(U, None, dtype=object)
+        self._any_solutions = False
         # rebuild the cohort-state table in saved order: every state keys
         # through the same scalar signature encoding, so probes against
         # the restored table return the snapshot-time ids
@@ -1865,6 +2368,9 @@ class Population:
         self._pinned = set()
         self._cfg_energy = {}
         self._fallback_plan = None
+        self._tighten_cache = {}
+        self._tighten_base = {}
+        self._stq_enc = np.empty((0, self._enc_w), dtype=np.int16)
         stq_all = _dec_int16(np.asarray(d["state_stq"]))
         mask_all = np.asarray(d["state_mask"], dtype=bool)
         parent = np.asarray(d["state_parent"], dtype=np.int64)
@@ -1887,7 +2393,23 @@ class Population:
                                         dtype=bool))[0]
         if len(relaxed):
             self._relax_states([int(s) for s in relaxed], prebuilt=True)
+        self._inc_single = self._recompute_inc_single()
         return self
+
+    def _recompute_inc_single(self) -> Optional[Tuple]:
+        """One O(U) scan re-deriving the uniform-incumbent flag (used on
+        checkpoint restore, where the recording history is gone): set iff
+        every user is solved with one identical (exit, placement)."""
+        if not bool(self._solved.all()):
+            return None
+        k = int(self._inc_exit[0])
+        if k < 0 or bool((self._inc_exit != k).any()):
+            return None
+        row0 = self._inc_place[0]
+        if bool((self._inc_place != row0[None]).any()):
+            return None
+        nb = self.profile.exits[k].block + 1
+        return (k, tuple(int(n) for n in row0[:nb]))
 
     def _eval_config_users(self, config: Config, bwv: np.ndarray
                            ) -> Tuple[float, np.ndarray, np.ndarray]:

@@ -78,6 +78,90 @@ def test_self_baseline_refused(tmp_path, monkeypatch):
     assert cr.main() == 2
 
 
+def _history_setup(tmp_path, monkeypatch, docs):
+    """Write {n: rows} as BENCH_PR<n>.json files and point
+    committed_baselines at them."""
+    files = []
+    for n, rows in sorted(docs.items()):
+        p = tmp_path / f"BENCH_PR{n}.json"
+        p.write_text(json.dumps(_doc(rows)))
+        files.append((n, p))
+    monkeypatch.setattr(cr, "committed_baselines", lambda: files)
+
+
+def test_history_trajectory_and_deltas(tmp_path, monkeypatch, capsys):
+    _history_setup(tmp_path, monkeypatch, {
+        2: [{"name": "a", "speedup": 2.0}],
+        3: [{"name": "a", "speedup": 3.0}],
+        4: [{"name": "a", "speedup": 1.5}],
+    })
+    assert cr.history("speedup") == 0
+    out = capsys.readouterr().out
+    assert "a · speedup" in out
+    assert "(+50.0%)" in out       # 2.0 -> 3.0
+    assert "(-50.0%)" in out       # 3.0 -> 1.5
+
+
+def test_history_missing_rows_print_gaps(tmp_path, monkeypatch, capsys):
+    _history_setup(tmp_path, monkeypatch, {
+        2: [{"name": "old_only", "speedup": 1.0}],
+        3: [{"name": "new_row", "speedup": 2.0}],
+        4: [{"name": "new_row", "speedup": 2.2},
+            {"name": "old_only", "speedup": 1.1}],
+    })
+    assert cr.history("speedup") == 0
+    out = capsys.readouterr().out
+    # the new row shows a gap for PR2, and the delta skips over the gap
+    assert "new_row · speedup" in out
+    assert "PR2   --" in out
+    assert "(+10.0%)" in out       # old_only 1.0 -> 1.1 across the PR3 gap
+
+
+def test_history_rows_filter_and_no_match(tmp_path, monkeypatch, capsys):
+    _history_setup(tmp_path, monkeypatch, {
+        2: [{"name": "channel_x", "speedup": 2.0},
+            {"name": "micro_y", "speedup": 5.0}],
+    })
+    assert cr.history("speedup", "channel_") == 0
+    out = capsys.readouterr().out
+    assert "channel_x" in out and "micro_y" not in out
+    assert cr.history("nope") == 2
+
+
+def test_history_damaged_document_warns_and_skips(tmp_path, monkeypatch,
+                                                  capsys):
+    files = []
+    good = tmp_path / "BENCH_PR2.json"
+    good.write_text(json.dumps(_doc([{"name": "a", "speedup": 1.0}])))
+    bad = tmp_path / "BENCH_PR3.json"
+    bad.write_text("{not json")
+    files = [(2, good), (3, bad)]
+    monkeypatch.setattr(cr, "committed_baselines", lambda: files)
+    assert cr.history("speedup") == 0
+    captured = capsys.readouterr()
+    assert "skipping BENCH_PR3.json" in captured.err
+    assert "a · speedup" in captured.out
+
+
+def test_history_cli_needs_no_fresh(tmp_path, monkeypatch):
+    _history_setup(tmp_path, monkeypatch, {
+        2: [{"name": "a", "speedup": 1.0}]})
+    monkeypatch.setattr(sys, "argv", ["check_regression", "--history"])
+    assert cr.main() == 0
+
+
+def test_invert_gates_smaller_is_better(tmp_path, monkeypatch):
+    base = [{"name": "a", "speedup": 40.0}]      # e.g. init seconds
+    # 40s -> 5s is a 8x improvement: passes a 5x floor, fails a 10x one
+    fresh = [{"name": "a", "speedup": 5.0}]
+    assert _run(tmp_path, monkeypatch, base, fresh,
+                "--invert", "--min-ratio", "5.0") == 0
+    assert _run(tmp_path, monkeypatch, base, fresh,
+                "--invert", "--min-ratio", "10.0") == 1
+    # without --invert the same numbers read as a crash
+    assert _run(tmp_path, monkeypatch, base, fresh) == 1
+
+
 def test_rows_filter(tmp_path, monkeypatch):
     base = [{"name": "channel_x", "speedup": 2.0},
             {"name": "micro_y", "speedup": 5.0}]

@@ -240,7 +240,10 @@ def test_state_key_matches_assign_states_encoding(scenario):
     pop.ingest(pop._bw_vec * np.linspace(0.4, 1.0, 4)[:, None])
     for u in range(pop.U):
         sid = int(pop._user_state[u])
-        key = pop._state_key(pop._qpack[u], pop._masked[u])
+        # a user's pack IS their state's stq (packs are not stored per
+        # user); the scalar key of (state stq, user mask) must probe back
+        # to the same state id
+        key = pop._state_key(pop._states[sid].stq, pop._masked[u])
         assert pop._state_ids[key] == sid
 
 

@@ -1,0 +1,267 @@
+"""Device-resident tick paths (PR 10): the fused ingest→quantize→signature
+kernel, the lazy bandwidth store, the SoA encoding primitives, the
+stale-subset rehash and the adaptive stream overlap — every new fast path
+asserted bit-exact against the engine it replaced.
+"""
+import numpy as np
+import pytest
+
+from repro.core import ChurnOrchestrator, Population, paper_profile, \
+    population_cohorts
+from repro.core.multiapp import PAPER_MULTIAPP_REQS
+from repro.core.population import _dec_int16, _enc_int16, _group_runs
+from repro.core.scenarios import paper_scenario
+from repro.kernels.ee_gate.population import (quant_signature,
+                                              quant_signature_jnp,
+                                              quant_signature_np)
+
+
+@pytest.fixture(scope="module")
+def network():
+    return paper_scenario(n_extra_edge=2)
+
+
+def _pop(network, app="h4", U=12, **kw):
+    return Population(network, paper_profile(app),
+                      PAPER_MULTIAPP_REQS[app], U, **kw)
+
+
+def _draw_vec(rng, U, N):
+    """Bandwidth rows exercising the kernel's edge cases: plain draws,
+    zero/negative entries (-> masked), and huge values."""
+    vec = rng.uniform(0.1, 2.0, (U, N)) * 1e9
+    vec[rng.random((U, N)) < 0.08] = 0.0
+    vec[rng.random((U, N)) < 0.04] = -1.0
+    vec[rng.random((U, N)) < 0.04] = 1e30
+    return vec
+
+
+# ---------------------------------------------------------------------------
+# fused ingest gate: jnp launch bit-exact vs the host-numpy oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("app", ["h1", "h4", "h6"])
+def test_quant_signature_jnp_matches_numpy_oracle(network, app):
+    pop = _pop(network, app, U=64)
+    c = pop._quant()
+    rng = np.random.default_rng(3)
+    vec = _draw_vec(rng, pop.U, pop.N)
+    enc_np = quant_signature_np(vec, c)
+    enc_j = quant_signature_jnp(vec, c)
+    assert enc_np.dtype == enc_j.dtype == np.int16
+    assert enc_np.tobytes() == enc_j.tobytes()
+
+
+def test_quant_signature_matches_population_requant(network):
+    """The fused kernel's rows are the exact bytes the state table keys
+    on: ingesting the same draws must produce per-user signatures equal to
+    the kernel's output on the raw rows."""
+    pop = _pop(network, "h4", U=16)
+    rng = np.random.default_rng(5)
+    vec = rng.uniform(0.1, 2.0, (pop.U, pop.N)) * 1e9
+    vec[rng.random((pop.U, pop.N)) < 0.08] = 0.0   # dead links stay valid
+    vec[:, pop.src] = np.inf
+    enc = quant_signature(vec, pop._quant(), backend="numpy")
+    pop.ingest(vec)
+    stored = pop._stq_enc[pop._user_state]
+    assert (stored == enc).all()
+
+
+def test_quant_signature_unknown_backend_raises(network):
+    pop = _pop(network, U=2)
+    with pytest.raises(ValueError, match="unknown quant_signature"):
+        quant_signature(np.ones((2, pop.N)), pop._quant(), backend="tpu")
+
+
+# ---------------------------------------------------------------------------
+# SoA encoding primitives
+# ---------------------------------------------------------------------------
+
+def test_enc_dec_int16_roundtrip_boundaries():
+    q = np.array([[0.0, 1.0, 32766.0, np.inf],
+                  [5.0, np.inf, 0.0, 2.0]])
+    e = _enc_int16(q)
+    assert e.dtype == np.int16
+    assert e[0, 3] == -1 and e[1, 1] == -1      # inf sentinel
+    assert e[0, 2] == 32766                     # int16 max - 1 survives
+    back = _dec_int16(e)
+    assert back.dtype == np.float64
+    assert np.array_equal(back, q)
+
+
+def test_enc_dec_int16_empty_and_shapes():
+    q = np.zeros((0, 7))
+    assert _dec_int16(_enc_int16(q)).shape == (0, 7)
+    q3 = np.full((2, 3, 4), np.inf)
+    assert np.array_equal(_dec_int16(_enc_int16(q3)), q3)
+
+
+def test_group_runs_edge_cases():
+    # empty
+    uniq, first, order, bounds = _group_runs(np.array([], dtype=np.int64))
+    assert len(uniq) == 0 and len(first) == 0
+    assert len(order) == 0 and list(bounds) == [0]
+    # single run
+    uniq, first, order, bounds = _group_runs(np.array([7, 7, 7, 7]))
+    assert len(first) == 1
+    assert sorted(order[bounds[0]:bounds[1]].tolist()) == [0, 1, 2, 3]
+    # all-distinct
+    keys = np.array([30, 10, 20])
+    uniq, first, order, bounds = _group_runs(keys)
+    assert len(first) == 3
+    seen = set()
+    for g in range(3):
+        members = order[bounds[g]:bounds[g + 1]]
+        assert len(members) == 1
+        assert keys[first[g]] == keys[members[0]]
+        seen.add(int(keys[members[0]]))
+    assert seen == {10, 20, 30}
+
+
+# ---------------------------------------------------------------------------
+# stale-subset rehash ≡ full rehash
+# ---------------------------------------------------------------------------
+
+def test_stale_subset_rehash_matches_full_rehash(network):
+    """Deferred requants flushed subset-by-subset must land every user in
+    a state with the same signature bytes (and the same solutions) as an
+    eager Population that requantized everyone on every tick."""
+    U = 24
+    eager = _pop(network, "h4", U=U)
+    lazy = _pop(network, "h4", U=U)
+    rng = np.random.default_rng(11)
+    for t in range(5):
+        vec = rng.uniform(0.2, 1.5, (U, lazy.N)) * 1e9
+        vec[:, lazy.src] = np.inf
+        eager.ingest(vec.copy())                  # full rehash now
+        lazy.ingest(vec.copy(), requant=False)    # stale rows only
+        # flush in two arbitrary waves — merging into the existing table
+        lazy._refresh_states(np.arange(0, U, 2))
+        lazy._refresh_states(np.arange(U))
+        assert not lazy._stale.any()
+        a = eager._stq_enc[eager._user_state]
+        b = lazy._stq_enc[lazy._user_state]
+        assert a.tobytes() == b.tobytes()
+        sa = eager.solve()
+        sb = lazy.solve()
+        for x, y in zip(sa, sb):
+            assert x.found == y.found
+            if x.found:
+                assert x.energy == y.energy
+                assert x.config.placement == y.config.placement
+
+
+# ---------------------------------------------------------------------------
+# lazy bandwidth store
+# ---------------------------------------------------------------------------
+
+def test_lazy_bw_store_accessors_match_dense(network):
+    pop = _pop(network, "h4", U=32)
+    rng = np.random.default_rng(13)
+    scale = rng.uniform(0.2, 2.0, pop.U) * 1e9
+    factors = rng.uniform(0.25, 1.0, (pop.U, pop.N))
+    pop.ingest_factors(scale, factors, requant=False)
+    assert pop._bw_lazy is not None
+    dense = scale[:, None] * factors
+    dense[:, pop.src] = np.inf
+    # row and column accessors agree with the eager product bit-for-bit
+    rows = pop._bw_rows(np.array([0, 5, 31]))
+    assert np.array_equal(rows, dense[[0, 5, 31]])
+    cols = pop._bw_cols()
+    for n in range(pop.N):
+        assert np.array_equal(cols[:, n], dense[:, n])
+    # materialization writes the identical dense store and clears the tag
+    assert np.array_equal(pop._bw_dense(), dense)
+    assert pop._bw_lazy is None
+    assert np.array_equal(pop._bw_vec, dense)
+
+
+def test_lazy_bw_store_checkpoint_materializes(network):
+    pop = _pop(network, "h4", U=8)
+    rng = np.random.default_rng(17)
+    scale = rng.uniform(0.2, 2.0, pop.U) * 1e9
+    factors = rng.uniform(0.25, 1.0, (pop.U, pop.N))
+    pop.ingest_factors(scale, factors, requant=False)
+    d = pop.state_dict()
+    dense = scale[:, None] * factors
+    dense[:, pop.src] = np.inf
+    assert np.array_equal(d["bw_vec"], dense)
+
+
+# ---------------------------------------------------------------------------
+# adaptive stream overlap
+# ---------------------------------------------------------------------------
+
+def _orch(users, **kw):
+    return ChurnOrchestrator(
+        population=population_cohorts(users, n_extra_edge=2),
+        hysteresis=0.05, **kw)
+
+
+def _tick_key(reports):
+    return [(r.energy, r.n_resolved, r.n_held, r.migration_bits,
+             r.n_migrations) for r in reports]
+
+
+def test_adaptive_overlap_reports_bit_identical():
+    """Every overlap policy (and the sync loop) makes identical
+    decisions — the policy only moves WHERE the relax runs."""
+    U, T = 600, 6
+    rng = np.random.default_rng(23)
+    draws = np.clip(rng.normal(1.0, 0.2, size=(T, U)), 0.3, 2.0)
+    sync = _orch(U)
+    ref = [sync.step_arrays(quality=q) for q in draws]
+    for policy in ("auto", "always", "never"):
+        ob = _orch(U, stream_overlap=policy)
+        reps = ob.run_arrays(draws)
+        assert _tick_key(reps) == _tick_key(ref), policy
+
+
+def test_adaptive_overlap_skips_thread_on_one_core(monkeypatch):
+    U = 400
+    rng = np.random.default_rng(29)
+    draws = np.clip(rng.normal(1.0, 0.2, size=(4, U)), 0.3, 2.0)
+    ob = _orch(U)
+    monkeypatch.setattr(ob, "_n_cores", 1)
+    ob.run_arrays(draws)
+    assert ob._overlap_used is False
+    # a single-core auto run never spins up the relax executor
+    assert all(p._relax_executor is None for p in ob.pops)
+
+
+def test_adaptive_overlap_rule(monkeypatch):
+    """The auto rule needs BOTH a second core and a non-negligible relax
+    EWMA; the explicit policies override it in either direction."""
+    ob = _orch(16)
+    monkeypatch.setattr(ob, "_n_cores", 8)
+    ob._overlap_relax_s = 0.0
+    assert ob._use_overlap() is False      # nothing to hide
+    ob._overlap_relax_s = 0.01
+    assert ob._use_overlap() is True
+    monkeypatch.setattr(ob, "_n_cores", 1)
+    assert ob._use_overlap() is False      # no core to hide it on
+    ob.stream_overlap = "always"
+    assert ob._use_overlap() is True
+    ob.stream_overlap = "never"
+    monkeypatch.setattr(ob, "_n_cores", 8)
+    assert ob._use_overlap() is False
+
+
+def test_adaptive_overlap_engages_with_cores_and_relax_load(monkeypatch):
+    U = 400
+    rng = np.random.default_rng(31)
+    # big per-tick swings: fresh quantization cells every tick keep the
+    # newborn relaxation (the thing overlap hides) alive
+    draws = rng.uniform(0.2, 3.0, size=(6, U))
+    ob = _orch(U, stream_overlap="auto")
+    monkeypatch.setattr(ob, "_n_cores", 8)
+    ob.run_arrays(draws)
+    assert ob._overlap_relax_s > 0
+    assert ob._overlap_used is True
+    # the in-flight relax actually ran on the background executor
+    assert any(p._relax_executor is not None for p in ob.pops)
+
+
+def test_stream_overlap_param_validated():
+    with pytest.raises(ValueError, match="stream_overlap"):
+        _orch(16, stream_overlap="sometimes")
